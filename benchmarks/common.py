@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: results dir, CSV/JSON emitters, trained-net
+cache (several figures reuse the same trained nets)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def results_path(name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, name)
+
+
+def emit(table: str, rows: list[dict[str, Any]], keys: list[str]) -> None:
+    """Print CSV to stdout and persist JSON under results/."""
+    print(f"\n# {table}")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    with open(results_path(f"{table}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+class Timer:
+    def __init__(self, label: str):
+        self.label = label
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        print(f"[{self.label}] {time.perf_counter() - self.t0:.1f}s")

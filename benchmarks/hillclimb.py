@@ -1,0 +1,71 @@
+"""§Perf hillclimb driver: measure the three chosen cells, baseline vs
+optimized variants, and emit the before/after table for EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb
+
+Variants (launch/dryrun.py):
+  sp   : sequence-parallel residual stream
+  moe  : MoE local-groups dispatch (layout-preserving split + vmap)
+  q8   : PQS int8 QTensor weights + serve-mode sharding (decode)
+Baseline rows lower the same cells with default flags. All cells include
+the always-on fixes (vocab-table sharding, pinned activation shardings,
+GQA-native attention) — the *original* pre-fix baselines are archived in
+results/dryrun_single.json from the first sweep.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.launch.dryrun import run_cell
+
+from benchmarks.common import results_path
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+CELLS = [
+    ("qwen2-vl-72b", "train_4k", None, "sp"),
+    ("granite-moe-3b-a800m", "prefill_32k", None, "sp+moe"),
+    ("qwen3-32b", "decode_32k", None, "q8"),
+]
+
+
+def terms(cell: dict) -> dict:
+    c = cell["collectives"]
+    d = cell.get("derived", {})
+    return {
+        "compute_s": d.get("flops_per_device", 0) / PEAK,
+        "memory_s": d.get("bytes_per_device", 0) / HBM,
+        "collective_s": c["total_link_bytes_per_device"] / LINK,
+        "peak_bytes": cell["memory"]["peak_bytes"],
+    }
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch, shape, base_v, opt_v in CELLS:
+        base = run_cell(arch, shape, False, variant=base_v)
+        opt = run_cell(arch, shape, False, variant=opt_v)
+        tb, to = terms(base), terms(opt)
+        rows.append({
+            "arch": arch, "shape": shape, "variant": opt_v,
+            "base": tb, "opt": to,
+            "collective_x": tb["collective_s"] / max(to["collective_s"], 1e-12),
+            "memory_x": tb["memory_s"] / max(to["memory_s"], 1e-12),
+        })
+    with open(results_path("hillclimb.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+    print("\n| cell | variant | term | baseline s | optimized s | x |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        for t in ("compute_s", "memory_s", "collective_s"):
+            x = r["base"][t] / max(r["opt"][t], 1e-12)
+            print(f"| {r['arch']} {r['shape']} | {r['variant']} | "
+                  f"{t[:-2]} | {r['base'][t]:.3e} | {r['opt'][t]:.3e} "
+                  f"| {x:.2f} |")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Kernel-level structural benchmark (no TPU: interpret mode wall-time is
+meaningless, so this reports the quantities that determine TPU speed).
+
+Per kernel configuration:
+  - VMEM working set per grid step (must be << 128 MiB on v5e)
+  - arithmetic intensity (flops per HBM byte) against the v5e ridge point
+    (197e12 / 819e9 ~= 241 flop/byte)
+  - HBM bytes per output element vs the dense int8 baseline (the N:M and
+    narrow-accumulator bandwidth story, DESIGN.md §2)
+  - bit-exactness spot check vs the ref.py oracle (fails loudly here, not
+    just in tests)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.pruning import nm_prune_mask
+from repro.kernels import ops, ref
+
+from benchmarks.common import emit
+
+RIDGE = 197e12 / 819e9
+
+
+def _sorted_rows():
+    rows = []
+    for bm, bn, bk in ((8, 128, 256), (8, 128, 512), (16, 128, 256)):
+        vmem = (bm * bk + bn * bk) * 1 + bm * bn * bk * 4 + bm * bn * 4
+        m = k = 1024
+        n = 512
+        flops = 2 * m * n * k  # products+adds (sort stages add ~log2^2(bk) VPU ops)
+        sort_ops = m * n * k * (np.log2(bk) ** 2)  # compare-exchange ops
+        hbm = m * k + n * k + m * n * 4  # int8 in, int32 out
+        rows.append({
+            "kernel": "sorted_matmul", "block": f"{bm}x{bn}x{bk}",
+            "vmem_kib": round(vmem / 1024, 1),
+            "flops_per_byte": round(flops / hbm, 1),
+            "vpu_sort_ops_per_mxu_flop": round(sort_ops / flops, 2),
+            "hbm_bytes_per_out": round(hbm / (m * n), 2),
+        })
+    return rows
+
+
+def _nm_rows():
+    rows = []
+    for n_keep, m_group in ((4, 16), (8, 16), (2, 16)):
+        m = k = 1024
+        n = 512
+        dense_hbm = m * k + n * k + m * n * 4
+        nm_hbm = m * k + 2 * n * (k // m_group) * n_keep + m * n * 4
+        rows.append({
+            "kernel": "nm_spmm", "block": f"{n_keep}:{m_group}",
+            "vmem_kib": round((128 * 32 * 16 + 128 * 32 * n_keep * 5
+                               + 128 * 128 * 4) / 1024, 1),
+            "flops_per_byte": round(2 * m * n * k / nm_hbm, 1),
+            "weight_bytes_vs_dense": round(
+                (2 * n * (k // m_group) * n_keep) / (n * k), 3),
+            "hbm_bytes_per_out": round(nm_hbm / (m * n), 2),
+        })
+    return rows
+
+
+def run() -> list[dict]:
+    # correctness spot checks (small shapes, interpret mode)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 127, (8, 128)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 127, (16, 128)), jnp.int8)
+    assert (np.asarray(ops.sorted_matmul(x, w, acc_bits=16, bm=4, bn=8, bk=64))
+            == np.asarray(ref.sorted_matmul_ref(x, w, 16, 1, 64))).all()
+    wd = rng.integers(-127, 127, (16, 128)).astype(np.int8)
+    mask = np.asarray(nm_prune_mask(jnp.asarray(wd, jnp.float32), 4, 16))
+    vals, idx = ops.compress_nm_weights((wd * mask).astype(np.int8), 4, 16)
+    assert (np.asarray(ops.nm_spmm(x, vals, idx, m_group=16, bm=8, bn=8, bg=4))
+            == np.asarray(ref.nm_spmm_ref(x, np.asarray(vals),
+                                          np.asarray(idx), 16))).all()
+    print("# kernel correctness spot-checks passed (interpret mode)")
+    print(f"# v5e ridge point: {RIDGE:.0f} flop/byte")
+
+    rows = _sorted_rows() + _nm_rows()
+    keys = sorted({k for r in rows for k in r}, key=lambda s: s != "kernel")
+    emit("kernel_structural", rows, keys)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,89 @@
+"""Paper Fig 5: accuracy vs accumulator bitwidth pareto — PQS vs A2Q vs clip.
+
+Sweeps the PQS design space (weight/act bits x sparsity), evaluates each
+trained model at descending accumulator widths under three regimes:
+
+  PQS (sort)  : N:M pruned + sorted dot product (paper blue)
+  PQS (clip)  : same model, transient overflows clipped (paper magenta)
+  A2Q         : accumulator-aware L1-constrained QAT baseline (guaranteed
+                overflow-free at its design width)
+
+For each regime reports the minimum accumulator width whose accuracy stays
+within 1% of the FP32 baseline. Reproduced claims: sorting buys ~2-4
+accumulator bits over clipping; PQS reaches narrower accumulators than A2Q
+at equal accuracy; frontier models are highly sparse.
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper import MLP2
+from repro.core.papernets import evaluate_fp32, evaluate_int, train_papernet
+from repro.core.pqs import PQSConfig
+from repro.data import synth_mnist
+
+from benchmarks.common import Timer, emit
+
+ACC_BITS = (11, 12, 13, 14, 15, 16, 18, 20)
+
+
+def _frontier(rows, regime, fp32_acc, tol=0.01):
+    ok = [r["acc_bits"] for r in rows
+          if r["regime"] == regime and r["acc"] >= fp32_acc - tol]
+    return min(ok) if ok else None
+
+
+def run(epochs: int = 12, n: int = 4096, eval_limit: int = 512) -> list[dict]:
+    data = synth_mnist(n=n, seed=3)
+    _, test = data.split(0.9)
+    rows = []
+    frontier_rows = []
+
+    for wb, ab, n_keep in ((8, 8, 3), (8, 8, 2), (5, 5, 3)):
+        tag = f"w{wb}a{ab}_keep{n_keep}"
+        pqs = PQSConfig(weight_bits=wb, act_bits=ab, n_keep=n_keep, m=16,
+                        order="pq")
+        with Timer(f"fig5/pqs/{tag}"):
+            res = train_papernet(MLP2, pqs, data, epochs=epochs,
+                                 prune_every=2, fp32_frac=0.7, lr=0.1)
+        fp32 = evaluate_fp32(res.layers, MLP2, pqs, test)
+        for bits in ACC_BITS:
+            for regime, policy in (("pqs_sort", "sorted"),
+                                   ("pqs_clip", "clip")):
+                rows.append({
+                    "model": tag, "regime": regime, "acc_bits": bits,
+                    "sparsity": round(pqs.sparsity, 3),
+                    "acc": round(evaluate_int(res.layers, MLP2, pqs, test,
+                                              policy, bits, eval_limit), 4),
+                })
+        # A2Q baseline at the same (wb, ab): trained per accumulator width
+        for bits in (12, 14, 16):
+            a2q_cfg = PQSConfig(weight_bits=wb, act_bits=ab, n_keep=16, m=16,
+                                order="pq")
+            with Timer(f"fig5/a2q/{tag}/p{bits}"):
+                a2q = train_papernet(MLP2, a2q_cfg, data, epochs=epochs,
+                                     prune_every=2, fp32_frac=0.7, lr=0.1,
+                                     a2q_acc_bits=bits)
+            rows.append({
+                "model": tag, "regime": "a2q", "acc_bits": bits,
+                "sparsity": None,
+                "acc": round(evaluate_int(a2q.layers, MLP2, a2q_cfg, test,
+                                          "clip", bits, eval_limit), 4),
+            })
+        model_rows = [r for r in rows if r["model"] == tag]
+        frontier_rows.append({
+            "model": tag, "fp32_acc": round(fp32, 4),
+            "min_bits_sort": _frontier(model_rows, "pqs_sort", fp32),
+            "min_bits_clip": _frontier(model_rows, "pqs_clip", fp32),
+            "min_bits_a2q": _frontier(model_rows, "a2q", fp32),
+        })
+
+    emit("fig5_pareto_points", rows,
+         ["model", "regime", "acc_bits", "sparsity", "acc"])
+    emit("fig5_pareto_frontier", frontier_rows,
+         ["model", "fp32_acc", "min_bits_sort", "min_bits_clip",
+          "min_bits_a2q"])
+    return frontier_rows
+
+
+if __name__ == "__main__":
+    run()

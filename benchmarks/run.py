@@ -1,0 +1,63 @@
+"""Benchmark driver: one experiment per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig2,tiled
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced epochs
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,fig3,fig4,fig5,tiled,kernels,roofline")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (
+        kernel_bench,
+        overflow_profile,
+        pareto_accum,
+        pq_vs_qp_lowrank,
+        pq_vs_qp_nets,
+        roofline,
+        tiled_sort,
+    )
+
+    epochs = 6 if args.quick else 12
+    suites = [
+        ("fig2", lambda: overflow_profile.run(epochs=epochs)),
+        ("fig3", lambda: pq_vs_qp_lowrank.run(epochs=max(epochs - 2, 6))),
+        ("fig4", lambda: pq_vs_qp_nets.run(epochs=max(epochs - 2, 6))),
+        ("fig5", lambda: pareto_accum.run(epochs=epochs)),
+        ("tiled", lambda: tiled_sort.run(epochs=max(epochs - 2, 6))),
+        ("kernels", kernel_bench.run),
+        ("roofline", roofline.run),
+    ]
+
+    t0 = time.time()
+    failures = []
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            fn()
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"\n[benchmarks] total {time.time() - t0:.0f}s; "
+          f"{len(failures)} failures: {failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Analysis-library session (paper §5.0.1): train a quantized net, then use
+the overflow library to answer the paper's Fig-2 questions interactively.
+
+  PYTHONPATH=src python examples/overflow_analysis.py
+"""
+
+from repro.configs.paper import MLP1
+from repro.core.papernets import (
+    evaluate_int,
+    overflow_profile,
+    train_papernet,
+)
+from repro.core.pqs import PQSConfig
+from repro.data import synth_mnist
+
+data = synth_mnist(n=3072, seed=0)
+pqs = PQSConfig(weight_bits=8, act_bits=8, n_keep=8, m=16, order="pq")
+print("training 1-layer MLP with P->Q (8/8-bit QAT, 8:16 pruning)...")
+res = train_papernet(MLP1, pqs, data, epochs=10, prune_every=2,
+                     fp32_frac=0.6, lr=0.1)
+_, test = data.split(0.9)
+print(f"fp32 accuracy: {res.fp32_acc:.3f}\n")
+print(f"{'bits':>5} {'persist':>8} {'transnt':>8} "
+      f"{'clip-all':>9} {'sort':>7} {'wide':>7}")
+for bits in (12, 13, 14, 15, 16, 18):
+    c = overflow_profile(res.layers, MLP1, pqs, test, bits, limit=256)
+    clip = evaluate_int(res.layers, MLP1, pqs, test, "clip", bits, 256)
+    srt = evaluate_int(res.layers, MLP1, pqs, test, "sorted", bits, 256)
+    wide = evaluate_int(res.layers, MLP1, pqs, test, "wide", 30, 256)
+    print(f"{bits:>5} {int(c.n_persistent):>8} {int(c.n_transient):>8} "
+          f"{clip:>9.3f} {srt:>7.3f} {wide:>7.3f}")
+print("\npaper Fig 2 story: transient overflows are the minority at narrow")
+print("widths, but resolving just them (sort column vs clip-all column)")
+print("recovers disproportionate accuracy — without adding bits.")

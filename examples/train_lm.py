@@ -1,0 +1,78 @@
+"""Training driver example: a reduced LM end-to-end with the production
+substrate — sharded init, AdamW+cosine, async checkpointing, supervised
+restart, resumable data iterator. (The paper's kind is inference, so the
+flagship end-to-end example is serve_quantized.py; this one exercises the
+training half of the framework. On a real pod, launch/train.py runs the
+full configs with the same code path.)
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 120]
+"""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step
+from repro.configs import get_config
+from repro.data import TokenStream
+from repro.models.model import build_model, param_count
+from repro.optim import adamw, cosine_schedule
+from repro.runtime import FailureInjector, TrainSupervisor
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+args = ap.parse_args()
+
+cfg = get_config("qwen2-1.5b", smoke=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt = adamw(lr=cosine_schedule(3e-3, args.steps, warmup_steps=20))
+opt_state = opt.init(params)
+print(f"model: {param_count(params):,} params; {args.steps} steps of "
+      f"batch {args.batch} x seq {args.seq}")
+
+data = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                   batch_size=args.batch)
+
+
+@jax.jit
+def step_fn(state, batch):
+    params, opt_state = state
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    params, opt_state = opt.update(grads, opt_state, params)
+    return (params, opt_state), {"loss": loss}
+
+
+losses = []
+
+
+def next_batch():
+    b = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+    return b
+
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    # inject a "node failure" mid-run: the supervisor restores and resumes
+    sup = TrainSupervisor(
+        ckpt_dir, step_fn, ckpt_every=25,
+        failure_injector=FailureInjector({args.steps // 2}),
+    )
+    state, step = sup.run((params, opt_state), next_batch, args.steps,
+                          data=data)
+    params, opt_state = state
+    print(f"finished at step {step} with {sup.restarts} restart(s); "
+          f"last checkpoint step {latest_step(ckpt_dir)}")
+
+# loss trend: evaluate on held-out stream
+eval_stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          batch_size=args.batch, seed=999)
+batch = {k: jnp.asarray(v) for k, v in eval_stream.next_batch().items()}
+final_loss = float(model.loss(params, batch))
+rand_loss = float(np.log(cfg.vocab_size))
+print(f"held-out loss {final_loss:.3f} vs random {rand_loss:.3f} "
+      f"-> learned structure: {final_loss < rand_loss - 0.2}")

@@ -1,0 +1,7 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    AsyncCheckpointer,
+    cleanup,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

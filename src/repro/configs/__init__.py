@@ -1,0 +1,44 @@
+"""Architecture config registry: ``--arch <id>`` resolves here."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    LONG_CONTEXT_ARCHS,
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeSpec,
+    SSMConfig,
+    cells_for,
+)
+
+# arch id -> module name
+_REGISTRY = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "whisper-medium": "whisper_medium",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "command-r-35b": "command_r_35b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen3-32b": "qwen3_32b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "mamba2-2.7b": "mamba2_2_7b",
+}
+# Paper-scale configs (the PQS paper's own MLP/CNN models) live in
+# repro.configs.paper — they are not LM archs and have their own schema.
+
+ARCH_IDS = list(_REGISTRY)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

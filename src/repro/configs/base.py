@@ -1,0 +1,146 @@
+"""Model / run configuration schema shared by every architecture.
+
+One ``ModelConfig`` per assigned architecture lives in
+``src/repro/configs/<arch_id>.py`` (exact published numbers), plus reduced
+"smoke" variants of the same family for CPU tests. ``ShapeSpec`` encodes the
+assigned input-shape cells (train_4k / prefill_32k / decode_32k / long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int  # per-expert FFN width
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # every `period` layers, layers at `offset` (mod period) are MoE
+    layer_period: int = 1
+    layer_offset: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256  # SSD chunk length
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // num_heads
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mrope_sections: Optional[tuple[int, ...]] = None  # qwen2-vl M-RoPE
+    sliding_window: Optional[int] = None  # local-attention window
+    global_period: Optional[int] = None  # gemma3: 1 global per N layers
+    attn_logit_softcap: Optional[float] = None
+    # structure
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    activation: str = "silu"  # silu (gated) | gelu (gated) | gelu_plain
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False  # gemma: x *= sqrt(d_model)
+    input_is_embeddings: bool = False  # vlm/audio stubs feed embeddings
+    # hybrid (jamba): attention layer at i % attn_period == attn_offset
+    attn_period: int = 1
+    attn_offset: int = 0
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # encoder-decoder
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    # max context the arch supports (for decode cache sanity checks)
+    max_seq_len: int = 131_072
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # sequence parallelism: shard the residual stream's seq axis on
+    # "model" between layers (norms/elementwise run sharded; TP boundary
+    # all-reduces become reduce-scatter + all-gather pairs). §Perf iter 4.
+    seq_parallel: bool = False
+    # MoE local-groups dispatch: fold a slice of the sequence into the
+    # group axis and shard groups over ALL mesh axes with expert weights
+    # replicated over "model" — dispatch/expert-FFN/combine become fully
+    # local (zero MoE collectives). Right call when experts are small
+    # (granite d_ff=512); EP stays better for big experts. §Perf iter 5.
+    moe_local_groups: bool = False
+    # remat / scan
+    remat: bool = True
+    scan_layers: bool = True
+    # scan unroll factor for layer loops; True = fully unroll. The roofline
+    # probe lowers with True because HLO cost analysis counts while-loop
+    # bodies exactly once (launch/dryrun.py).
+    scan_unroll: Any = 1
+    # attention chunking threshold (memory-efficient attention)
+    attn_chunk_q: int = 512
+    attn_chunk_threshold: int = 4096
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    def validate(self) -> None:
+        assert self.family in (
+            "dense", "moe", "ssm", "hybrid", "encdec", "vlm", "audio"
+        )
+        if self.num_heads:
+            assert self.num_heads % max(self.num_kv_heads, 1) == 0
+        if self.family in ("moe", "hybrid"):
+            assert self.moe is not None
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm is not None
+        if self.is_encoder_decoder:
+            assert self.encoder_layers > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned (arch x shape) cell."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# Archs allowed to run long_500k (sub-quadratic / bounded-KV): see DESIGN.md.
+LONG_CONTEXT_ARCHS = {"mamba2-2.7b", "jamba-v0.1-52b", "gemma3-12b"}
+
+
+def cells_for(arch_name: str) -> list[str]:
+    """The live shape cells for an arch (skips documented in DESIGN.md)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch_name in LONG_CONTEXT_ARCHS:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,31 @@
+"""The PQS paper's own evaluation models (§3.1, §4, §5).
+
+- 1-layer MLP (linear+ReLU) on an MNIST-class task — Fig 2 overflow census.
+- 2-layer MLP (784x784 hidden + 784x10 head) — Fig 3 P->Q vs Q->P.
+- Small conv net standing in for MobileNetV2/ResNet-18 scale — Fig 4/5.
+  (No CIFAR offline; see DESIGN.md §8 — trends, not absolute accuracies.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.pqs import PQSConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperNetConfig:
+    name: str
+    kind: str  # mlp1 | mlp2 | convnet
+    in_dim: int = 784
+    hidden: int = 784
+    num_classes: int = 10
+    # convnet only
+    channels: tuple[int, ...] = (16, 32)
+    img_hw: int = 14
+    pqs: PQSConfig = dataclasses.field(default_factory=PQSConfig)
+
+
+MLP1 = PaperNetConfig(name="mlp1-mnist", kind="mlp1")
+MLP2 = PaperNetConfig(name="mlp2-mnist", kind="mlp2")
+CONVNET = PaperNetConfig(name="convnet-cifar-scale", kind="convnet")

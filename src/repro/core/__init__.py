@@ -1,0 +1,3 @@
+"""PQS core: prune, quantize, and sort for low-bitwidth accumulation."""
+
+from repro.core.pqs import PQSConfig  # noqa: F401

@@ -1,0 +1,73 @@
+"""A2Q baseline: accumulator-aware quantization (Colbert et al., ICCV'23).
+
+The paper's primary comparison point (paper §3.1, Fig 5). A2Q guarantees
+overflow-free accumulation into a p-bit register by bounding each dot
+product's quantized weight L1 norm:
+
+    sum_i |w_i^q| = ||w^q||_1 <= B := (2^(p-1) - 1) / (2^(b-1))
+
+(worst case: every activation maximal, |x_i^q| = 2^(b-1)). A2Q uses
+per-output-channel weight quantization; we implement the projection form in
+the *integer* domain, which is the only domain where the bound is actually
+enforceable: with max-calibrated scales the FP constraint is the
+scale-invariant shape condition ||w||_1/||w||_inf <= B/qmax, so shrinking a
+row in FP32 changes nothing after requantization. Instead we quantize
+per-channel, then multiplicatively shrink and *truncate toward zero* the
+integer row — truncation guarantees the post-projection L1 never exceeds the
+bound. During QAT the projection runs inside a straight-through estimator,
+reproducing both A2Q's guarantee and its accuracy cost / induced
+unstructured sparsity (small integers truncate to zero) that PQS avoids.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qrange
+
+
+def a2q_l1_bound(weight_bits: int, acc_bits: int) -> float:
+    """Maximum allowed ||w^q||_1 for overflow-free p-bit accumulation."""
+    return (2 ** (acc_bits - 1) - 1) / (2 ** (weight_bits - 1))
+
+
+@partial(jax.jit, static_argnames=("weight_bits", "acc_bits"))
+def a2q_quantize_project(
+    w: jax.Array, weight_bits: int, acc_bits: int
+) -> tuple[jax.Array, jax.Array]:
+    """Per-channel quantize + L1 projection. w: (out, K).
+
+    Returns (wq, scale) with wq int32-carrier, scale (out,) f32, and every
+    row satisfying sum|wq| <= B exactly.
+    """
+    _, qmax = qrange(weight_bits)
+    bound = a2q_l1_bound(weight_bits, acc_bits)
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=-1, keepdims=True), 1e-8)
+    scale = amax / qmax  # per-channel symmetric scale
+    wq = jnp.clip(jnp.round(w / scale), -qmax, qmax)
+    l1 = jnp.sum(jnp.abs(wq), axis=-1, keepdims=True)
+    factor = jnp.minimum(1.0, bound / jnp.maximum(l1, 1.0))
+    # trunc toward zero => sum |trunc(wq * f)| <= f * sum |wq| <= bound
+    wq = jnp.trunc(wq * factor).astype(jnp.int32)
+    return wq, scale[..., 0]
+
+
+def a2q_fake_quant(w: jax.Array, weight_bits: int, acc_bits: int) -> jax.Array:
+    """QAT forward for A2Q weights: quantize+project+dequantize with STE."""
+    wq, scale = a2q_quantize_project(w, weight_bits, acc_bits)
+    w_star = wq.astype(jnp.float32) * scale[:, None]
+    return w + jax.lax.stop_gradient(w_star - w)
+
+
+def a2q_violations(wq: jax.Array, weight_bits: int, acc_bits: int) -> jax.Array:
+    """Number of rows violating the bound (0 after projection, by design)."""
+    l1 = jnp.sum(jnp.abs(wq.astype(jnp.int32)), axis=-1)
+    return jnp.sum(l1 > a2q_l1_bound(weight_bits, acc_bits))
+
+
+def a2q_sparsity(wq: jax.Array) -> jax.Array:
+    """Fraction of zero integers — A2Q's induced unstructured sparsity."""
+    return jnp.mean((wq == 0).astype(jnp.float32))

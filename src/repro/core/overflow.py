@@ -1,0 +1,192 @@
+"""Overflow-analysis library (paper §3.1, §5.0.1).
+
+The paper extends PyTorch with custom layers that fully unroll quantized dot
+products so persistent/transient overflows can be counted and different
+accumulator policies compared. This module is the JAX equivalent: it exposes
+every dot product in a quantized matmul as an explicit partial-products
+tensor and provides
+
+- a **census** of overflows: persistent (final result exceeds the p-bit
+  range) vs transient (an intermediate partial sum exceeds it although the
+  final result fits), under a given accumulation order;
+- narrow-accumulator **simulation** under the policies
+  ``wide | clip | wrap | sorted | sorted_tiled`` — the object the Fig-2/5
+  benchmarks and kernels/ref.py share.
+
+Everything is int32-carrier exact (see sorted_accum.monotone_accumulate).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qrange
+from repro.core.sorted_accum import (
+    monotone_accumulate,
+    sorted_order,
+    tiled_seq_order,
+    tiled_sorted_order,
+)
+
+Policy = str  # wide | clip | wrap | sorted | sorted_tiled | sorted_tiled_seq
+
+
+class Census(NamedTuple):
+    """Overflow counts over a batch of dot products."""
+
+    n_dots: jax.Array  # total dot products examined
+    n_persistent: jax.Array  # final result out of range
+    n_transient: jax.Array  # intermediate out of range, final in range
+    n_any: jax.Array  # dots with any overflow event
+
+
+def partial_products(wq: jax.Array, xq: jax.Array) -> jax.Array:
+    """Explicit partial products of a quantized matmul.
+
+    wq: (out, K) int, xq: (batch, K) int -> (batch, out, K) int32. This is
+    the fully-unrolled view the paper's library exposes; memory is
+    batch*out*K*4 bytes, so callers chunk the batch for large layers.
+    """
+    return wq.astype(jnp.int32)[None, :, :] * xq.astype(jnp.int32)[:, None, :]
+
+
+@partial(jax.jit, static_argnames=("acc_bits",))
+def census(prods: jax.Array, acc_bits: int) -> Census:
+    """Classify overflows for natural-order accumulation (paper Fig 2a).
+
+    prods: (..., K) int32 partial products. Natural order is index order —
+    what a conventional inner-product loop would do.
+    """
+    qmin, qmax = qrange(acc_bits)
+    run = jnp.cumsum(prods, axis=-1)
+    out_of_range = jnp.logical_or(run > qmax, run < qmin)
+    any_ovf = jnp.any(out_of_range, axis=-1)
+    final = run[..., -1]
+    persistent = jnp.logical_or(final > qmax, final < qmin)
+    transient = jnp.logical_and(any_ovf, jnp.logical_not(persistent))
+    n = jnp.prod(jnp.asarray(prods.shape[:-1]))
+    return Census(
+        n_dots=n,
+        n_persistent=jnp.sum(persistent),
+        n_transient=jnp.sum(transient),
+        n_any=jnp.sum(any_ovf),
+    )
+
+
+@partial(jax.jit, static_argnames=("acc_bits", "policy", "k_tile", "rounds"))
+def accumulate(
+    prods: jax.Array,
+    acc_bits: int,
+    policy: Policy = "clip",
+    k_tile: int = 256,
+    rounds: int = 2,
+) -> jax.Array:
+    """Accumulate partial products under a narrow-accumulator policy.
+
+    Returns the accumulated value (int32), reproducing what the target
+    hardware would compute:
+      wide         — exact sum (reference; accumulator wide enough)
+      clip         — saturation arithmetic at every add (natural order)
+      wrap         — two's-complement wraparound at p bits (natural order)
+      sorted       — single-round sorted order (PQS), then saturating adds
+      sorted_tiled — per-k_tile single-round sort (paper §6 / TPU kernels)
+    """
+    if policy == "wide":
+        return jnp.sum(prods, axis=-1)
+    if policy == "clip":
+        acc, _ = monotone_accumulate(prods, acc_bits, saturate=True)
+        return acc
+    if policy == "wrap":
+        acc, _ = monotone_accumulate(prods, acc_bits, saturate=False)
+        return acc
+    if policy == "sorted":
+        ordered = sorted_order(prods, rounds)
+        acc, _ = monotone_accumulate(ordered, acc_bits, saturate=True)
+        return acc
+    if policy == "sorted_tiled":
+        ordered = tiled_sorted_order(prods, k_tile, rounds)
+        acc, _ = monotone_accumulate(ordered, acc_bits, saturate=True)
+        return acc
+    if policy == "sorted_tiled_seq":
+        ordered = tiled_seq_order(prods, k_tile, rounds)
+        acc, _ = monotone_accumulate(ordered, acc_bits, saturate=True)
+        return acc
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+@partial(jax.jit, static_argnames=("acc_bits", "policy", "k_tile", "rounds"))
+def transient_survivors(
+    prods: jax.Array,
+    acc_bits: int,
+    policy: Policy = "sorted",
+    k_tile: int = 256,
+    rounds: int = 2,
+) -> jax.Array:
+    """Count dot products whose *transient* overflow a policy fails to fix.
+
+    A dot product is a transient case if its exact result fits p bits but
+    natural-order accumulation overflows. Under the given policy's order we
+    re-check whether any intermediate still leaves the range. Used for the
+    99.8 % / 99 % single-round and tiled-sort claims (paper §3.2, §6).
+    """
+    qmin, qmax = qrange(acc_bits)
+    final = jnp.sum(prods, axis=-1)
+    fits = jnp.logical_and(final <= qmax, final >= qmin)
+    if policy == "sorted":
+        ordered = sorted_order(prods, rounds)
+    elif policy == "sorted_tiled":
+        ordered = tiled_sorted_order(prods, k_tile, rounds)
+    elif policy == "sorted_tiled_seq":
+        ordered = tiled_seq_order(prods, k_tile, rounds)
+    elif policy == "natural":
+        ordered = prods
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    run = jnp.cumsum(ordered, axis=-1)
+    ovf = jnp.any(jnp.logical_or(run > qmax, run < qmin), axis=-1)
+    return jnp.sum(jnp.logical_and(fits, ovf))
+
+
+def quantized_matmul_sim(
+    wq: jax.Array,
+    xq: jax.Array,
+    acc_bits: int,
+    policy: Policy = "clip",
+    k_tile: int = 256,
+    batch_chunk: int | None = None,
+    rounds: int = 2,
+) -> jax.Array:
+    """Full quantized matmul with simulated narrow accumulation.
+
+    wq: (out, K), xq: (batch, K) -> (batch, out) int32, each output element
+    accumulated under ``policy``. Chunks the batch to bound the
+    (batch, out, K) partial-products tensor.
+    """
+    if batch_chunk is None or xq.shape[0] <= batch_chunk:
+        prods = partial_products(wq, xq)
+        return accumulate(prods, acc_bits, policy, k_tile, rounds)
+    outs = []
+    for i in range(0, xq.shape[0], batch_chunk):
+        prods = partial_products(wq, xq[i : i + batch_chunk])
+        outs.append(accumulate(prods, acc_bits, policy, k_tile, rounds))
+    return jnp.concatenate(outs, axis=0)
+
+
+def matmul_census(
+    wq: jax.Array,
+    xq: jax.Array,
+    acc_bits: int,
+    batch_chunk: int = 128,
+) -> Census:
+    """Census over every dot product of a quantized matmul (Fig 2a data)."""
+    tot = dict(n_dots=0, n_persistent=0, n_transient=0, n_any=0)
+    for i in range(0, xq.shape[0], batch_chunk):
+        prods = partial_products(wq, xq[i : i + batch_chunk])
+        c = census(prods, acc_bits)
+        for k in tot:
+            tot[k] += int(getattr(c, k))
+    return Census(**{k: jnp.asarray(v) for k, v in tot.items()})

@@ -1,0 +1,301 @@
+"""The paper's own evaluation networks + P->Q / Q->P training harness.
+
+Models (configs/paper.py):
+  mlp1    : Linear(784 -> 10)                      — Fig 2 overflow census
+  mlp2    : 784x784 hidden + 784x10 head           — Fig 3 low-rank study
+  convnet : 2 stride-2 3x3 conv layers (as im2col + QuantLinear) + head
+            — the CIFAR-scale stand-in for Fig 4/5 trends
+
+All layers are ``core.pqs.QuantLinear`` instances, so the trained nets
+drop straight into the overflow library and the narrow-accumulator
+evaluation paths. Training is plain SGD+momentum on softmax CE with the
+paper's epoch-indexed prune/quantize schedules (core.pqs.build_schedule).
+
+Offline container note: datasets are the synthetic stand-ins from
+repro.data; trends (clip-vs-sort, P->Q-vs-Q->P, pareto shape) are the
+reproduced claims, not absolute MNIST/CIFAR numbers (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper import PaperNetConfig
+from repro.core import overflow
+from repro.core.a2q import a2q_fake_quant
+from repro.core.pqs import (
+    Phase,
+    PQSConfig,
+    apply_prune_phase,
+    build_schedule,
+    quant_linear_census,
+    quant_linear_freeze,
+    quant_linear_init,
+    quant_linear_int_fwd,
+    quant_linear_train_fwd,
+)
+from repro.core.pruning import low_rank_approx
+from repro.data.pipeline import ClassificationDataset
+
+
+# ---------------------------------------------------------------------------
+# model definitions (lists of QuantLinear layers + structure fns)
+# ---------------------------------------------------------------------------
+
+
+def _img_patches(x: jax.Array, hw: int, cin: int, stride: int = 2):
+    """im2col: (B, hw*hw*cin) -> (B, oh*ow, 3*3*cin) patches."""
+    b = x.shape[0]
+    img = x.reshape(b, hw, hw, cin)
+    patches = jax.lax.conv_general_dilated_patches(
+        jnp.moveaxis(img, -1, 1), (3, 3), (stride, stride), "SAME"
+    )  # (B, cin*9, oh, ow)
+    _, f, oh, ow = patches.shape
+    return jnp.moveaxis(patches, 1, -1).reshape(b, oh * ow, f), oh, ow
+
+
+def init_papernet(key, cfg: PaperNetConfig) -> list[dict[str, Any]]:
+    ks = jax.random.split(key, 4)
+    if cfg.kind == "mlp1":
+        return [quant_linear_init(ks[0], cfg.in_dim, cfg.num_classes)]
+    if cfg.kind == "mlp2":
+        return [
+            quant_linear_init(ks[0], cfg.in_dim, cfg.hidden),
+            quant_linear_init(ks[1], cfg.hidden, cfg.num_classes),
+        ]
+    if cfg.kind == "convnet":
+        c1, c2 = cfg.channels
+        cin = cfg.in_dim // (cfg.img_hw * cfg.img_hw)
+        oh1 = (cfg.img_hw + 1) // 2  # stride-2 SAME conv output size
+        oh2 = (oh1 + 1) // 2
+        return [
+            quant_linear_init(ks[0], 9 * cin, c1),  # conv1 as im2col matmul
+            quant_linear_init(ks[1], 9 * c1, c2),  # conv2
+            quant_linear_init(ks[2], oh2 * oh2 * c2, cfg.num_classes),
+        ]
+    raise ValueError(cfg.kind)
+
+
+# which layers are pruned/quantized: paper §5.0.2 skips the first conv and
+# the final classifier head of CNNs; MLPs prune their hidden layer only.
+def pqs_layer_mask(cfg: PaperNetConfig) -> list[bool]:
+    if cfg.kind == "mlp1":
+        return [True]
+    if cfg.kind == "mlp2":
+        return [True, False]
+    return [False, True, False]
+
+
+def papernet_fwd(
+    layers: list[dict],
+    x: jax.Array,
+    cfg: PaperNetConfig,
+    pqs: PQSConfig,
+    quantizing: bool,
+    int_path: bool = False,
+    frozen: Optional[list] = None,
+    policy: Optional[str] = None,
+    acc_bits: Optional[int] = None,
+) -> tuple[jax.Array, list[dict]]:
+    """Forward through the net. Training path updates act ranges; int path
+    consumes frozen layers under (policy, acc_bits)."""
+
+    def layer(i, h):
+        nonlocal layers
+        if int_path:
+            c = dataclasses.replace(
+                pqs,
+                policy=policy or pqs.policy,
+                acc_bits=acc_bits or pqs.acc_bits,
+            )
+            return quant_linear_int_fwd(frozen[i], h, c)
+        out, new_p = quant_linear_train_fwd(layers[i], h, pqs, quantizing)
+        layers = layers[:i] + [new_p] + layers[i + 1:]
+        return out
+
+    if cfg.kind in ("mlp1", "mlp2"):
+        h = x
+        for i in range(len(layers)):
+            h = layer(i, h)
+            if i < len(layers) - 1:
+                h = jax.nn.relu(h)
+        return h, layers
+
+    # convnet: conv-as-im2col stride 2 twice, then flatten + head
+    cin = cfg.in_dim // (cfg.img_hw * cfg.img_hw)
+    p1, oh, ow = _img_patches(x, cfg.img_hw, cin)
+    h = jax.nn.relu(layer(0, p1))  # (B, oh*ow, c1)
+    h2, oh2, ow2 = _img_patches(
+        h.reshape(h.shape[0], -1), oh, cfg.channels[0]
+    )
+    h = jax.nn.relu(layer(1, h2))  # (B, oh2*ow2, c2)
+    h = h.reshape(h.shape[0], -1)
+    return layer(2, h), layers
+
+
+def ce_loss(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+
+
+# ---------------------------------------------------------------------------
+# training harness
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainResult:
+    layers: list[dict]
+    fp32_acc: float
+    history: list[tuple[int, float]]
+
+
+def train_papernet(
+    cfg: PaperNetConfig,
+    pqs: PQSConfig,
+    data: ClassificationDataset,
+    epochs: int = 30,
+    batch: int = 128,
+    lr: float = 0.05,
+    momentum: float = 0.9,
+    prune_every: int = 5,
+    fp32_frac: float = 0.7,
+    low_rank: Optional[int] = None,
+    a2q_acc_bits: Optional[int] = None,
+    prune_kind: str = "nm",  # "nm" | "filter" (Fig 4 magenta baseline)
+    seed: int = 0,
+) -> TrainResult:
+    """Run a full P->Q or Q->P schedule (pqs.order) on a paper net.
+
+    low_rank: apply a rank-k approximation at each prune event (Fig 3).
+    a2q_acc_bits: replace PQS with the A2Q weight constraint (baseline).
+    prune_kind: N:M (paper) or whole-filter structured pruning baseline.
+    """
+    train, test = data.split(0.9)
+    key = jax.random.PRNGKey(seed)
+    layers = init_papernet(key, cfg)
+    mask = pqs_layer_mask(cfg)
+    vel = [jax.tree_util.tree_map(
+        lambda a: jnp.zeros_like(a) if a.dtype == jnp.float32 else None,
+        {"w": l["w"], "b": l["b"]}) for l in layers]
+    schedule = build_schedule(pqs, epochs, prune_every, fp32_frac)
+
+    @partial(jax.jit, static_argnames=("quantizing",))
+    def step(layers, vel, xb, yb, quantizing):
+        def loss_fn(ls):
+            logits, new_ls = papernet_fwd(ls, xb, cfg, pqs, quantizing)
+            if a2q_acc_bits is not None:
+                # A2Q regime: constrain weights instead of pruning
+                new_ls = [
+                    dict(l, w=a2q_fake_quant(l["w"], pqs.weight_bits,
+                                             a2q_acc_bits))
+                    for l in new_ls
+                ]
+            return ce_loss(logits, yb), new_ls
+
+        (loss, new_layers), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(layers)
+        out_l, out_v = [], []
+        for l, nl, g, v in zip(layers, new_layers, grads, vel):
+            nv = {k: momentum * v[k] + g[k] for k in ("w", "b")}
+            upd = dict(nl)
+            upd["w"] = nl["w"] - lr * nv["w"]
+            upd["b"] = nl["b"] - lr * nv["b"]
+            out_l.append(upd)
+            out_v.append(nv)
+        return out_l, out_v, loss
+
+    history = []
+    for ph in schedule:
+        # prune/low-rank events
+        if ph.n_keep is not None:
+            new_layers = []
+            for i, l in enumerate(layers):
+                if not mask[i]:
+                    new_layers.append(l)
+                    continue
+                if low_rank is not None:
+                    l = dict(l, w=low_rank_approx(l["w"], low_rank))
+                if prune_kind == "filter":
+                    from repro.core.pruning import filter_prune_mask
+
+                    keep_frac = ph.n_keep / pqs.m
+                    l = dict(l, mask=filter_prune_mask(l["w"], keep_frac))
+                    new_layers.append(l)
+                else:
+                    new_layers.append(
+                        apply_prune_phase(
+                            l, ph, pqs, quantized_signal=(pqs.order == "qp")
+                        )
+                    )
+            layers = new_layers
+        for xb, yb in train.batches(batch, seed=seed * 997 + ph.epoch):
+            layers, vel, loss = step(
+                layers, vel, jnp.asarray(xb), jnp.asarray(yb),
+                quantizing=ph.quantizing,
+            )
+        history.append((ph.epoch, float(loss)))
+
+    acc = evaluate_fp32(layers, cfg, pqs, test)
+    return TrainResult(layers, acc, history)
+
+
+def evaluate_fp32(layers, cfg, pqs: PQSConfig,
+                  data: ClassificationDataset) -> float:
+    logits, _ = papernet_fwd(layers, jnp.asarray(data.x), cfg, pqs,
+                             quantizing=False)
+    return float((jnp.argmax(logits, -1) == jnp.asarray(data.y)).mean())
+
+
+def freeze_net(layers, cfg, pqs: PQSConfig) -> list[dict]:
+    mask = pqs_layer_mask(cfg)
+    out = []
+    for i, l in enumerate(layers):
+        out.append(quant_linear_freeze(l, pqs if mask[i] else
+                                       dataclasses.replace(pqs, n_keep=pqs.m)))
+    return out
+
+
+def evaluate_int(
+    layers, cfg, pqs: PQSConfig, data: ClassificationDataset,
+    policy: str, acc_bits: int, limit: int = 1024,
+) -> float:
+    """Accuracy with true integer matmuls under a narrow-accum policy."""
+    frozen = freeze_net(layers, cfg, pqs)
+    x = jnp.asarray(data.x[:limit])
+    y = np.asarray(data.y[:limit])
+    logits, _ = papernet_fwd(
+        layers, x, cfg, pqs, quantizing=False, int_path=True,
+        frozen=frozen, policy=policy, acc_bits=acc_bits,
+    )
+    return float((np.argmax(np.asarray(logits), -1) == y).mean())
+
+
+def overflow_profile(
+    layers, cfg, pqs: PQSConfig, data: ClassificationDataset,
+    acc_bits: int, limit: int = 512,
+) -> overflow.Census:
+    """Aggregate persistent/transient census over all PQS layers (Fig 2a)."""
+    frozen = freeze_net(layers, cfg, pqs)
+    mask = pqs_layer_mask(cfg)
+    tot = dict(n_dots=0, n_persistent=0, n_transient=0, n_any=0)
+    x = jnp.asarray(data.x[:limit])
+    h = x
+    for i in range(len(layers)):
+        if cfg.kind in ("mlp1", "mlp2"):
+            if mask[i]:
+                c = quant_linear_census(frozen[i], h, dataclasses.replace(
+                    pqs, acc_bits=acc_bits))
+                for k in tot:
+                    tot[k] += int(getattr(c, k))
+            h_out, _ = papernet_fwd(
+                layers[: i + 1], x, cfg, pqs, quantizing=False
+            )
+            h = jax.nn.relu(h_out) if i < len(layers) - 1 else h_out
+    return overflow.Census(**{k: jnp.asarray(v) for k, v in tot.items()})

@@ -1,0 +1,247 @@
+"""PQS orchestration: config, quantized layers, and P->Q / Q->P schedules.
+
+This is the paper's contribution packaged as a composable JAX module:
+
+- ``PQSConfig`` — the knobs of the design space swept in paper §5.2
+  (weight/activation/accumulator bitwidths, N:M sparsity, accumulation
+  policy, K-tile for tiled sorting).
+- ``QuantLinear`` — a functional linear layer with three execution paths:
+  * ``train``  : FP32 matmul with N:M mask + QAT fake-quant (STE),
+  * ``int``    : true integer dot products with simulated narrow
+                 accumulation (the overflow library / kernels semantics),
+  * ``analyze``: integer path that additionally returns the overflow census.
+- Schedule builders for P->Q (FP32 prune epochs, then QAT) and Q->P (QAT
+  throughout, prune quantized weights) — paper §4/§5.1.
+
+The layer is deliberately framework-free (params and state are plain dicts)
+so the same code runs inside the MLP/CNN paper benchmarks and inside the LM
+model zoo's quantized projections.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import overflow
+from repro.core.pruning import iterative_nm_schedule, nm_prune_mask
+from repro.core.quant import (
+    EmaRange,
+    QParams,
+    activation_qparams,
+    fake_quant,
+    quantize,
+    weight_qparams,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PQSConfig:
+    """Design-space point for PQS (paper §5.2 sweeps all of these)."""
+
+    weight_bits: int = 8
+    act_bits: int = 8
+    acc_bits: int = 16
+    n_keep: int = 8  # keep n_keep of every m (sparsity = 1 - n_keep/m)
+    m: int = 16
+    policy: overflow.Policy = "sorted_tiled"  # inference accumulation policy
+    k_tile: int = 256
+    # training schedule: "pq" = prune-then-quantize (paper's winner),
+    # "qp" = quantize-then-prune baseline.
+    order: str = "pq"
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.n_keep / self.m
+
+    def validate(self) -> None:
+        assert 2 <= self.weight_bits <= 8 and 2 <= self.act_bits <= 8
+        assert 8 <= self.acc_bits <= 30
+        assert 0 < self.n_keep <= self.m
+        assert self.policy in (
+            "wide", "clip", "wrap", "sorted", "sorted_tiled",
+            "sorted_tiled_seq",
+        )
+        assert self.order in ("pq", "qp")
+
+
+# ---------------------------------------------------------------------------
+# QuantLinear — functional quantized linear layer
+# ---------------------------------------------------------------------------
+
+
+def quant_linear_init(
+    key: jax.Array, in_dim: int, out_dim: int, dtype=jnp.float32
+) -> dict[str, Any]:
+    """He-initialized params + PQS state for one linear layer."""
+    wkey, _ = jax.random.split(key)
+    w = jax.random.normal(wkey, (out_dim, in_dim), dtype) * jnp.sqrt(
+        2.0 / in_dim
+    )
+    return {
+        "w": w,
+        "b": jnp.zeros((out_dim,), dtype),
+        "mask": jnp.ones((out_dim, in_dim), dtype),
+        "act_range": EmaRange.init(),
+    }
+
+
+def quant_linear_train_fwd(
+    params: dict[str, Any],
+    x: jax.Array,
+    cfg: PQSConfig,
+    quantizing: bool,
+) -> tuple[jax.Array, dict[str, Any]]:
+    """Training forward: masked weights, optional fake-quant (QAT phase).
+
+    Returns (output, new_params) — new_params carries the updated activation
+    range observer. During the FP32 pruning phase (quantizing=False) this is
+    a plain masked linear; during QAT both weights and activations pass
+    through STE fake-quant, so gradients see quantization error.
+    """
+    w = params["w"] * params["mask"]
+    rng: EmaRange = params["act_range"]
+    rng = rng.update(x)
+    if quantizing:
+        w_qp = weight_qparams(w, cfg.weight_bits)
+        w = fake_quant(w, w_qp)
+        x_qp = activation_qparams(rng.lo, rng.hi, cfg.act_bits)
+        x = fake_quant(x, x_qp)
+    y = x @ w.T + params["b"]
+    new_params = dict(params)
+    new_params["act_range"] = rng
+    return y, new_params
+
+
+def quant_linear_freeze(params: dict[str, Any], cfg: PQSConfig) -> dict[str, Any]:
+    """Convert trained FP32 params to the deployable integer form.
+
+    Returns {wq, w_qp, x_qp, bq} where wq is the int32-carrier N:M-masked
+    quantized weight matrix and bq the bias folded into the accumulator
+    scale (bias is accumulated in the wide domain, standard practice — the
+    paper's narrow accumulation concerns the dot product itself, Eq. 4).
+    """
+    w = params["w"] * params["mask"]
+    w_qp = weight_qparams(w, cfg.weight_bits)
+    wq = quantize(w, w_qp)
+    rng: EmaRange = params["act_range"]
+    x_qp = activation_qparams(rng.lo, rng.hi, cfg.act_bits)
+    return {"wq": wq, "w_qp": w_qp, "x_qp": x_qp, "b": params["b"]}
+
+
+def quant_linear_int_fwd(
+    frozen: dict[str, Any],
+    x: jax.Array,
+    cfg: PQSConfig,
+    batch_chunk: int | None = 128,
+) -> jax.Array:
+    """Integer inference with simulated narrow accumulation (Eq. 3/4).
+
+    x is FP32; it is quantized with the calibrated activation params, the
+    integer dot product is accumulated under cfg.policy at cfg.acc_bits,
+    the activation-offset correction (a weight-only constant) is applied in
+    the wide domain, and the result is dequantized back to FP32.
+    """
+    wq, w_qp, x_qp = frozen["wq"], frozen["w_qp"], frozen["x_qp"]
+    xq = quantize(x, x_qp)
+    lead = x.shape[:-1]
+    xq2 = xq.reshape(-1, xq.shape[-1])
+    z = overflow.quantized_matmul_sim(
+        wq, xq2, cfg.acc_bits, cfg.policy, cfg.k_tile, batch_chunk
+    )
+    # offset correction: o_x * sum_i w_i^q per output neuron (wide domain)
+    corr = x_qp.offset.astype(jnp.int32) * jnp.sum(wq, axis=-1)
+    z = z - corr[None, :]
+    zf = z.astype(jnp.float32) * (w_qp.scale * x_qp.scale)
+    zf = zf + frozen["b"][None, :]
+    return zf.reshape(*lead, -1)
+
+
+def quant_linear_census(
+    frozen: dict[str, Any], x: jax.Array, cfg: PQSConfig
+) -> overflow.Census:
+    """Overflow census for this layer on a batch (analysis path)."""
+    xq = quantize(x, frozen["x_qp"]).reshape(-1, x.shape[-1])
+    return overflow.matmul_census(frozen["wq"], xq, cfg.acc_bits)
+
+
+# ---------------------------------------------------------------------------
+# Training schedules (paper §4, §5.0.2, §5.1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One epoch's directives for the schedule driver."""
+
+    epoch: int
+    quantizing: bool  # QAT fake-quant active this epoch?
+    n_keep: Optional[int]  # if set, re-prune to keep n_keep of every m
+
+
+def pq_schedule(
+    cfg: PQSConfig, total_epochs: int, prune_every: int, fp32_epochs: int
+) -> list[Phase]:
+    """P->Q: FP32 training with iterative pruning, then QAT on survivors.
+
+    Mirrors paper §5.1: e.g. 180 FP32 epochs (pruning every 10) + 20 QAT.
+    """
+    prunes = dict(
+        iterative_nm_schedule(
+            max(fp32_epochs - 1, 1), prune_every, cfg.m, cfg.sparsity
+        )
+    )
+    return [
+        Phase(e, quantizing=(e >= fp32_epochs), n_keep=prunes.get(e))
+        for e in range(total_epochs)
+    ]
+
+
+def qp_schedule(
+    cfg: PQSConfig, total_epochs: int, prune_every: int
+) -> list[Phase]:
+    """Q->P: QAT for all epochs; prune the (fake-)quantized weights."""
+    prunes = dict(
+        iterative_nm_schedule(total_epochs, prune_every, cfg.m, cfg.sparsity)
+    )
+    return [
+        Phase(e, quantizing=True, n_keep=prunes.get(e))
+        for e in range(total_epochs)
+    ]
+
+
+def build_schedule(
+    cfg: PQSConfig,
+    total_epochs: int,
+    prune_every: int = 10,
+    fp32_frac: float = 0.9,
+) -> list[Phase]:
+    cfg.validate()
+    if cfg.order == "pq":
+        return pq_schedule(
+            cfg, total_epochs, prune_every, int(total_epochs * fp32_frac)
+        )
+    return qp_schedule(cfg, total_epochs, prune_every)
+
+
+def apply_prune_phase(
+    params: dict[str, Any], phase: Phase, cfg: PQSConfig, quantized_signal: bool
+) -> dict[str, Any]:
+    """Re-prune a layer per the phase directive.
+
+    quantized_signal selects the pruning signal: FP32 master weights (P->Q)
+    or their fake-quantized image (Q->P) — the comparison at the heart of
+    paper §4.
+    """
+    if phase.n_keep is None:
+        return params
+    w = params["w"]
+    if quantized_signal:
+        qp = weight_qparams(w, cfg.weight_bits)
+        w = fake_quant(w, qp)
+    new = dict(params)
+    new["mask"] = nm_prune_mask(w, phase.n_keep, cfg.m)
+    return new

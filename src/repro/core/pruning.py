@@ -1,0 +1,118 @@
+"""N:M semi-structured pruning, filter pruning, and low-rank approximation.
+
+Implements the paper's pruning substrate (§2.2, §4, §5.0.2):
+
+- ``nm_prune_mask``: keep the largest (M - n_prune) of every M consecutive
+  weights along the last axis — the N:M scheme (paper prunes the *smallest N
+  of every M*; we parameterize by number pruned for clarity).
+- Iterative schedules: prune 10 % of each M-group every 10 epochs until the
+  target sparsity is reached (paper §5.0.2).
+- Filter pruning baseline (paper Fig 4 magenta).
+- Low-rank (SVD) approximation used by the Fig-3 experiment.
+
+Masks are computed functionally and applied multiplicatively so they compose
+with QAT fake-quant and with any model definition in the zoo.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def nm_prune_mask(w: jax.Array, n_keep: int, m: int) -> jax.Array:
+    """Binary mask keeping the ``n_keep`` largest-|w| of every ``m`` along axis -1.
+
+    The trailing dimension must be divisible by m (configs in this repo pad
+    to multiples of m where needed). Ties broken by index (stable top-k).
+    """
+    if w.shape[-1] % m != 0:
+        raise ValueError(f"last dim {w.shape[-1]} not divisible by M={m}")
+    if not (0 <= n_keep <= m):
+        raise ValueError(f"n_keep={n_keep} out of range for M={m}")
+    groups = w.reshape(*w.shape[:-1], w.shape[-1] // m, m)
+    mag = jnp.abs(groups)
+    # Rank within each group; keep the n_keep largest magnitudes.
+    # argsort of -mag gives descending order positions.
+    order = jnp.argsort(-mag, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)  # rank of each element (0 = largest)
+    mask = (ranks < n_keep).astype(w.dtype)
+    return mask.reshape(w.shape)
+
+
+def sparsity(mask: jax.Array) -> jax.Array:
+    """Fraction of zeros in a mask/tensor."""
+    return 1.0 - jnp.mean((mask != 0).astype(jnp.float32))
+
+
+def iterative_nm_schedule(
+    total_epochs: int,
+    prune_every: int,
+    m: int,
+    target_sparsity: float,
+) -> list[tuple[int, int]]:
+    """Paper §5.0.2 schedule: every ``prune_every`` epochs prune ~10 % more.
+
+    Returns [(epoch, n_keep), ...] — at ``epoch``, re-prune to keep
+    ``n_keep`` of every m. E.g. m=16, target 30 %: epochs 10/20/30 keep
+    14/13/11 (approx 10/20/30 % pruned).
+    """
+    steps = []
+    frac_per_step = 0.10
+    spars = 0.0
+    epoch = prune_every
+    while spars + 1e-9 < target_sparsity and epoch <= total_epochs:
+        spars = min(spars + frac_per_step, target_sparsity)
+        if epoch + prune_every > total_epochs:
+            spars = target_sparsity  # last chance: jump to target
+        n_keep = int(round(m * (1.0 - spars)))
+        n_keep = max(n_keep, 0)
+        steps.append((epoch, n_keep))
+        epoch += prune_every
+    return steps
+
+
+def filter_prune_mask(w: jax.Array, keep_frac: float) -> jax.Array:
+    """Structured filter pruning baseline (paper Fig 4): zero whole output
+    rows (filters) with the smallest L2 norm. w has shape (out, in...)."""
+    flat = w.reshape(w.shape[0], -1)
+    norms = jnp.linalg.norm(flat, axis=1)
+    k = max(int(round(w.shape[0] * keep_frac)), 1)
+    thresh = jnp.sort(norms)[-k]
+    mask_rows = (norms >= thresh).astype(w.dtype)
+    return mask_rows.reshape((-1,) + (1,) * (w.ndim - 1)) * jnp.ones_like(w)
+
+
+def low_rank_approx(w: jax.Array, rank: int) -> jax.Array:
+    """Rank-k SVD approximation of a 2-D weight matrix (paper Fig 3)."""
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    k = min(rank, s.shape[0])
+    return (u[:, :k] * s[:k]) @ vt[:k, :]
+
+
+def nm_compress(w: np.ndarray, n_keep: int, m: int):
+    """Pack an N:M-pruned matrix into (values, indices) compressed form.
+
+    w: (rows, K) with K % m == 0 and at most n_keep nonzeros per m-group.
+    Returns values (rows, K//m, n_keep) and indices (rows, K//m, n_keep)
+    int8/int32 — the storage format consumed by kernels/nm_spmm.py. Groups
+    with fewer than n_keep nonzeros are padded with (value 0, index 0).
+    """
+    w = np.asarray(w)
+    rows, K = w.shape
+    g = K // m
+    grouped = w.reshape(rows, g, m)
+    # Indices of the n_keep largest |values| per group (matching the mask).
+    order = np.argsort(-np.abs(grouped), axis=-1, kind="stable")[..., :n_keep]
+    order = np.sort(order, axis=-1)  # ascending position for locality
+    vals = np.take_along_axis(grouped, order, axis=-1)
+    return vals, order.astype(np.int32)
+
+
+def nm_decompress(vals: np.ndarray, idx: np.ndarray, m: int) -> np.ndarray:
+    """Inverse of nm_compress (oracle for kernel tests)."""
+    rows, g, n_keep = vals.shape
+    out = np.zeros((rows, g, m), dtype=vals.dtype)
+    np.put_along_axis(out, idx, vals, axis=-1)
+    return out.reshape(rows, g * m)

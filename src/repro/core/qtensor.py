@@ -1,0 +1,129 @@
+"""QTensor: int8 N:M-pruned weight carrier for the LM model zoo.
+
+This is how PQS becomes a *first-class serving feature* of the framework:
+any 2-D weight matrix in the zoo can be swapped for a ``QTensor`` — int8
+values (symmetric per-output-channel scales) with an N:M mask already
+applied — and every matmul in ``models/layers.py`` transparently
+dequantizes on the fly. On TPU the int8(+sparse) weights cut HBM traffic
+4-8x vs bf16, which is the dominant roofline term for decode (DESIGN.md §2).
+
+The *numerics* of narrow accumulation (clip / sorted, paper §3) live in
+``core/overflow.py`` and ``kernels/``; QTensor is the storage/bandwidth
+half of the story. ``quantize_tree`` converts a trained pytree of params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning import nm_prune_mask
+from repro.core.quant import qrange
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Per-output-channel symmetric int8 weight + fp32 scale.
+
+    values: (in_dim, out_dim) int8 (same layout as the fp weight it replaces)
+    scale:  (out_dim,) f32 — column scales (output channels)
+    """
+
+    values: jax.Array
+    scale: jax.Array
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def ndim(self):
+        return self.values.ndim
+
+    def dequant(self, dtype=jnp.bfloat16) -> jax.Array:
+        return (self.values.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def tree_flatten(self):
+        return (self.values, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def quantize_weight(
+    w: jax.Array,
+    bits: int = 8,
+    n_keep: Optional[int] = None,
+    m: int = 16,
+) -> QTensor:
+    """Symmetric per-column quantization with optional N:M pruning.
+
+    w: (in_dim, out_dim). N:M groups run along the *contraction* (in) axis —
+    the direction a dot product accumulates — matching the paper's pruning
+    of dot-product terms.
+    """
+    w = w.astype(jnp.float32)
+    if n_keep is not None:
+        # mask along axis -1 groups => transpose so groups lie on in_dim
+        mask = nm_prune_mask(w.T, n_keep, m).T
+        w = w * mask
+    _, qmax = qrange(bits)
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8)  # (out,)
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32))
+
+
+def is_qtensor(x: Any) -> bool:
+    return isinstance(x, QTensor)
+
+
+def asarray(w: Any, dtype) -> jax.Array:
+    """Uniform accessor used by every matmul in the zoo."""
+    if isinstance(w, QTensor):
+        return w.dequant(dtype)
+    return w.astype(dtype)
+
+
+def quantize_tree(
+    params: Any,
+    bits: int = 8,
+    n_keep: Optional[int] = None,
+    m: int = 16,
+    min_size: int = 1 << 16,
+    min_dim: int = 128,
+) -> Any:
+    """Replace every large >=2-D float leaf with a QTensor.
+
+    Leaves smaller than ``min_size`` elements and leaves whose trailing
+    two dims are not both >= ``min_dim`` (norm scales, biases — including
+    layer-STACKED biases (L, out), which must not be mistaken for
+    matrices) are left untouched. Works on stacked (L, in, out) scan
+    params by folding leading axes into vmapped per-matrix quantization.
+    """
+
+    def conv(leaf):
+        if not isinstance(leaf, jax.Array) and not hasattr(leaf, "dtype"):
+            return leaf
+        if leaf.ndim < 2 or leaf.size < min_size:
+            return leaf
+        if min(leaf.shape[-2:]) < min_dim:
+            return leaf  # (stacked) bias / tiny table, not a matmul weight
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        qfn = lambda x: quantize_weight(x, bits, n_keep, m)  # noqa: E731
+        for _ in range(leaf.ndim - 2):
+            qfn = jax.vmap(qfn)
+        # N:M needs in_dim % m == 0 on the contraction axis; skip otherwise.
+        if n_keep is not None and leaf.shape[-2] % m != 0:
+            qfn = lambda x, _q=bits: quantize_weight(x, _q, None, m)  # noqa: E731
+            for _ in range(leaf.ndim - 2):
+                qfn = jax.vmap(qfn)
+        return qfn(leaf)
+
+    return jax.tree_util.tree_map(conv, params)

@@ -1,0 +1,151 @@
+"""Uniform quantization primitives (paper §2.1).
+
+Per-tensor uniform quantization of weights (symmetric, o_w = 0) and
+activations (asymmetric, offset o_x) to b-bit signed integers, plus the
+straight-through-estimator fake-quant used for QAT.
+
+All functions are pure and jit-able. Integer values are carried in int32
+(the "carrier" dtype) regardless of the logical bitwidth b — the logical
+width is enforced by the clip bounds, matching the paper's MCU semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(bits: int) -> tuple[int, int]:
+    """Signed integer range [-2^(b-1), 2^(b-1)-1] for a b-bit value."""
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QParams:
+    """Quantization parameters for one tensor (per-tensor granularity)."""
+
+    scale: jax.Array  # f32 scalar
+    offset: jax.Array  # i32 scalar (0 for symmetric/weights)
+    bits: int
+
+    def tree_flatten(self):  # registered below
+        return (self.scale, self.offset), (self.bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+jax.tree_util.register_pytree_node(
+    QParams, QParams.tree_flatten, QParams.tree_unflatten
+)
+
+
+def weight_qparams(w: jax.Array, bits: int) -> QParams:
+    """Symmetric per-tensor weight quantization params (o_w = 0, paper §2.1)."""
+    amax = jnp.max(jnp.abs(w))
+    # Avoid div-by-zero for all-zero tensors.
+    amax = jnp.maximum(amax, 1e-8)
+    _, qmax = qrange(bits)
+    scale = amax / qmax
+    return QParams(scale.astype(jnp.float32), jnp.zeros((), jnp.int32), bits)
+
+
+def activation_qparams(
+    lo: jax.Array, hi: jax.Array, bits: int
+) -> QParams:
+    """Asymmetric activation params from a calibrated range [lo, hi].
+
+    Follows paper Eq. (1): scale s_x = R / (2^b - 1) and offset
+    o_x = -2^(b-1) - round(min/s_x), guaranteeing FP32 zero maps to an
+    integer (zero-point correctness for ReLU-sparse activations).
+    """
+    lo = jnp.minimum(lo, 0.0)  # range must include 0 so zero is representable
+    hi = jnp.maximum(hi, 0.0)
+    r = jnp.maximum(hi - lo, 1e-8)
+    scale = r / (2**bits - 1)
+    qmin, _ = qrange(bits)
+    offset = qmin - jnp.round(lo / scale)
+    return QParams(
+        scale.astype(jnp.float32), offset.astype(jnp.int32), bits
+    )
+
+
+def quantize(x: jax.Array, qp: QParams) -> jax.Array:
+    """FP32 -> int32 carrier holding a qp.bits-bit signed value (Eq. 1)."""
+    qmin, qmax = qrange(qp.bits)
+    q = jnp.round(x / qp.scale) + qp.offset
+    return jnp.clip(q, qmin, qmax).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, qp: QParams) -> jax.Array:
+    """Approximate FP32 representation x^{f*} = s (q - o) (Eq. 2)."""
+    return (q.astype(jnp.float32) - qp.offset.astype(jnp.float32)) * qp.scale
+
+
+def fake_quant(x: jax.Array, qp: QParams) -> jax.Array:
+    """Quantize-dequantize with a straight-through estimator (QAT).
+
+    Forward: dequantize(quantize(x)). Backward: identity inside the
+    representable range, zero outside (clipped STE).
+    """
+    qmin, qmax = qrange(qp.bits)
+    lo = (qmin - qp.offset).astype(jnp.float32) * qp.scale
+    hi = (qmax - qp.offset).astype(jnp.float32) * qp.scale
+    x_c = jnp.clip(x, lo, hi)
+    y = dequantize(quantize(x_c, qp), qp)
+    # STE: forward y, gradient of clip(x).
+    return x_c + jax.lax.stop_gradient(y - x_c)
+
+
+@dataclasses.dataclass
+class EmaRange:
+    """Exponential-moving-average activation range observer (paper §2.1:
+
+    activation ranges are collected during training). Functional update —
+    returns the new state rather than mutating.
+    """
+
+    lo: jax.Array
+    hi: jax.Array
+    decay: float = 0.99
+
+    def update(self, x: jax.Array) -> "EmaRange":
+        blo, bhi = jnp.min(x), jnp.max(x)
+        new_lo = self.decay * self.lo + (1 - self.decay) * blo
+        new_hi = self.decay * self.hi + (1 - self.decay) * bhi
+        return EmaRange(new_lo, new_hi, self.decay)
+
+    @staticmethod
+    def init() -> "EmaRange":
+        return EmaRange(jnp.zeros(()), jnp.zeros(()))
+
+
+jax.tree_util.register_pytree_node(
+    EmaRange,
+    lambda e: ((e.lo, e.hi), (e.decay,)),
+    lambda aux, ch: EmaRange(ch[0], ch[1], aux[0]),
+)
+
+
+def quantized_dot_terms(
+    wq: jax.Array, xq: jax.Array, x_qp: QParams
+) -> tuple[jax.Array, jax.Array]:
+    """Partial products and the activation-offset correction term.
+
+    With o_w = 0 (symmetric weights), Eq. (3) reduces to
+        z_f = s_w s_x [ sum_i w_i^q x_i^q  -  o_x sum_i w_i^q ]
+    The first summation is the integer dot product of Eq. (4) — the object
+    PQS accumulates in a narrow register. The second is a weight-only
+    constant folded at compile time. Returns (partial_products, correction)
+    where partial_products[..., k] = w_k^q * x_k^q (int32) and correction is
+    o_x * sum_k w_k^q.
+    """
+    prods = wq.astype(jnp.int32) * xq.astype(jnp.int32)
+    corr = x_qp.offset.astype(jnp.int32) * jnp.sum(
+        wq.astype(jnp.int32), axis=-1
+    )
+    return prods, corr

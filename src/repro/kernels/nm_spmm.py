@@ -1,0 +1,81 @@
+"""N:M compressed-weight matmul kernel (gather-expand in VMEM).
+
+Weights pruned to keep n of every m along K are stored compressed:
+    values  (N, K//m, n_keep) int8
+    indices (N, K//m, n_keep) int32   (position of each kept value in its
+                                       m-group; padded groups use idx 0,
+                                       value 0)
+The kernel streams the *compressed* form from HBM — an m/n_keep bandwidth
+saving, which is the term that matters for decode (DESIGN.md §2) — and
+expands each (bn, bg, n_keep) slab to a dense (bn, bg*m) block in VMEM via
+an iota-compare one-hot einsum (MXU-friendly, no gathers), then runs the
+dense int8 dot against the activation slab with wide int32 accumulation.
+
+Expansion cost is n_keep*m multiply-adds per weight — negligible next to
+the bm-deep matmul it feeds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, v_ref, i_ref, o_ref, *, m_group: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = v_ref[...].astype(jnp.int32)  # (bn, bg, n_keep)
+    idx = i_ref[...]  # (bn, bg, n_keep) int32
+    # one-hot expand: dense[b, g, p] = sum_k vals[b,g,k] * [idx[b,g,k] == p]
+    iota = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (m_group,), 3)
+    onehot = (idx[..., None] == iota).astype(jnp.int32)
+    dense = jnp.sum(vals[..., None] * onehot, axis=2)  # (bn, bg, m)
+    bn = dense.shape[0]
+    wb = dense.reshape(bn, -1)  # (bn, bg*m)
+
+    xb = x_ref[...].astype(jnp.int32)  # (bm, bg*m)
+    o_ref[...] += jax.lax.dot_general(
+        xb, wb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m_group", "bm", "bn", "bg", "interpret"),
+)
+def nm_spmm(
+    x: jax.Array,  # (M, K) int8, K = G * m_group
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    *,
+    m_group: int = 16,
+    bm: int = 128,
+    bn: int = 128,
+    bg: int = 32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    n, g, n_keep = values.shape
+    assert k == g * m_group, (k, g, m_group)
+    assert m % bm == 0 and n % bn == 0 and g % bg == 0, (m, n, g, bm, bn, bg)
+    grid = (m // bm, n // bn, g // bg)
+    kern = functools.partial(_kernel, m_group=m_group)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (bm, bg * m_group), lambda i, j, kk: (i, kk)
+            ),
+            pl.BlockSpec((bn, bg, n_keep), lambda i, j, kk: (j, kk, 0)),
+            pl.BlockSpec((bn, bg, n_keep), lambda i, j, kk: (j, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, values, indices)

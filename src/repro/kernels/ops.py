@@ -1,0 +1,96 @@
+"""Public jit'd wrappers for the Pallas kernels: padding, dtype plumbing,
+interpret-mode dispatch (CPU container -> interpret=True; real TPU ->
+compiled). This is the layer the rest of the framework calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import nm_compress
+from repro.kernels import nm_spmm as _nm
+from repro.kernels import quant_matmul as _qm
+from repro.kernels import sorted_matmul as _sm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def quant_matmul(x, w, *, bm=128, bn=128, bk=512, interpret=None):
+    """Padded dense int8 matmul: (M,K) x (K,N) -> (M,N) int32."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = x.shape[0], w.shape[1]
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    out = _qm.quant_matmul(xp, wp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+def sorted_matmul(
+    x, w, *, acc_bits=16, rounds=1, bm=8, bn=128, bk=256, interpret=None
+):
+    """PQS tiled-sort matmul: (M,K) x (N,K) -> (M,N) int32 @ acc_bits.
+
+    Zero-padding is exact for the sort semantics: zero partial products are
+    sign-neutral and additively inert at every stage.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = x.shape[0], w.shape[0]
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 1), bn, 0)
+    out = _sm.sorted_matmul(
+        xp, wp, acc_bits=acc_bits, rounds=rounds,
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def clip_matmul(x, w, *, acc_bits=16, bm=8, bn=128, bk=256, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = x.shape[0], w.shape[0]
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 1), bn, 0)
+    out = _sm.clip_matmul(
+        xp, wp, acc_bits=acc_bits, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )
+    return out[:m, :n]
+
+
+def nm_spmm(
+    x, values, indices, *, m_group=16, bm=128, bn=128, bg=32, interpret=None
+):
+    """Compressed N:M matmul: (M,K) x [(N,G,keep) vals+idx] -> (M,N) int32."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = x.shape[0], values.shape[0]
+    xp = _pad_to(_pad_to(x, bm, 0), bg * m_group, 1)
+    g_pad = (-values.shape[1]) % bg
+    if g_pad:
+        values = jnp.pad(values, ((0, 0), (0, g_pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, 0), (0, g_pad), (0, 0)))
+    vp = _pad_to(values, bn, 0)
+    ip = _pad_to(indices, bn, 0)
+    out = _nm.nm_spmm(
+        xp, vp, ip, m_group=m_group, bm=bm, bn=bn, bg=bg, interpret=interpret
+    )
+    return out[:m, :n]
+
+
+def compress_nm_weights(w: np.ndarray, n_keep: int, m: int):
+    """Host-side packer: dense (N, K) -> (values, indices) for nm_spmm."""
+    vals, idx = nm_compress(np.asarray(w), n_keep, m)
+    return jnp.asarray(vals, jnp.int8), jnp.asarray(idx, jnp.int32)

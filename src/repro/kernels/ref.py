@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every kernel — the bit-exact reference semantics.
+
+Each oracle mirrors its kernel's numerics exactly (same tile order, same
+saturation points), built on the core overflow library so the kernels, the
+paper benchmarks, and the analysis tooling all share one definition of
+"sorted tiled accumulation".
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import qrange
+from repro.core.sorted_accum import (
+    monotone_accumulate,
+    sorted_order,
+    tiled_seq_order,
+)
+
+
+def quant_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(M,K) int8 x (K,N) int8 -> (M,N) int32 wide accumulation."""
+    return jax.lax.dot_general(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@partial(jax.jit, static_argnames=("acc_bits", "rounds", "k_tile"))
+def sorted_matmul_ref(
+    x: jax.Array,  # (M, K) int8
+    w: jax.Array,  # (N, K) int8
+    acc_bits: int = 16,
+    rounds: int = 1,
+    k_tile: int = 256,
+) -> jax.Array:
+    """Oracle for kernels.sorted_matmul: per-K-tile sorted pairs in natural
+    tile order, stepwise saturating accumulation at acc_bits."""
+    prods = x.astype(jnp.int32)[:, None, :] * w.astype(jnp.int32)[None, :, :]
+    ordered = tiled_seq_order(prods, k_tile, rounds)
+    acc, _ = monotone_accumulate(ordered, acc_bits, saturate=True)
+    return acc
+
+
+@partial(jax.jit, static_argnames=("acc_bits",))
+def clip_matmul_ref(
+    x: jax.Array, w: jax.Array, acc_bits: int = 16
+) -> jax.Array:
+    """Oracle for kernels.clip_matmul: natural order, saturating adds."""
+    prods = x.astype(jnp.int32)[:, None, :] * w.astype(jnp.int32)[None, :, :]
+    acc, _ = monotone_accumulate(prods, acc_bits, saturate=True)
+    return acc
+
+
+def nm_spmm_ref(
+    x: jax.Array,  # (M, K) int8
+    values: np.ndarray,  # (N, G, n_keep)
+    indices: np.ndarray,  # (N, G, n_keep)
+    m_group: int,
+) -> jax.Array:
+    """Oracle for kernels.nm_spmm: decompress then wide matmul."""
+    n, g, n_keep = values.shape
+    dense = jnp.zeros((n, g, m_group), jnp.int32)
+    dense = dense.at[
+        jnp.arange(n)[:, None, None],
+        jnp.arange(g)[None, :, None],
+        jnp.asarray(indices),
+    ].add(jnp.asarray(values, jnp.int32))
+    dense = dense.reshape(n, g * m_group)
+    return jax.lax.dot_general(
+        x.astype(jnp.int32),
+        dense,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def sorted_dot_ref(
+    prods: jax.Array, acc_bits: int, rounds: int = 1
+) -> tuple[jax.Array, jax.Array]:
+    """Single-dot oracle: (value, overflowed) after sorting + saturation."""
+    ordered = sorted_order(prods, rounds)
+    return monotone_accumulate(ordered, acc_bits, saturate=True)

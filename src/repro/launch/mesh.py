@@ -1,0 +1,47 @@
+"""Production mesh construction + named-axis conventions.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init; tests see the
+real 1-CPU topology).
+
+Axes:
+  single pod : (16, 16)        -> ("data", "model")       = 256 chips
+  multi-pod  : (2, 16, 16)     -> ("pod", "data", "model") = 512 chips
+
+"pod" and "data" together form the FSDP/batch axes (params and optimizer
+state sharded over both; batch split over both); "model" is the tensor-
+parallel axis. DCN (inter-pod) traffic rides only the "pod" axis —
+gradient all-reduce — which is the standard multi-pod training topology.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate mesh over the real local devices (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh: jax.sharding.Mesh) -> str:
+    return "model"
+
+
+def axis_size(mesh: jax.sharding.Mesh, *names: str) -> int:
+    out = 1
+    for n in names:
+        if n in mesh.axis_names:
+            out *= mesh.shape[n]
+    return out

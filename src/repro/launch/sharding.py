@@ -1,0 +1,201 @@
+"""GSPMD sharding rules: params, optimizer state, batches, decode caches.
+
+Strategy (DESIGN.md §6): 2-D sharding — every weight matrix is sharded on
+the FSDP axes ("pod","data") over its input dim AND tensor-parallel on
+"model" over its output dim; "out-type" projections (wo / w_out /
+out_proj) are reversed so TP matmul chains avoid resharding. MoE expert
+stacks get expert-parallel on "model" when the expert count divides it.
+
+Every rule passes through ``sanitize``: any named axis that does not
+evenly divide its dimension is dropped (right-to-left for tuple axes), so
+odd vocabularies (49155), tiny expert counts, conv kernels etc. degrade to
+coarser-but-correct shardings instead of failing to lower. This is what
+makes one rule set hold across all 10 architectures x 4 shapes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+AxisEntry = Any  # str | tuple[str, ...] | None
+
+_OUT_TYPE = re.compile(r"(wo|w_out|out_proj|head)($|\W)")
+_EXPERT = re.compile(r"(moe.*(w_gate|w_up|w_out))")
+
+
+def _axis_div(mesh: Mesh, entry: AxisEntry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    out = 1
+    for a in entry:
+        out *= mesh.shape[a]
+    return out
+
+
+def sanitize(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop axis names that don't divide their dim (tuples: right-to-left)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    fixed: list[AxisEntry] = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            fixed.append(None)
+            continue
+        cand = entry if isinstance(entry, tuple) else (entry,)
+        cand = tuple(a for a in cand if a in mesh.axis_names)
+        while cand and dim % _axis_div(mesh, cand) != 0:
+            cand = cand[:-1]
+        fixed.append(None if not cand else (cand if len(cand) > 1 else cand[0]))
+    return P(*fixed)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+_EMBED = re.compile(r"(^|/)(embed|pos_embed)$")
+
+
+def param_spec(
+    mesh: Mesh, path: str, shape: tuple[int, ...],
+    moe_replicate: bool = False,
+    serve_mode: bool = False,
+) -> P:
+    """Sharding rule for one parameter leaf.
+
+    serve_mode drops the FSDP axes (weights replicated over "pod"/"data",
+    sharded on "model" only): decode has no optimizer state to co-shard,
+    and dropping FSDP removes every per-layer weight all-gather from the
+    decode step (§Perf iteration 6b). Memory cost: params/TP per device.
+    """
+    fsdp = () if serve_mode else data_axes(mesh)
+    nd = len(shape)
+    if nd <= 1:
+        return P()  # norms, biases, scalars: replicated
+    if _EMBED.search(path):
+        # Vocab/position tables shard on "model", NOT on the data axes:
+        # the lookup's indices (tokens) are batch-sharded on "data", and
+        # GSPMD resolves an operand/indices same-axis conflict by
+        # REPLICATING the gather output — which silently un-shards the
+        # batch for the whole network (found in §Perf iteration 1).
+        return sanitize(mesh, P("model", None), shape)
+    if path.endswith("head") or "/head" in path:
+        # head (d, V): vocab on "model" matches the logits out-sharding
+        # P(dp, None, "model") -> the head matmul needs no collective.
+        return sanitize(mesh, P(None, "model"), shape)
+    lead = [None] * (nd - 2)
+    if _EXPERT.search(path) and nd >= 3:
+        if moe_replicate:
+            # local-groups dispatch: experts replicated over "model",
+            # storage sharded over the data axes only (gathered per layer)
+            spec = [None] * (nd - 3) + [None, fsdp, None]
+            return sanitize(mesh, P(*spec), shape)
+        e = shape[nd - 3]
+        if e % mesh.shape["model"] == 0:
+            # expert-parallel: experts on "model", fsdp on the widest of the
+            # remaining two dims
+            spec = [None] * (nd - 3) + ["model", fsdp, None]
+            return sanitize(mesh, P(*spec), shape)
+        # TP within expert (granite: 40/32 experts don't divide 16)
+        spec = [None] * (nd - 3) + [None, fsdp, "model"]
+        if _OUT_TYPE.search(path):
+            spec = [None] * (nd - 3) + [None, "model", fsdp]
+        return sanitize(mesh, P(*spec), shape)
+    if _OUT_TYPE.search(path):
+        return sanitize(mesh, P(*lead, "model", fsdp), shape)
+    return sanitize(mesh, P(*lead, fsdp, "model"), shape)
+
+
+def params_shardings(
+    mesh: Mesh, params_shapes: Any, moe_replicate: bool = False,
+    serve_mode: bool = False,
+) -> Any:
+    """Pytree of NamedShardings matching a (ShapeDtypeStruct) param tree."""
+
+    def rule(path, leaf):
+        spec = param_spec(mesh, _path_str(path), tuple(leaf.shape),
+                          moe_replicate, serve_mode)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def opt_shardings(mesh: Mesh, opt_shapes: Any) -> Any:
+    """Optimizer state mirrors params leaf-for-leaf (ZeRO-3); the step
+    counter and any scalar leaves replicate."""
+    return params_shardings(mesh, opt_shapes)
+
+
+def batch_shardings(mesh: Mesh, batch_shapes: dict[str, Any]) -> dict[str, Any]:
+    dp = data_axes(mesh)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        name = _path_str(path)
+        if "positions" in name and len(shape) == 3:  # (3, B, S)
+            return NamedSharding(mesh, sanitize(mesh, P(None, dp, None), shape))
+        if len(shape) >= 1:
+            spec = P(dp, *([None] * (len(shape) - 1)))
+            return NamedSharding(mesh, sanitize(mesh, spec, shape))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_shardings(mesh: Mesh, cache_shapes: Any) -> Any:
+    """Decode-cache rule.
+
+    KV tensors (..., B, S, G, hd): batch on the data axes when it divides;
+    for global-batch-1 long-context cells the sequence axis takes "data"
+    instead. The head_dim axis shards on "model" (uniformly divisible
+    across all archs, unlike G which can be < tp degree).
+    SSM state (..., B, H, P, N): heads on "model".
+    Conv state (..., B, K, D): channels on "model".
+    """
+    dp = data_axes(mesh)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        name = _path_str(path)
+        nd = len(shape)
+        if name.endswith("pos") or nd <= 1:
+            return NamedSharding(mesh, P())
+        if name.split("/")[-1] in ("k", "v") and nd >= 4:
+            b, s = shape[nd - 4], shape[nd - 3]
+            lead = [None] * (nd - 4)
+            if b % _axis_div(mesh, dp) == 0:
+                spec = P(*lead, dp, None, None, "model")
+            else:
+                spec = P(*lead, None, "data", None, "model")
+            return NamedSharding(mesh, sanitize(mesh, spec, shape))
+        if name.endswith("ssd") and nd >= 4:  # (..., B, H, P, N)
+            lead = [None] * (nd - 4)
+            spec = P(*lead, dp, "model", None, None)
+            return NamedSharding(mesh, sanitize(mesh, spec, shape))
+        if name.endswith("conv") and nd >= 3:  # (..., B, K, D)
+            lead = [None] * (nd - 3)
+            spec = P(*lead, dp, None, "model")
+            return NamedSharding(mesh, sanitize(mesh, spec, shape))
+        # fallback: batch-shard the first plausible axis
+        spec = P(dp, *([None] * (nd - 1)))
+        return NamedSharding(mesh, sanitize(mesh, spec, shape))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def logits_sharding(mesh: Mesh, shape: tuple[int, ...]) -> NamedSharding:
+    dp = data_axes(mesh)
+    spec = P(dp, *([None] * (len(shape) - 2)), "model")
+    return NamedSharding(mesh, sanitize(mesh, spec, shape))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,95 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` returns the batch pytree a step consumes; nothing is
+allocated. ``decode_specs`` adds the KV/SSM cache tree (evaluated with
+jax.eval_shape through the model's own init_caches, so cache structure is
+always in sync with the models). ``step_fns`` builds the jitted-able
+train / prefill / serve step callables.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import Model, build_model
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    bf16 = jnp.bfloat16
+    if cfg.family == "vlm":
+        out = {
+            "embeddings": SDS((b, s, cfg.d_model), bf16),
+            "positions": SDS((3, b, s), jnp.int32),
+        }
+    elif cfg.is_encoder_decoder:
+        out = {
+            "frames": SDS((b, s, cfg.d_model), bf16),
+            "tokens": SDS((b, s), jnp.int32),
+        }
+    else:
+        out = {"tokens": SDS((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = SDS((b, s), jnp.int32)
+    return out
+
+
+def token_specs(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    """Single decode-step token input."""
+    b = shape.global_batch
+    if cfg.family == "vlm":
+        return SDS((b, 1, cfg.d_model), jnp.bfloat16)
+    return SDS((b, 1), jnp.int32)
+
+
+def params_specs(model: Model) -> Any:
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def cache_specs(model: Model, shape: ShapeSpec, cache_dtype=jnp.bfloat16) -> Any:
+    params = params_specs(model)
+    b, s = shape.global_batch, shape.seq_len
+
+    def mk(p):
+        return model.init_caches(p, b, s, cache_dtype)
+
+    return jax.eval_shape(mk, params)
+
+
+def make_train_step(model: Model, lr: float = 3e-4) -> Callable:
+    opt = adamw(lr=lr)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_opt_specs(model: Model, lr: float = 3e-4) -> Any:
+    opt = adamw(lr=lr)
+    params = params_specs(model)
+    return jax.eval_shape(opt.init, params)
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        return model.forward(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    def serve_step(params, token, caches):
+        return model.decode(params, token, caches)
+
+    return serve_step

@@ -1,0 +1,225 @@
+"""Whisper-style encoder-decoder transformer.
+
+The conv/mel frontend is a stub per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, S_enc, d_model) to the encoder. Encoder
+uses sinusoidal absolute positions and bidirectional attention; the decoder
+uses learned positions, causal self-attention, and cross-attention into the
+encoder output. Both stacks are homogeneous and scan over stacked params.
+
+Decode keeps two caches per layer: the self-attention KV ring and the
+cross-attention K/V computed once from the encoder output at prefill.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qtensor import asarray
+from repro.models.hints import hint_batch, hint_logits
+from repro.models.layers import (
+    Params,
+    _expand_kv,
+    _sdpa,
+    attention,
+    attention_decode,
+    attn_init,
+    dense_init,
+    empty_kv_cache,
+    lin,
+    mlp,
+    mlp_init,
+    norm,
+    norm_init,
+)
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    """Whisper's sinusoidal position embedding."""
+    log_timescale = jnp.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    scaled = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def enc_layer_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": norm_init(cfg.d_model),
+        "attn": attn_init(ks[0], cfg),
+        "ln2": norm_init(cfg.d_model),
+        "mlp": mlp_init(ks[1], cfg),
+    }
+
+
+def dec_layer_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg.d_model),
+        "attn": attn_init(ks[0], cfg),
+        "ln_x": norm_init(cfg.d_model),
+        "xattn": attn_init(ks[1], cfg),
+        "ln2": norm_init(cfg.d_model),
+        "mlp": mlp_init(ks[2], cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ke, kd, kv, kp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "enc_layers": jax.vmap(lambda k: enc_layer_init(k, cfg))(enc_keys),
+        "enc_ln_f": norm_init(cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: dec_layer_init(k, cfg))(dec_keys),
+        "dec_ln_f": norm_init(cfg.d_model),
+        "embed": jax.random.normal(kv, (cfg.vocab_size, cfg.d_model), dt)
+        * (1.0 / cfg.d_model**0.5),
+        "pos_embed": jax.random.normal(kp, (cfg.max_seq_len, cfg.d_model), dt)
+        * 0.01,
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, S_enc, d_model) stubbed frontend output -> encoder states."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = frames.shape
+    x = frames.astype(dt) + sinusoids(s, cfg.d_model).astype(dt)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, p):
+        fn = lambda p, x: x + attention(  # noqa: E731
+            p["attn"], norm(x, p["ln1"], cfg), positions, cfg,
+            causal=False, use_rope=False,
+        )
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x = fn(p, x)
+        x = x + mlp(p["mlp"], norm(x, p["ln2"], cfg), cfg)
+        return hint_batch(x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=cfg.scan_unroll)
+    return norm(x, params["enc_ln_f"], cfg)
+
+
+def decode_train(
+    params: Params,
+    tokens: jax.Array,  # (B, S_dec) int32
+    enc_out: jax.Array,  # (B, S_enc, d)
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Teacher-forced decoder forward -> logits (B, S_dec, V)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    x = asarray(params["embed"], dt)[tokens]
+    x = x + asarray(params["pos_embed"], dt)[None, :s]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, p):
+        def fn(p, x):
+            x = x + attention(
+                p["attn"], norm(x, p["ln1"], cfg), positions, cfg,
+                causal=True, use_rope=False,
+            )
+            x = x + attention(
+                p["xattn"], norm(x, p["ln_x"], cfg), positions, cfg,
+                kv_x=enc_out, use_rope=False,
+            )
+            return x
+
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x = fn(p, x)
+        x = x + mlp(p["mlp"], norm(x, p["ln2"], cfg), cfg)
+        return hint_batch(x), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=cfg.scan_unroll)
+    x = norm(x, params["dec_ln_f"], cfg)
+    return hint_logits(x @ asarray(params["embed"], x.dtype).T)
+
+
+def forward(params: Params, frames: jax.Array, tokens: jax.Array,
+            cfg: ModelConfig) -> jax.Array:
+    return decode_train(params, tokens, encode(params, frames, cfg), cfg)
+
+
+# ---------------------------------------------------------------------------
+# decode (incremental)
+# ---------------------------------------------------------------------------
+
+
+def precompute_cross_kv(
+    params: Params, enc_out: jax.Array, cfg: ModelConfig
+) -> Params:
+    """Per-layer cross-attention K/V from encoder states: (L, B, S, H, hd)."""
+    b, s, _ = enc_out.shape
+    g, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def one(p):
+        k = lin(enc_out, p["xattn"]["wk"])
+        v = lin(enc_out, p["xattn"]["wv"])
+        if cfg.qkv_bias:
+            k = k + p["xattn"]["bk"].astype(k.dtype)
+            v = v + p["xattn"]["bv"].astype(v.dtype)
+        return {
+            "k": k.reshape(b, s, g, hd),
+            "v": v.reshape(b, s, g, hd),
+        }
+
+    return jax.vmap(one)(params["dec_layers"])
+
+
+def init_decode_caches(
+    params: Params, cfg: ModelConfig, batch: int, max_len: int, dtype
+) -> Any:
+    one = empty_kv_cache(cfg, batch, max_len, None, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one
+    )
+
+
+def _cross_attend_step(p: Params, x: jax.Array, xkv: Params,
+                       cfg: ModelConfig) -> jax.Array:
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = lin(x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    q = q.reshape(b, 1, h, hd)
+    k = xkv["k"].astype(x.dtype)
+    v = xkv["v"].astype(x.dtype)
+    mask = jnp.ones((1, k.shape[1]), bool)
+    o = _sdpa(q, k, v, mask, cfg.attn_logit_softcap)
+    return lin(o.reshape(b, 1, h * hd), p["wo"])
+
+
+def decode_step(
+    params: Params,
+    token: jax.Array,  # (B, 1) int32
+    caches: Any,  # stacked self-attn KV
+    cross_kv: Params,  # from precompute_cross_kv
+    cfg: ModelConfig,
+) -> tuple[jax.Array, Any]:
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = asarray(params["embed"], dt)[token]
+    pos = caches["pos"][0]
+    x = x + asarray(params["pos_embed"], dt)[pos][None, None]
+
+    def body(x, inp):
+        p, cache, xkv = inp
+        h, new_cache = attention_decode(
+            p["attn"], norm(x, p["ln1"], cfg), cache, cfg, use_rope=False
+        )
+        x = x + h
+        x = x + _cross_attend_step(p["xattn"], norm(x, p["ln_x"], cfg), xkv, cfg)
+        x = x + mlp(p["mlp"], norm(x, p["ln2"], cfg), cfg)
+        return hint_batch(x), new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches, cross_kv), unroll=cfg.scan_unroll)
+    x = norm(x, params["dec_ln_f"], cfg)
+    return hint_logits(x @ asarray(params["embed"], x.dtype).T), new_caches

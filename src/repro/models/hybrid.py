@@ -1,0 +1,153 @@
+"""Jamba-style hybrid: Mamba+attention 1:7 interleave with interleaved MoE.
+
+Layer i uses an attention mixer when ``i % attn_period == attn_offset``
+(Jamba v0.1: period 8, offset 4) and a Mamba2 mixer otherwise; its FFN is
+MoE when ``i % moe.layer_period == moe.layer_offset`` (odd layers) and a
+dense MLP otherwise. Layers are heterogeneous, so params are a python list
+of per-layer dicts and the layer loop is unrolled (32 layers — compile
+stays manageable; the hot memory path is still scanned inside SSD/attn).
+
+Jamba attention layers carry no positional encoding (the SSM layers encode
+order), so ``use_rope=False``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qtensor import asarray
+from repro.models import moe as moe_lib
+from repro.models.hints import hint_batch, hint_logits
+from repro.models.layers import (
+    Params,
+    attention,
+    attention_decode,
+    attn_init,
+    empty_kv_cache,
+    mlp,
+    mlp_init,
+    norm,
+    norm_init,
+)
+from repro.models.ssm import (
+    empty_ssm_cache,
+    mamba_forward,
+    mamba_init,
+    mamba_step,
+)
+
+
+def is_attn_layer(i: int, cfg: ModelConfig) -> bool:
+    return i % cfg.attn_period == cfg.attn_offset
+
+
+def is_moe_layer(i: int, cfg: ModelConfig) -> bool:
+    m = cfg.moe
+    return m is not None and i % m.layer_period == m.layer_offset
+
+
+def layer_init(key, i: int, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    p: Params = {"ln1": norm_init(cfg.d_model), "ln2": norm_init(cfg.d_model)}
+    if is_attn_layer(i, cfg):
+        p["attn"] = attn_init(ks[0], cfg)
+    else:
+        p["mamba"] = mamba_init(ks[0], cfg)
+    if is_moe_layer(i, cfg):
+        p["moe"] = moe_lib.moe_init(ks[1], cfg, cfg.moe)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg, d_ff=cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 1)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "layers": [layer_init(keys[i], i, cfg) for i in range(cfg.num_layers)],
+        "ln_f": norm_init(cfg.d_model),
+        "embed": jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model), dt)
+        * (1.0 / cfg.d_model**0.5),
+    }
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,  # (B, S) int32
+    positions: Optional[jax.Array] = None,
+    cfg: ModelConfig = None,
+) -> tuple[jax.Array, jax.Array]:
+    b, s = tokens.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = asarray(params["embed"], dt)[tokens]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i, p in enumerate(params["layers"]):
+        def mixer(p, x):
+            h = norm(x, p["ln1"], cfg)
+            if "attn" in p:
+                h = attention(p["attn"], h, positions, cfg, causal=True,
+                              use_rope=False)
+            else:
+                h, _ = mamba_forward(p["mamba"], h, cfg)
+            return x + h
+
+        fn = jax.checkpoint(mixer) if cfg.remat else mixer
+        x = fn(p, x)
+        h = norm(x, p["ln2"], cfg)
+        if "moe" in p:
+            h, aux = moe_lib.moe_ffn(p["moe"], h, cfg, cfg.moe)
+            aux_total = aux_total + aux
+        else:
+            h = mlp(p["mlp"], h, cfg)
+        x = hint_batch(x + h)
+
+    x = norm(x, params["ln_f"], cfg)
+    logits = hint_logits(x @ asarray(params["embed"], x.dtype).T)
+    return logits, aux_total / max(cfg.num_layers, 1)
+
+
+def init_decode_caches(
+    params: Params, cfg: ModelConfig, batch: int, max_len: int, dtype
+) -> list[Any]:
+    caches = []
+    for i in range(cfg.num_layers):
+        if is_attn_layer(i, cfg):
+            caches.append(empty_kv_cache(cfg, batch, max_len, None, dtype))
+        else:
+            caches.append(empty_ssm_cache(cfg, batch, dtype))
+    return caches
+
+
+def decode_step(
+    params: Params,
+    token: jax.Array,  # (B, 1) int32
+    caches: list[Any],
+    cfg: ModelConfig,
+) -> tuple[jax.Array, list[Any]]:
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = asarray(params["embed"], dt)[token]
+    new_caches = []
+    for i, p in enumerate(params["layers"]):
+        h = norm(x, p["ln1"], cfg)
+        if "attn" in p:
+            h, nc = attention_decode(p["attn"], h, caches[i], cfg,
+                                     use_rope=False)
+        else:
+            h, nc = mamba_step(p["mamba"], h, caches[i], cfg)
+        new_caches.append(nc)
+        x = x + h
+        h = norm(x, p["ln2"], cfg)
+        if "moe" in p:
+            h, _ = moe_lib.moe_ffn(p["moe"], h, cfg, cfg.moe)
+        else:
+            h = mlp(p["mlp"], h, cfg)
+        x = hint_batch(x + h)
+    x = norm(x, params["ln_f"], cfg)
+    return hint_logits(x @ asarray(params["embed"], x.dtype).T), new_caches

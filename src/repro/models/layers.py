@@ -1,0 +1,399 @@
+"""Shared model-zoo layers: norms, RoPE/M-RoPE, GQA attention, MLP.
+
+Pure-functional JAX. Conventions:
+- params are plain dicts of arrays; stacked along axis 0 when scanned.
+- activations flow in cfg.compute_dtype (bf16); norms/softmax in f32.
+- attention is memory-efficient (scan over query chunks) above
+  cfg.attn_chunk_threshold so compiled peak memory stays roofline-honest,
+  and keeps GQA KV unexpanded on the decode path (§Perf iteration 7).
+- PQS quantized weights: any projection may carry a QTensor (int8 +
+  per-channel scales, N:M pruned) instead of a float matrix; ``lin()``
+  dequantizes on the fly — the decode-bandwidth optimization of §Perf.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qtensor import asarray
+
+Params = dict[str, Any]
+
+
+def lin(x: jax.Array, w: Any) -> jax.Array:
+    """x @ w with transparent QTensor dequantization (PQS int8 serving)."""
+    return x @ asarray(w, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim, out_dim, dtype, scale=None):
+    scale = scale if scale is not None else (2.0 / (in_dim + out_dim)) ** 0.5
+    return jax.random.normal(key, (in_dim, out_dim), dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def norm(x: jax.Array, gamma: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return rms_norm(x, gamma) if cfg.norm == "rmsnorm" else layer_norm(x, gamma)
+
+
+def norm_init(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)  # stored as (scale - 1)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE and qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim // 2, dtype=jnp.float32) * 2 / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, hd)
+    positions: jax.Array,  # (B, S) int32 or (3, B, S) for M-RoPE
+    head_dim: int,
+    theta: float,
+    mrope_sections: Optional[tuple[int, ...]] = None,
+) -> jax.Array:
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    if mrope_sections is not None:
+        # M-RoPE: head_dim/2 frequency slots split into (t, h, w) sections,
+        # each rotated by its own position stream. positions: (3, B, S).
+        assert positions.ndim == 3 and positions.shape[0] == 3
+        sec = jnp.concatenate(
+            [
+                jnp.full((s,), i, jnp.int32)
+                for i, s in enumerate(mrope_sections)
+            ]
+        )  # (hd/2,) -> which stream each freq slot uses
+        pos = positions.astype(jnp.float32)  # (3, B, S)
+        angles = pos[..., None] * freqs[None, None, None, :]  # (3,B,S,hd/2)
+        angles = jnp.take_along_axis(
+            angles, sec[None, None, None, :].astype(jnp.int32) * 0 + sec[None, None, None, :], axis=0
+        )[0] if False else jnp.moveaxis(angles, 0, -1)  # (B,S,hd/2,3)
+        angles = jnp.take_along_axis(
+            angles, jnp.broadcast_to(sec[None, None, :, None], angles.shape[:-1] + (1,)), axis=-1
+        )[..., 0]  # (B,S,hd/2)
+    else:
+        assert positions.ndim == 2
+        angles = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, g = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {
+        "wq": dense_init(ks[0], d, h * hd, dt),
+        "wk": dense_init(ks[1], d, g * hd, dt),
+        "wv": dense_init(ks[2], d, g * hd, dt),
+        "wo": dense_init(ks[3], h * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((g * hd,), dt)
+        p["bv"] = jnp.zeros((g * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd)
+        p["k_norm"] = norm_init(hd)
+    return p
+
+
+def _expand_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B, S, G, hd) -> (B, S, H, hd) by repeating each KV head H/G times."""
+    b, s, g, hd = k.shape
+    rep = num_heads // g
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def _attn_mask(
+    q_pos: jax.Array,  # (Sq,)
+    k_pos: jax.Array,  # (Sk,)
+    causal: bool,
+    window: Optional[int],
+    use_window: Optional[jax.Array] = None,  # traced bool: apply window?
+) -> jax.Array:
+    """(Sq, Sk) boolean mask: True = attend.
+
+    ``use_window`` lets a scan-over-layers body select local vs global
+    attention with a traced per-layer flag (gemma3's 5:1 pattern) while
+    ``window`` itself stays static.
+    """
+    diff = q_pos[:, None] - k_pos[None, :]
+    m = jnp.ones(diff.shape, bool)
+    if causal:
+        m = jnp.logical_and(m, diff >= 0)
+    if window is not None:
+        w = diff < window
+        if use_window is not None:
+            w = jnp.logical_or(w, jnp.logical_not(use_window))
+        m = jnp.logical_and(m, w)
+    return m
+
+
+def _sdpa(q, k, v, mask, softcap=None):
+    """Attention with unexpanded GQA KV: q (B,Sq,H,hd), k/v (B,Sk,G,hd).
+
+    Two regimes (§Perf iterations 7/7b):
+    - Sq == 1 (decode): GQA-native einsum — the repeated KV is never
+      materialized (a jnp.repeat costs H/G x the KV-cache bytes per layer
+      and dominated decode HBM traffic).
+    - Sq > 1 (train/prefill): expand KV to H heads. Here score traffic
+      dwarfs the one-time expansion, and H (a multiple of the 16-way
+      "model" axis) shards cleanly where G=8 KV heads cannot — the native
+      form cost +26% collective bytes on the 72B train cell.
+    """
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    rep = h // g
+    if sq > 1 and rep > 1:
+        k = _expand_kv(k, h)
+        v = _expand_kv(v, h)
+        g, rep = h, 1
+    qg = q.reshape(b, sq, g, rep, hd)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+    scores = scores / (hd**0.5)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    else:
+        mask = mask[:, :, None] if mask.ndim == 4 else mask
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, causal, window, softcap, chunk,
+                  use_window=None):
+    """Memory-efficient attention: scan over query chunks.
+
+    Peak score memory is (B, H, chunk, Sk) instead of (B, H, Sq, Sk) —
+    what keeps 32k-prefill inside v5e HBM (DESIGN.md §6).
+    """
+    b, sq, h, hd = q.shape
+    assert sq % chunk == 0, (sq, chunk)
+    qc = q.reshape(b, sq // chunk, chunk, h, hd)
+    pc = q_pos.reshape(sq // chunk, chunk)
+
+    def body(carry, inp):
+        qi, pi = inp
+        mask = _attn_mask(pi, k_pos, causal, window, use_window)
+        oi = _sdpa(qi, k, v, mask, softcap)
+        return carry, oi
+
+    _, out = jax.lax.scan(body, None, (jnp.moveaxis(qc, 1, 0), pc))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, hd)
+
+
+def attention(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (B, S) or (3, B, S)
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_window: Optional[jax.Array] = None,  # traced local/global select
+    kv_x: Optional[jax.Array] = None,  # cross-attention source
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill, no cache)."""
+    b, s, d = x.shape
+    h, g, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+
+    q = lin(x, params["wq"])
+    k = lin(src, params["wk"])
+    v = lin(src, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, sk, g, hd)
+    v = v.reshape(b, sk, g, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if use_rope and kv_x is None:
+        q = apply_rope(q, positions, hd, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, hd, cfg.rope_theta, cfg.mrope_sections)
+
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    q_pos = pos1d[0]  # (S,) — shared across batch in this framework
+    k_pos = q_pos if kv_x is None else jnp.arange(sk)
+    if s >= cfg.attn_chunk_threshold and s % cfg.attn_chunk_q == 0:
+        o = _sdpa_chunked(
+            q, k, v, q_pos, k_pos, causal and kv_x is None, window,
+            cfg.attn_logit_softcap, cfg.attn_chunk_q, use_window,
+        )
+    else:
+        mask = _attn_mask(
+            q_pos, k_pos, causal and kv_x is None, window, use_window
+        )
+        o = _sdpa(q, k, v, mask, cfg.attn_logit_softcap)
+    return lin(o.reshape(b, s, h * hd), params["wo"])
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache: dict[str, jax.Array],  # {"k","v": (B, S_max, G, hd), "pos": ()}
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Single-token decode against a KV cache; returns (out, new_cache).
+
+    The cache position ``pos`` is a traced scalar. Sliding-window layers use
+    a ring buffer of size window (positions wrap), so local-layer caches stay
+    O(window) — the gemma3 long_500k memory story.
+    """
+    b, one, d = x.shape
+    assert one == 1
+    h, g, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pos = cache["pos"]  # scalar int32 — next write index (tokens so far)
+    s_max = cache["k"].shape[1]
+
+    q = lin(x, params["wq"])
+    k = lin(x, params["wk"])
+    v = lin(x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, g, hd)
+    v = v.reshape(b, 1, g, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if use_rope:
+        pvec = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        if cfg.mrope_sections is not None:
+            pvec = jnp.broadcast_to(pvec, (3,) + pvec.shape)
+        q = apply_rope(q, pvec, hd, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, pvec, hd, cfg.rope_theta, cfg.mrope_sections)
+
+    write_idx = jnp.mod(pos, s_max) if window is not None else pos
+    new_k = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, write_idx, 0, 0)
+    )
+    new_v = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, write_idx, 0, 0)
+    )
+
+    rep = h // g
+    kk = new_k.astype(x.dtype)  # (B, S_max, G, hd) — never expanded
+    vv = new_v.astype(x.dtype)
+    qg = q.reshape(b, 1, g, rep, hd)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kk).astype(jnp.float32)
+    scores = scores / (hd**0.5)
+    if cfg.attn_logit_softcap is not None:
+        scores = jnp.tanh(scores / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    slot = jnp.arange(s_max)
+    if window is not None:
+        # ring buffer: valid slots are the last min(pos+1, window) writes
+        age = jnp.mod(write_idx - slot, s_max)  # 0 = newest
+        valid = age < jnp.minimum(pos + 1, window)
+    else:
+        valid = slot <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", probs, vv)
+    out = lin(o.reshape(b, 1, h * hd), params["wo"])
+    return out, {"k": new_k, "v": new_v, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "gelu_plain":
+        return {
+            "w_in": dense_init(ks[0], d, ff, dt),
+            "b_in": jnp.zeros((ff,), dt),
+            "w_out": dense_init(ks[1], ff, d, dt),
+            "b_out": jnp.zeros((d,), dt),
+        }
+    return {
+        "w_gate": dense_init(ks[0], d, ff, dt),
+        "w_up": dense_init(ks[1], d, ff, dt),
+        "w_out": dense_init(ks[2], ff, d, dt),
+    }
+
+
+def mlp(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.activation == "gelu_plain":
+        hid = lin(x, params["w_in"]) + params["b_in"].astype(x.dtype)
+        hid = jax.nn.gelu(hid)
+        return lin(hid, params["w_out"]) + params["b_out"].astype(x.dtype)
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    gate = act(lin(x, params["w_gate"]))
+    up = lin(x, params["w_up"])
+    return lin(gate * up, params["w_out"])
+
+
+def empty_kv_cache(
+    cfg: ModelConfig, batch: int, s_max: int, window: Optional[int], dtype
+) -> dict[str, jax.Array]:
+    g, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    size = min(s_max, window) if window is not None else s_max
+    return {
+        "k": jnp.zeros((batch, size, g, hd), dtype),
+        "v": jnp.zeros((batch, size, g, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,241 @@
+"""Mixture-of-Experts layer: top-k router + capacity-buffer dispatch/combine.
+
+GShard-style dispatch adapted for GSPMD sharding:
+
+- tokens are flattened per batch row ("group"); all position bookkeeping
+  (cumsum over one-hot expert assignment) is *local to a group*, so the
+  batch axis shards cleanly on ("pod","data") with no cross-device cumsum.
+- dispatch/combine are batched scatters/gathers into an (E, C, d) buffer
+  per group — no global (S, E, C) one-hot einsum, so memory stays
+  O(tokens * top_k * capacity_factor).
+- with ``cfg.moe_local_groups`` (tiny-expert models under sequence
+  parallelism) the sequence folds into the group axis and dispatch runs
+  in the GShard one-hot-einsum form instead — affordable because groups
+  are device-local, and einsums partition where scatters replicate
+  (EXPERIMENTS §Perf iteration 5).
+- expert FFNs run as a single einsum over the expert axis; expert weights
+  shard on "model" either by expert (EP, when E % tp == 0), by d_ff (TP
+  within expert), or replicate (local-groups mode) — launch/sharding.py
+  picks per arch.
+
+Tokens overflowing an expert's capacity are dropped (standard GShard
+semantics); the router uses softmax-then-top-k with normalized gates, plus
+the load-balancing auxiliary loss of Shazeer et al. for training.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.qtensor import asarray
+from repro.models.layers import Params, dense_init
+
+
+def moe_init(key, cfg: ModelConfig, mcfg: MoEConfig) -> Params:
+    d, ff, e = cfg.d_model, mcfg.d_ff, mcfg.num_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    scale_in = (2.0 / (d + ff)) ** 0.5
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router in f32
+        "w_gate": jax.random.normal(ks[1], (e, d, ff), dt) * scale_in,
+        "w_up": jax.random.normal(ks[2], (e, d, ff), dt) * scale_in,
+        "w_out": jax.random.normal(ks[3], (e, ff, d), dt) * scale_in,
+    }
+
+
+def capacity(tokens_per_group: int, mcfg: MoEConfig) -> int:
+    c = int(
+        tokens_per_group * mcfg.top_k * mcfg.capacity_factor
+        / mcfg.num_experts
+    )
+    return max(c, mcfg.top_k)
+
+
+def route(
+    x: jax.Array,  # (G, S, d)
+    router_w: jax.Array,
+    mcfg: MoEConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing. Returns (expert_idx, gates, aux_loss).
+
+    expert_idx: (G, S, k) int32, gates: (G, S, k) f32 normalized over k,
+    aux_loss: scalar load-balance loss (mean_e f_e * p_e * E, GShard eq.).
+    """
+    logits = (x.astype(jnp.float32) @ router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, S, E)
+    gates, idx = jax.lax.top_k(probs, mcfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # load-balance aux: fraction of tokens whose top-1 is e  x  mean prob e
+    top1 = idx[..., 0]
+    frac = jnp.mean(
+        jax.nn.one_hot(top1, mcfg.num_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(frac * mean_p) * mcfg.num_experts
+    return idx, gates, aux
+
+
+def _positions_in_expert(
+    idx: jax.Array, num_experts: int  # (T, k) flat per group
+) -> jax.Array:
+    """Arrival order of each (token, k) assignment within its expert.
+
+    Flattens (T, k) to (T*k,) in token-major order (earlier tokens win
+    capacity), one-hot cumsums per expert. Returns (T, k) int32 positions.
+    """
+    t, k = idx.shape
+    flat = idx.reshape(t * k)
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)  # (T*k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1  # position if assigned
+    pos = jnp.take_along_axis(pos_all, flat[:, None], axis=1)[:, 0]
+    return pos.reshape(t, k)
+
+
+def moe_ffn(
+    params: Params,
+    x: jax.Array,  # (G, S, d)  G = batch rows (sharded on data axes)
+    cfg: ModelConfig,
+    mcfg: MoEConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """MoE FFN forward. Returns (out (G,S,d), aux_loss).
+
+    With cfg.moe_local_groups (and a model axis in the ambient mesh), the
+    sequence is folded into the group axis so that every group lives on
+    exactly one device: routing cumsums, dispatch scatters, expert FFNs,
+    and combine gathers all run collective-free (§Perf iteration 5).
+    """
+    if getattr(cfg, "moe_local_groups", False):
+        from repro.models.hints import _ambient_mesh, shard_hint
+
+        mesh = _ambient_mesh()
+        r = int(mesh.shape.get("model", 1)) if mesh is not None else 1
+        g0, s0, d0 = x.shape
+        if r > 1 and s0 % r == 0 and s0 // r >= mcfg.top_k:
+            # Split the seq dim on the model-shard boundary and vmap the
+            # grouped dispatch over the new axis. NB: a flat reshape
+            # (G*r, S/r, d) merges a sharded dim and trips GSPMD's
+            # "involuntary full rematerialization" — the 4-D split +
+            # inner vmap keeps every step layout-preserving (§Perf it. 5).
+            x4 = x.reshape(g0, r, s0 // r, d0)
+            x4 = shard_hint(x4, ("pod", "data"), "model")
+            out, aux = jax.vmap(
+                lambda xr: _moe_ffn_onehot(params, xr, cfg, mcfg),
+                in_axes=1, out_axes=(1, 0),
+            )(x4)
+            out = shard_hint(out, ("pod", "data"), "model")
+            return out.reshape(g0, s0, d0), jnp.mean(aux)
+    return _moe_ffn_grouped(params, x, cfg, mcfg)
+
+
+def _moe_ffn_grouped(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mcfg: MoEConfig,
+) -> tuple[jax.Array, jax.Array]:
+    g, s, d = x.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+    c = capacity(s, mcfg)
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+
+    idx, gates, aux = route(x, asarray(params["router"], jnp.float32), mcfg)
+
+    def dispatch_one(xg, idxg, gatesg):
+        # xg: (S, d), idxg: (S, k), gatesg: (S, k)
+        pos = _positions_in_expert(idxg, e)  # (S, k)
+        keep = pos < c
+        gatesg = jnp.where(keep, gatesg, 0.0)
+        pos_c = jnp.where(keep, pos, c)  # overflow -> scratch slot c
+        buf = jnp.zeros((e, c + 1, d), xg.dtype)
+        xk = jnp.broadcast_to(xg[:, None, :], (s, k, d)).reshape(s * k, d)
+        buf = buf.at[idxg.reshape(-1), pos_c.reshape(-1)].add(xk)
+        return buf[:, :c], pos_c, gatesg
+
+    buf, pos_c, gates = jax.vmap(dispatch_one)(x, idx, gates)
+    # buf: (G, E, C, d) -> expert FFN einsum (E is a batch dim)
+    wg = asarray(params["w_gate"], x.dtype)
+    wu = asarray(params["w_up"], x.dtype)
+    wo = asarray(params["w_out"], x.dtype)
+    h = act(jnp.einsum("gecd,edf->gecf", buf, wg)) * jnp.einsum(
+        "gecd,edf->gecf", buf, wu
+    )
+    y = jnp.einsum("gecf,efd->gecd", h, wo)  # (G, E, C, d)
+
+    def combine_one(yg, idxg, posg, gatesg):
+        # yg: (E, C, d); gather each (token, k) result and gate-sum over k
+        yg_pad = jnp.concatenate([yg, jnp.zeros((e, 1, d), yg.dtype)], axis=1)
+        got = yg_pad[idxg.reshape(-1), posg.reshape(-1)].reshape(s, k, d)
+        return jnp.sum(got * gatesg[..., None].astype(yg.dtype), axis=1)
+
+    out = jax.vmap(combine_one)(y, idx, pos_c, gates)
+    return out, aux
+
+
+def _moe_ffn_onehot(
+    params: Params,
+    x: jax.Array,  # (G, S', d) — S' small (seq/model_shards)
+    cfg: ModelConfig,
+    mcfg: MoEConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """GShard one-hot einsum dispatch/combine — only affordable with
+    local groups (the (S', E, C) one-hot is per-device small), and unlike
+    the scatter path it partitions cleanly under vmap-over-shards: every
+    op is an einsum, GSPMD's strong suit (§Perf iteration 5 v3: the
+    scatter/gather dispatch replicated activations under a sharded vmap).
+    """
+    g, s, d = x.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+    c = capacity(s, mcfg)
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+
+    idx, gates, aux = route(x, asarray(params["router"], jnp.float32), mcfg)
+    pos = jax.vmap(lambda i: _positions_in_expert(i, e))(idx)  # (G, S, k)
+    keep = pos < c
+    gates = jnp.where(keep, gates, 0.0)
+    # dispatch one-hot (G, S, E, C) = [idx==e] x [pos==c], summed over k
+    e_oh = jax.nn.one_hot(idx, e, dtype=x.dtype)  # (G, S, k, E)
+    c_oh = jax.nn.one_hot(jnp.where(keep, pos, c), c, dtype=x.dtype)
+    disp = jnp.einsum("gske,gskc->gsec", e_oh, c_oh)
+    comb = jnp.einsum(
+        "gske,gskc->gsec", e_oh * gates[..., None].astype(x.dtype), c_oh
+    )
+    buf = jnp.einsum("gsec,gsd->gecd", disp, x)
+    wg = asarray(params["w_gate"], x.dtype)
+    wu = asarray(params["w_up"], x.dtype)
+    wo = asarray(params["w_out"], x.dtype)
+    h = act(jnp.einsum("gecd,edf->gecf", buf, wg)) * jnp.einsum(
+        "gecd,edf->gecf", buf, wu
+    )
+    y = jnp.einsum("gecf,efd->gecd", h, wo)
+    out = jnp.einsum("gsec,gecd->gsd", comb, y)
+    return out, aux
+
+
+def moe_ffn_dense(
+    params: Params, x: jax.Array, cfg: ModelConfig, mcfg: MoEConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Reference dropless MoE: every expert on every token, gate-masked.
+
+    O(E/k) more FLOPs than dispatch — used as the numerics oracle in tests
+    (dispatch must match where no token was capacity-dropped).
+    """
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    idx, gates, aux = route(x, asarray(params["router"], jnp.float32), mcfg)
+    wg = asarray(params["w_gate"], x.dtype)
+    wu = asarray(params["w_up"], x.dtype)
+    wo = asarray(params["w_out"], x.dtype)
+    h = act(jnp.einsum("gsd,edf->gsef", x, wg)) * jnp.einsum(
+        "gsd,edf->gsef", x, wu
+    )
+    y = jnp.einsum("gsef,efd->gsed", h, wo)  # (G, S, E, d)
+    dense_gates = jnp.zeros(y.shape[:3], jnp.float32)
+    dense_gates = jax.vmap(
+        lambda dg, i, gt: dg.at[jnp.arange(x.shape[1])[:, None], i].add(gt)
+    )(dense_gates, idx, gates)
+    out = jnp.sum(y * dense_gates[..., None].astype(y.dtype), axis=2)
+    return out, aux

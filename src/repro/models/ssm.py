@@ -1,0 +1,252 @@
+"""Mamba2 block with the SSD (state-space duality) chunked algorithm.
+
+Follows arXiv:2405.21060: the sequence is processed in chunks; within a
+chunk the recurrence is computed in its quadratic "attention-like" dual
+form (MXU-friendly matmuls), and chunk states are stitched with a short
+scan — O(L) total work with O(chunk^2) blocks.
+
+Train/prefill: ``ssd_forward`` (returns final state for decode handoff).
+Decode: ``ssd_step`` — O(1) per token, state (B, H, P, N).
+
+PQS note (DESIGN.md §Arch-applicability): the in/out/x projections are
+ordinary matmuls and take QTensor weights; the SSD recurrence itself
+accumulates decayed fp32 state, not an integer dot product, so sorted
+narrow accumulation does not apply inside the scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import Params, dense_init, lin, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig) -> dict[str, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    d_xbc = d_inner + 2 * s.n_groups * s.d_state
+    return dict(
+        d_inner=d_inner,
+        nheads=nheads,
+        d_xbc=d_xbc,
+        d_in_proj=d_inner + d_xbc + nheads,  # z, xBC, dt
+    )
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    # dt bias initialized so softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(ks[3], (dims["nheads"],), jnp.float32)
+    dt_init = jnp.exp(
+        u * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min)
+    )
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inv softplus
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, dims["d_in_proj"], dt),
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, dims["d_xbc"]), jnp.float32)
+        * (1.0 / s.d_conv) ** 0.5,
+        "conv_b": jnp.zeros((dims["d_xbc"],), jnp.float32),
+        "a_log": jnp.log(
+            jnp.arange(1, dims["nheads"] + 1, dtype=jnp.float32)
+        ),  # A = -exp(a_log), mamba2 default init A in [-1, -H]
+        "dt_bias": dt_bias,
+        "d_skip": jnp.ones((dims["nheads"],), jnp.float32),
+        "out_norm": jnp.zeros((dims["d_inner"],), jnp.float32),
+        "out_proj": dense_init(ks[4], dims["d_inner"], cfg.d_model, dt),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B, L, D), w: (K, D)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i]
+        for i in range(k)
+    )
+    return jax.nn.silu(out + b).astype(xbc.dtype)
+
+
+def _ssd_chunked(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) f32, post-softplus
+    a: jax.Array,  # (H,) f32 negative
+    bmat: jax.Array,  # (B, L, G, N)
+    cmat: jax.Array,  # (B, L, G, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    bsz, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc, q = l // chunk, chunk
+    rep = h // g
+
+    # head-broadcast B and C
+    bmat = jnp.repeat(bmat, rep, axis=2)  # (B, L, H, N)
+    cmat = jnp.repeat(cmat, rep, axis=2)
+
+    xt = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = bmat.reshape(bsz, nc, q, h, n)
+    cc = cmat.reshape(bsz, nc, q, h, n)
+
+    da = dtc * a  # (B, nc, q, H) negative decay increments
+    cs = jnp.cumsum(da, axis=2)  # within-chunk cumulative decay
+    tot = cs[:, :, -1:, :]  # (B, nc, 1, H)
+
+    # ---- intra-chunk (dual quadratic form) ----
+    # L[i, j] = exp(cs_i - cs_j) for i >= j
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,q_i,q_j,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", cc.astype(jnp.float32),
+                    bc.astype(jnp.float32))
+    att = cb * decay * dtc[:, :, None, :, :]  # weight dt_j on column j
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", att, xt.astype(jnp.float32))
+
+    # ---- chunk states ----
+    # S_c = sum_j exp(tot - cs_j) * dt_j * B_j ⊗ x_j   (B,nc,H,P,N)
+    decay_to_end = jnp.exp(tot - cs)  # (B, nc, q, H)
+    wx = xt.astype(jnp.float32) * (decay_to_end * dtc)[..., None]
+    s_chunk = jnp.einsum("bcqhp,bcqhn->bchpn", wx, bc.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence over nc ----
+    chunk_decay = jnp.exp(tot[:, :, 0, :])  # (B, nc, H)
+    init = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def scan_body(carry, inp):
+        s_c, dec = inp  # (B,H,P,N), (B,H)
+        prev = carry
+        new = dec[:, :, None, None] * prev + s_c
+        return new, prev  # emit state *before* this chunk
+
+    final, prev_states = jax.lax.scan(
+        scan_body,
+        init,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, P, N)
+
+    # ---- off-diagonal: carry-in state contribution ----
+    cin = cc.astype(jnp.float32) * jnp.exp(cs)[..., None]  # (B,nc,q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp", cin, prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), final
+
+
+def mamba_forward(
+    params: Params,
+    x: jax.Array,  # (B, L, d_model)
+    cfg: ModelConfig,
+    h0: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba2 block. Returns (out, final_ssd_state)."""
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    bsz, l, _ = x.shape
+    hh, pp = dims["nheads"], s.head_dim
+
+    zxbcdt = lin(x, params["in_proj"])
+    z, xbc, dtv = jnp.split(
+        zxbcdt, [dims["d_inner"], dims["d_inner"] + dims["d_xbc"]], axis=-1
+    )
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xi, bmat, cmat = jnp.split(
+        xbc, [dims["d_inner"], dims["d_inner"] + s.n_groups * s.d_state], axis=-1
+    )
+    dtv = jax.nn.softplus(
+        dtv.astype(jnp.float32) + params["dt_bias"]
+    )  # (B, L, H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+
+    xh = xi.reshape(bsz, l, hh, pp)
+    bmat = bmat.reshape(bsz, l, s.n_groups, s.d_state)
+    cmat = cmat.reshape(bsz, l, s.n_groups, s.d_state)
+
+    chunk = min(s.chunk, l)
+    y, final = _ssd_chunked(xh, dtv, a, bmat, cmat, chunk, h0)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, l, dims["d_inner"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["out_norm"])
+    return lin(y, params["out_proj"]), final
+
+
+def empty_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    return {
+        "ssd": jnp.zeros(
+            (batch, dims["nheads"], s.head_dim, s.d_state), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, s.d_conv - 1, dims["d_xbc"]), dtype),
+    }
+
+
+def mamba_step(
+    params: Params,
+    x: jax.Array,  # (B, 1, d_model)
+    cache: dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """O(1) single-token decode step."""
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    bsz = x.shape[0]
+    hh, pp = dims["nheads"], s.head_dim
+
+    zxbcdt = lin(x[:, 0], params["in_proj"])  # (B, d_in_proj)
+    z, xbc, dtv = jnp.split(
+        zxbcdt, [dims["d_inner"], dims["d_inner"] + dims["d_xbc"]], axis=-1
+    )
+    # conv ring: window = last (d_conv-1) inputs + current
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,K,D)
+    conv_out = jnp.einsum(
+        "bkd,kd->bd", win.astype(jnp.float32), params["conv_w"]
+    )
+    xbc_c = jax.nn.silu(conv_out + params["conv_b"]).astype(x.dtype)
+    new_conv = win[:, 1:, :]
+
+    xi, bmat, cmat = jnp.split(
+        xbc_c, [dims["d_inner"], dims["d_inner"] + s.n_groups * s.d_state],
+        axis=-1,
+    )
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    rep = hh // s.n_groups
+
+    xh = xi.reshape(bsz, hh, pp).astype(jnp.float32)
+    bm = jnp.repeat(
+        bmat.reshape(bsz, s.n_groups, s.d_state), rep, axis=1
+    ).astype(jnp.float32)
+    cm = jnp.repeat(
+        cmat.reshape(bsz, s.n_groups, s.d_state), rep, axis=1
+    ).astype(jnp.float32)
+
+    da = jnp.exp(dtv * a)  # (B, H)
+    h_new = (
+        da[:, :, None, None] * cache["ssd"]
+        + (dtv[:, :, None] * xh)[..., None] * bm[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, cm)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, dims["d_inner"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["out_norm"])
+    out = lin(y, params["out_proj"])[:, None, :]
+    return out, {"ssd": h_new, "conv": new_conv}

@@ -1,0 +1,8 @@
+from repro.optim.optim import (  # noqa: F401
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    linear_warmup,
+    sgd_momentum,
+)

@@ -1,0 +1,178 @@
+"""From-scratch optimizers: AdamW, SGD+momentum, schedules, gradient clip.
+
+Functional style: an optimizer is a pair (init_fn, update_fn) over pytrees.
+Optimizer state mirrors the param tree leaf-for-leaf, so pjit shards it
+exactly like the params (ZeRO-3: sharded first/second moments).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # i32 scalar
+    mu: Pytree  # first moment (or momentum buffer)
+    nu: Optional[Pytree]  # second moment (None for SGD)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], OptState]
+    update: Callable[[Pytree, OptState, Pytree], tuple[Pytree, OptState]]
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def linear_warmup(base_lr: float, warmup_steps: int) -> Callable:
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return base_lr * frac
+
+    return fn
+
+
+def cosine_schedule(
+    base_lr: float, total_steps: int, warmup_steps: int = 0,
+    final_frac: float = 0.1,
+) -> Callable:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup_steps, warm, cos)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# gradient clipping
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree
+    ), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    lr: float | Callable = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jax.tree_util.tree_map(  # noqa: E731
+            lambda a: jnp.zeros(a.shape, jnp.float32), p
+        )
+        return OptState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            dp = mh / (jnp.sqrt(vh) + eps)
+            # decoupled weight decay on >=2-D leaves only (skip norms/bias)
+            if p.ndim >= 2:
+                dp = dp + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * dp).astype(p.dtype)
+            return new_p, m, v
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, OptState(step, new_m, new_v)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+def sgd_momentum(
+    lr: float | Callable = 1e-2,
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = None,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        mu = jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), params
+        )
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay and p.ndim >= 2:
+                g = g + weight_decay * p.astype(jnp.float32)
+            m = momentum * m + g
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            OptState(step, treedef.unflatten([o[1] for o in out]), None),
+        )
+
+    return Optimizer(init, update)

@@ -1,0 +1,175 @@
+"""Fault tolerance runtime: checkpoint/restart, stragglers, elastic re-mesh.
+
+Production framing (DESIGN.md §6), CPU-simulatable components:
+
+- ``TrainSupervisor`` — drives a train step under failure: on an injected
+  or real exception it restores the latest checkpoint and resumes, with
+  bounded restarts. Data-iterator state is checkpointed too, so restart
+  replays no batch twice.
+- ``StragglerMonitor`` — per-step deadline from a rolling p50×k rule; on a
+  real fleet the signal piggybacks on the existing all-reduce (no extra
+  collectives): each host contributes its last step time into a tiny
+  padded lane of the gradient buffer; slow hosts are flagged for preemptive
+  re-scheduling. Here the aggregation is simulated over reported times.
+- ``elastic_remesh`` — rebuild a smaller/larger mesh after losing or
+  gaining hosts and re-shard a checkpointed state onto it. The batch axis
+  shrinks; training resumes at the same step with the same params (tested
+  at toy scale on CPU devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests: fail at given steps."""
+
+    def __init__(self, fail_at: set[int]):
+        self.fail_at = set(fail_at)
+        self.failures = 0
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.failures += 1
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    times: dict[int, float]  # host -> seconds
+    stragglers: list[int]
+    deadline: float
+
+
+class StragglerMonitor:
+    """Rolling-median deadline straggler detection.
+
+    A host is a straggler when its step time exceeds ``k`` x the rolling
+    median of the fleet. Mitigation hooks: the supervisor can drop the
+    host from the mesh (elastic_remesh) or re-dispatch its shard.
+    """
+
+    def __init__(self, k: float = 2.0, window: int = 32):
+        self.k = k
+        self.history: deque[float] = deque(maxlen=window)
+
+    def observe(self, step: int, host_times: dict[int, float]) -> StragglerReport:
+        med = float(np.median(list(host_times.values())))
+        self.history.append(med)
+        deadline = self.k * float(np.median(self.history))
+        stragglers = [h for h, t in host_times.items() if t > deadline]
+        return StragglerReport(step, host_times, stragglers, deadline)
+
+
+def elastic_remesh(
+    state: Any,
+    make_mesh: Callable[[int], jax.sharding.Mesh],
+    new_num_devices: int,
+    sharding_rule: Callable[[jax.sharding.Mesh], Any],
+) -> tuple[Any, jax.sharding.Mesh]:
+    """Re-shard ``state`` onto a mesh over ``new_num_devices``.
+
+    ``sharding_rule(mesh)`` returns a pytree of NamedShardings matching
+    ``state`` (same rule used at startup, evaluated on the new mesh) —
+    shrink/grow happens purely through the mesh shape.
+    """
+    mesh = make_mesh(new_num_devices)
+    shardings = sharding_rule(mesh)
+    flat_s, tdef = jax.tree_util.tree_flatten(shardings)
+    flat_x = tdef.flatten_up_to(state)
+    out = [jax.device_put(np.asarray(x), s) for x, s in zip(flat_x, flat_s)]
+    return jax.tree_util.tree_unflatten(tdef, out), mesh
+
+
+class TrainSupervisor:
+    """Checkpoint/restart training driver with bounded restarts.
+
+    step_fn(state, batch) -> (state, metrics); state is any pytree.
+    data_state/data_restore checkpoint the input pipeline position.
+    """
+
+    def __init__(
+        self,
+        ckpt_dir: str,
+        step_fn: Callable,
+        ckpt_every: int = 50,
+        max_restarts: int = 5,
+        failure_injector: Optional[FailureInjector] = None,
+    ):
+        self.ckpt_dir = ckpt_dir
+        self.step_fn = step_fn
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.injector = failure_injector
+        self.restarts = 0
+        self.step_times: list[float] = []
+
+    def run(
+        self,
+        state: Any,
+        next_batch: Callable[[], Any],
+        num_steps: int,
+        data: Any = None,  # object with .state()/.restore() (TokenStream)
+        start_step: int = 0,
+    ) -> tuple[Any, int]:
+        step = start_step
+        # resume if a checkpoint exists
+        if latest_step(self.ckpt_dir) is not None:
+            payload, ck_step = restore_checkpoint(
+                self.ckpt_dir, self._payload(state, data)
+            )
+            state = payload["state"]
+            if data is not None:
+                data.restore(
+                    {"step": int(payload["data_step"]), "seed": 0, "host_id": 0}
+                )
+            step = ck_step
+
+        while step < num_steps:
+            try:
+                if self.injector is not None:
+                    self.injector.maybe_fail(step)
+                t0 = time.perf_counter()
+                batch = next_batch()
+                state, _metrics = self.step_fn(state, batch)
+                self.step_times.append(time.perf_counter() - t0)
+                step += 1
+                if step % self.ckpt_every == 0 or step == num_steps:
+                    save_checkpoint(
+                        self.ckpt_dir, step, self._payload(state, data)
+                    )
+            except RuntimeError:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                ck = latest_step(self.ckpt_dir)
+                if ck is None:
+                    step = start_step  # restart from scratch
+                    continue
+                payload, step = restore_checkpoint(
+                    self.ckpt_dir, self._payload(state, data)
+                )
+                state = payload["state"]
+                if data is not None:
+                    data.restore(
+                        {"step": int(payload["data_step"]), "seed": 0, "host_id": 0}
+                    )
+        return state, step
+
+    @staticmethod
+    def _payload(state: Any, data: Any) -> dict:
+        return {
+            "state": state,
+            "data_step": np.asarray(data.step if data is not None else 0),
+        }

@@ -1,0 +1,137 @@
+"""Batched serving engine: slot-based continuous batching over decode steps.
+
+The engine owns a batch of ``num_slots`` sequence slots backed by one
+batched KV/SSM cache pytree (batch = slot axis). Requests are admitted
+into free slots, prefilled, then advanced together by a single jitted
+decode step per token — the slot axis stays fully batched no matter how
+requests arrive/finish (continuous batching). Finished slots are freed and
+refilled from the queue.
+
+Prefill here feeds the prompt through the decode path token-by-token into
+the slot's cache. That is the universally-correct path across all five
+architecture families (attention KV, SSM state, hybrid, cross-attn);
+the batched one-shot prefill used at scale is exercised by
+``launch/dryrun.py``'s prefill cells, where it matters for the roofline.
+
+Sampling: greedy or temperature; per-slot RNG for reproducibility.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        model: Model,
+        params: Any,
+        num_slots: int = 8,
+        max_len: int = 512,
+        cache_dtype=jnp.float32,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.caches = model.init_caches(params, num_slots, max_len, cache_dtype)
+        self.slots: list[Optional[Request]] = [None] * num_slots
+        self.queue: list[Request] = []
+        self._next_token = np.zeros((num_slots, 1), np.int32)
+        self._budget = np.zeros(num_slots, np.int64)
+        self._rng = np.random.default_rng(seed)
+
+        def step(params, tok, caches):
+            return model.decode(params, tok, caches)
+
+        self._step = jax.jit(step)
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.num_slots):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[slot] = req
+                self._prefill(slot, req)
+
+    def _prefill(self, slot: int, req: Request) -> None:
+        """Feed the prompt through the decode path into this slot's cache.
+
+        The batched cache is advanced with the *other* slots' tokens held
+        at their last value; only this slot's cache lanes change for those
+        steps because each slot's cache row is independent along batch.
+        """
+        for t in req.prompt[:-1]:
+            tok = self._next_token.copy()
+            tok[slot, 0] = int(t)
+            logits, self.caches = self._step(
+                self.params, jnp.asarray(tok), self.caches
+            )
+        self._next_token[slot, 0] = int(req.prompt[-1])
+        self._budget[slot] = req.max_new_tokens
+
+    # -- decode loop ----------------------------------------------------------
+
+    def _sample(self, logits: np.ndarray, slot: int) -> int:
+        req = self.slots[slot]
+        row = logits[slot, -1]
+        if req.temperature <= 0:
+            return int(row.argmax())
+        z = row / req.temperature
+        z = z - z.max()
+        p = np.exp(z) / np.exp(z).sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    def step(self) -> int:
+        """One batched decode step. Returns number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        logits, self.caches = self._step(
+            self.params, jnp.asarray(self._next_token), self.caches
+        )
+        logits = np.asarray(logits.astype(jnp.float32))
+        for slot in active:
+            req = self.slots[slot]
+            nxt = self._sample(logits, slot)
+            req.output.append(nxt)
+            self._next_token[slot, 0] = nxt
+            self._budget[slot] -= 1
+            if self._budget[slot] <= 0 or (
+                req.eos_id is not None and nxt == req.eos_id
+            ):
+                req.done = True
+                self.slots[slot] = None
+        return len(active)
+
+    def drain(self, requests: list[Request], max_steps: int = 100_000) -> None:
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break

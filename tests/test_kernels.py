@@ -1,0 +1,143 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pruning import nm_prune_mask
+from repro.kernels import ops, ref
+from repro.kernels.bitonic import (
+    bitonic_sort,
+    pairwise_round_bitonic,
+    sorted_order_bitonic,
+)
+from repro.core.sorted_accum import pairwise_round, sorted_order
+
+
+@pytest.mark.parametrize("n", [2, 8, 64, 256])
+def test_bitonic_matches_sort(n, rng):
+    x = jnp.asarray(rng.integers(-(2**28), 2**28, (6, n)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(bitonic_sort(x)), np.sort(np.asarray(x), -1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(bitonic_sort(x, ascending=False)),
+        np.sort(np.asarray(x), -1)[..., ::-1],
+    )
+
+
+def test_bitonic_with_duplicates():
+    x = jnp.asarray([[3, 3, 1, 1, 2, 2, 0, 0]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(bitonic_sort(x))[0], [0, 0, 1, 1, 2, 2, 3, 3]
+    )
+
+
+def test_bitonic_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        bitonic_sort(jnp.zeros((2, 12), jnp.int32))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_pairwise_bitonic_equals_core(seed):
+    r = np.random.default_rng(seed)
+    p = jnp.asarray(r.integers(-(2**20), 2**20, (3, 64)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(pairwise_round(p)), np.asarray(pairwise_round_bitonic(p))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sorted_order(p, 2)), np.asarray(sorted_order_bitonic(p, 2))
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [(16, 64, 16, 8, 8, 32), (32, 128, 24, 16, 8, 64), (7, 50, 9, 8, 8, 32)],
+)
+def test_quant_matmul_sweep(m, k, n, bm, bn, bk, rng):
+    x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 127, (k, n)), jnp.int8)
+    out = ops.quant_matmul(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.quant_matmul_ref(x, w))
+    )
+
+
+@pytest.mark.parametrize("acc_bits", [12, 16, 20])
+@pytest.mark.parametrize("rounds", [1, 2])
+def test_sorted_matmul_sweep(acc_bits, rounds, rng):
+    x = jnp.asarray(rng.integers(0, 127, (8, 64)), jnp.int8)  # post-ReLU
+    w = jnp.asarray(rng.integers(-127, 127, (12, 64)), jnp.int8)
+    out = ops.sorted_matmul(
+        x, w, acc_bits=acc_bits, rounds=rounds, bm=4, bn=4, bk=32
+    )
+    expect = ref.sorted_matmul_ref(
+        x, w, acc_bits=acc_bits, rounds=rounds, k_tile=32
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_sorted_matmul_ragged_padding(rng):
+    """Zero padding must be inert through sort + saturation."""
+    x = jnp.asarray(rng.integers(-50, 50, (5, 48)), jnp.int8)
+    w = jnp.asarray(rng.integers(-50, 50, (6, 48)), jnp.int8)
+    out = ops.sorted_matmul(x, w, acc_bits=18, bm=4, bn=4, bk=16)
+    expect = ref.sorted_matmul_ref(x, w, acc_bits=18, rounds=1, k_tile=16)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_clip_matmul_matches_ref(rng):
+    x = jnp.asarray(rng.integers(0, 127, (6, 64)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 127, (10, 64)), jnp.int8)
+    out = ops.clip_matmul(x, w, acc_bits=14, bm=2, bn=2, bk=32)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.clip_matmul_ref(x, w, acc_bits=14))
+    )
+
+
+def test_sorted_resolves_transients_where_clip_fails(rng):
+    """End-to-end kernel-level PQS claim: with a narrow accumulator the
+    sorted kernel recovers the exact (wide) result on dot products whose
+    natural order transiently overflows."""
+    x = jnp.asarray(rng.integers(0, 127, (16, 128)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 127, (32, 128)), jnp.int8)
+    wide = np.asarray(ref.quant_matmul_ref(x, jnp.asarray(np.asarray(w).T)))
+    bits = 18
+    qmin, qmax = -(2**17), 2**17 - 1
+    fits = (wide >= qmin) & (wide <= qmax)
+    srt = np.asarray(ops.sorted_matmul(x, w, acc_bits=bits, bm=8, bn=8, bk=128))
+    clp = np.asarray(ops.clip_matmul(x, w, acc_bits=bits, bm=8, bn=8, bk=128))
+    exact_sorted = (srt == wide)[fits].mean()
+    exact_clip = (clp == wide)[fits].mean()
+    assert exact_sorted >= exact_clip
+    assert exact_sorted > 0.999  # sorting eliminates ~all transients
+
+
+@pytest.mark.parametrize("n_keep,m_group", [(4, 16), (8, 16), (2, 8)])
+def test_nm_spmm_sweep(n_keep, m_group, rng):
+    n, k = 16, 128
+    wd = rng.integers(-127, 127, (n, k)).astype(np.int8)
+    mask = np.asarray(nm_prune_mask(jnp.asarray(wd, jnp.float32), n_keep, m_group))
+    wd = (wd * mask).astype(np.int8)
+    vals, idx = ops.compress_nm_weights(wd, n_keep, m_group)
+    x = jnp.asarray(rng.integers(-127, 127, (12, k)), jnp.int8)
+    out = ops.nm_spmm(x, vals, idx, m_group=m_group, bm=4, bn=8, bg=2)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(ref.quant_matmul_ref(x, jnp.asarray(wd.T))),
+    )
+
+
+def test_nm_spmm_bandwidth_model():
+    """The compressed form streams n_keep/m of the dense weight bytes —
+    the decode-bandwidth saving in DESIGN.md §2 (plus small index cost)."""
+    n, k, n_keep, m = 128, 1024, 4, 16
+    dense_bytes = n * k  # int8
+    vals_bytes = n * (k // m) * n_keep
+    idx_bytes = n * (k // m) * n_keep  # int8-packable positions (< m = 16)
+    assert vals_bytes == dense_bytes * n_keep / m
+    assert (vals_bytes + idx_bytes) <= dense_bytes / 2

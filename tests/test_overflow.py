@@ -1,0 +1,98 @@
+"""Tests for the overflow-analysis library (paper §3.1, §5.0.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.overflow import (
+    Census,
+    accumulate,
+    census,
+    matmul_census,
+    partial_products,
+    quantized_matmul_sim,
+)
+from repro.core.quant import qrange
+
+
+def test_census_classification():
+    # persistent: sum 300 > 127; transient: runs to 180 then back to 50;
+    # clean: stays inside.
+    prods = jnp.asarray(
+        [[100, 100, 100], [120, 60, -130], [10, 20, 30]], jnp.int32
+    )
+    c = census(prods, acc_bits=8)
+    assert int(c.n_dots) == 3
+    assert int(c.n_persistent) == 1
+    assert int(c.n_transient) == 1
+    assert int(c.n_any) == 2
+
+
+def test_transient_not_counted_if_final_overflows():
+    # runs beyond range AND final out of range -> persistent only
+    prods = jnp.asarray([[120, 120, -10]], jnp.int32)
+    c = census(prods, acc_bits=8)
+    assert int(c.n_persistent) == 1 and int(c.n_transient) == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(-200, 200), min_size=1, max_size=32))
+def test_property_census_vs_bruteforce(vals):
+    acc_bits = 9
+    qmin, qmax = qrange(acc_bits)
+    run, any_ovf = 0, False
+    for v in vals:
+        run += v
+        any_ovf |= not (qmin <= run <= qmax)
+    persistent = not (qmin <= run <= qmax)
+    c = census(jnp.asarray([vals], jnp.int32), acc_bits)
+    assert int(c.n_persistent) == int(persistent)
+    assert int(c.n_transient) == int(any_ovf and not persistent)
+
+
+def test_accumulate_policies_agree_when_no_overflow(rng):
+    prods = jnp.asarray(rng.integers(-10, 10, (8, 64)), jnp.int32)
+    exact = np.asarray(prods.sum(-1))
+    for policy in ("wide", "clip", "wrap", "sorted", "sorted_tiled",
+                   "sorted_tiled_seq"):
+        out = accumulate(prods, 20, policy, k_tile=16)
+        np.testing.assert_array_equal(np.asarray(out), exact, err_msg=policy)
+
+
+def test_sorted_beats_clip_under_transients():
+    prods = jnp.asarray([[120, 60, -120]], jnp.int32)
+    clip = int(accumulate(prods, 8, "clip")[0])
+    srt = int(accumulate(prods, 8, "sorted")[0])
+    assert srt == 60 and clip != 60
+
+
+def test_quantized_matmul_sim_matches_matmul_when_wide(rng):
+    wq = jnp.asarray(rng.integers(-127, 127, (24, 96)), jnp.int32)
+    xq = jnp.asarray(rng.integers(-127, 127, (10, 96)), jnp.int32)
+    out = quantized_matmul_sim(wq, xq, 30, "wide")
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(xq @ wq.T)
+    )
+    # batch chunking must not change results
+    out2 = quantized_matmul_sim(wq, xq, 30, "wide", batch_chunk=3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_matmul_census_counts_all_dots(rng):
+    wq = jnp.asarray(rng.integers(-127, 127, (16, 32)), jnp.int32)
+    xq = jnp.asarray(rng.integers(0, 127, (20, 32)), jnp.int32)
+    c = matmul_census(wq, xq, acc_bits=12, batch_chunk=7)
+    assert int(c.n_dots) == 16 * 20
+    assert int(c.n_any) >= int(c.n_transient)
+
+
+def test_partial_products_shape(rng):
+    wq = jnp.asarray(rng.integers(-5, 5, (3, 7)), jnp.int32)
+    xq = jnp.asarray(rng.integers(-5, 5, (2, 7)), jnp.int32)
+    p = partial_products(wq, xq)
+    assert p.shape == (2, 3, 7)
+    np.testing.assert_array_equal(
+        np.asarray(p.sum(-1)), np.asarray(xq @ wq.T)
+    )

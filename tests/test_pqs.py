@@ -1,0 +1,129 @@
+"""PQS orchestration tests: schedules, QuantLinear paths, paper nets."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper import MLP1, MLP2, CONVNET
+from repro.core.papernets import (
+    evaluate_fp32,
+    evaluate_int,
+    freeze_net,
+    init_papernet,
+    overflow_profile,
+    papernet_fwd,
+    pqs_layer_mask,
+    train_papernet,
+)
+from repro.core.pqs import (
+    PQSConfig,
+    build_schedule,
+    quant_linear_freeze,
+    quant_linear_init,
+    quant_linear_int_fwd,
+    quant_linear_train_fwd,
+)
+from repro.core.pruning import sparsity
+from repro.data import synth_mnist
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_pqs_config_validation():
+    PQSConfig().validate()
+    with pytest.raises(AssertionError):
+        PQSConfig(acc_bits=31).validate()
+    with pytest.raises(AssertionError):
+        PQSConfig(policy="bogus").validate()
+    assert PQSConfig(n_keep=4, m=16).sparsity == 0.75
+
+
+def test_pq_schedule_structure():
+    cfg = PQSConfig(n_keep=8, m=16, order="pq")  # 50% target
+    sched = build_schedule(cfg, total_epochs=20, prune_every=2, fp32_frac=0.5)
+    assert len(sched) == 20
+    # FP32 epochs first, QAT afterwards
+    assert not sched[0].quantizing and sched[10].quantizing
+    prunes = [p for p in sched if p.n_keep is not None]
+    assert prunes  # pruning happens during FP32 phase
+    assert all(p.epoch < 10 for p in prunes)
+    assert prunes[-1].n_keep == 8
+
+
+def test_qp_schedule_quantizes_throughout():
+    cfg = PQSConfig(order="qp")
+    sched = build_schedule(cfg, total_epochs=10, prune_every=2)
+    assert all(p.quantizing for p in sched)
+
+
+def test_quant_linear_train_vs_int_consistency(rng):
+    """After freezing, the integer path with a wide accumulator must agree
+    with the fake-quant training forward (same quantization grids)."""
+    cfg = PQSConfig(weight_bits=8, act_bits=8, acc_bits=24, n_keep=16, m=16,
+                    policy="wide")
+    params = quant_linear_init(KEY, 64, 32)
+    x = jnp.asarray(np.abs(rng.normal(size=(16, 64))), jnp.float32)
+    # observe ranges, then quantizing fwd
+    out_f, params = quant_linear_train_fwd(params, x, cfg, quantizing=True)
+    frozen = quant_linear_freeze(params, cfg)
+    out_i = quant_linear_int_fwd(frozen, x, cfg)
+    np.testing.assert_allclose(
+        np.asarray(out_f), np.asarray(out_i), atol=5e-2, rtol=1e-2
+    )
+
+
+def test_freeze_applies_nm_mask(rng):
+    cfg = PQSConfig(n_keep=4, m=16)
+    params = quant_linear_init(KEY, 64, 8)
+    from repro.core.pruning import nm_prune_mask
+
+    params["mask"] = nm_prune_mask(params["w"], 4, 16)
+    frozen = quant_linear_freeze(params, cfg)
+    wq = np.asarray(frozen["wq"]).reshape(8, 4, 16)
+    assert ((wq != 0).sum(-1) <= 4).all()
+
+
+@pytest.mark.parametrize("kind_cfg", [MLP1, MLP2, CONVNET],
+                         ids=lambda c: c.kind)
+def test_papernet_shapes(kind_cfg):
+    pqs = PQSConfig()
+    layers = init_papernet(KEY, kind_cfg)
+    assert len(layers) == len(pqs_layer_mask(kind_cfg))
+    x = jnp.zeros((4, kind_cfg.in_dim))
+    logits, _ = papernet_fwd(layers, x, kind_cfg, pqs, quantizing=False)
+    assert logits.shape == (4, kind_cfg.num_classes)
+
+
+def test_papernet_training_learns_and_prunes():
+    data = synth_mnist(n=1024, seed=2)
+    pqs = PQSConfig(n_keep=8, m=16, order="pq")
+    res = train_papernet(MLP1, pqs, data, epochs=8, prune_every=2,
+                         fp32_frac=0.75, lr=0.1)
+    assert res.fp32_acc > 0.8  # synthetic set is separable
+    assert float(sparsity(res.layers[0]["mask"])) == pytest.approx(0.5)
+
+
+def test_int_eval_wide_matches_fp32_closely():
+    data = synth_mnist(n=1024, seed=3)
+    pqs = PQSConfig(n_keep=16, m=16, order="pq")  # no pruning
+    res = train_papernet(MLP1, pqs, data, epochs=6, prune_every=2, lr=0.1)
+    _, test = data.split(0.9)
+    fp = evaluate_fp32(res.layers, MLP1, pqs, test)
+    wide = evaluate_int(res.layers, MLP1, pqs, test, "wide", 24, limit=256)
+    assert abs(fp - wide) < 0.08
+
+
+def test_overflow_profile_monotone_in_bits():
+    data = synth_mnist(n=1024, seed=4)
+    pqs = PQSConfig(order="pq")
+    res = train_papernet(MLP1, pqs, data, epochs=6, prune_every=2, lr=0.1)
+    _, test = data.split(0.9)
+    counts = [
+        int(overflow_profile(res.layers, MLP1, pqs, test, bits,
+                             limit=64).n_any)
+        for bits in (12, 16, 20)
+    ]
+    assert counts[0] >= counts[1] >= counts[2]

@@ -1,0 +1,112 @@
+"""Tests for N:M pruning, schedules, compression, and the A2Q baseline."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.a2q import (
+    a2q_fake_quant,
+    a2q_l1_bound,
+    a2q_quantize_project,
+    a2q_sparsity,
+    a2q_violations,
+)
+from repro.core.pruning import (
+    filter_prune_mask,
+    iterative_nm_schedule,
+    low_rank_approx,
+    nm_compress,
+    nm_decompress,
+    nm_prune_mask,
+    sparsity,
+)
+
+
+def test_nm_mask_keeps_largest(rng):
+    w = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+    mask = nm_prune_mask(w, n_keep=4, m=16)
+    groups = np.asarray((w * mask)).reshape(8, 2, 16)
+    orig = np.asarray(w).reshape(8, 2, 16)
+    for r in range(8):
+        for g in range(2):
+            kept = np.nonzero(groups[r, g])[0]
+            assert len(kept) == 4
+            thresh = np.sort(np.abs(orig[r, g]))[-4]
+            assert np.all(np.abs(orig[r, g][kept]) >= thresh - 1e-7)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 16))
+def test_property_nm_sparsity(n_keep):
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(4, 64)), jnp.float32)
+    mask = nm_prune_mask(w, n_keep, 16)
+    assert float(sparsity(mask)) == pytest.approx(1 - n_keep / 16)
+
+
+def test_nm_mask_bad_shapes():
+    w = jnp.ones((4, 30))
+    with pytest.raises(ValueError):
+        nm_prune_mask(w, 4, 16)
+    with pytest.raises(ValueError):
+        nm_prune_mask(jnp.ones((4, 32)), 17, 16)
+
+
+def test_iterative_schedule_reaches_target():
+    steps = iterative_nm_schedule(200, 10, 16, 0.8)
+    epochs, keeps = zip(*steps)
+    assert keeps[-1] == round(16 * 0.2)
+    assert all(a < b for a, b in zip(epochs, epochs[1:]))
+    assert all(a >= b for a, b in zip(keeps, keeps[1:]))
+
+
+def test_compress_roundtrip(rng):
+    w = rng.normal(size=(6, 64)).astype(np.float32)
+    mask = np.asarray(nm_prune_mask(jnp.asarray(w), 4, 16))
+    wp = w * mask
+    vals, idx = nm_compress(wp, 4, 16)
+    assert vals.shape == (6, 4, 4) and idx.shape == (6, 4, 4)
+    np.testing.assert_allclose(nm_decompress(vals, idx, 16), wp)
+
+
+def test_filter_prune_zeroes_rows(rng):
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    mask = filter_prune_mask(w, keep_frac=0.25)
+    row_alive = np.asarray(mask).reshape(16, -1).any(axis=1)
+    assert row_alive.sum() == 4
+
+
+def test_low_rank_exact_at_full_rank(rng):
+    w = jnp.asarray(rng.normal(size=(12, 8)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(low_rank_approx(w, 8)), np.asarray(w), atol=1e-4
+    )
+    w1 = low_rank_approx(w, 1)
+    assert np.linalg.matrix_rank(np.asarray(w1), tol=1e-4) == 1
+
+
+# --- A2Q baseline ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("wb,ab", [(8, 16), (8, 12), (5, 14)])
+def test_a2q_bound_enforced(wb, ab, rng):
+    w = jnp.asarray(rng.normal(size=(32, 256)) * 3.0, jnp.float32)
+    wq, scale = a2q_quantize_project(w, wb, ab)
+    l1 = np.abs(np.asarray(wq)).sum(axis=-1)
+    assert (l1 <= a2q_l1_bound(wb, ab) + 1e-6).all()
+    assert int(a2q_violations(wq, wb, ab)) == 0
+
+
+def test_a2q_induces_sparsity(rng):
+    """Paper §3.1: the L1 bound pulls weights to zero (unstructured)."""
+    w = jnp.asarray(rng.normal(size=(16, 512)), jnp.float32)
+    wq, _ = a2q_quantize_project(w, 8, 12)  # tight accumulator
+    assert float(a2q_sparsity(wq)) > 0.5
+
+
+def test_a2q_fake_quant_identity_when_loose(rng):
+    w = jnp.asarray(rng.normal(size=(8, 16)) * 0.01, jnp.float32)
+    out = a2q_fake_quant(w, 8, 32)  # loose bound: plain per-channel quant
+    err = np.abs(np.asarray(out - w))
+    assert err.max() < 0.01 / 127 + 1e-5

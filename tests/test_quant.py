@@ -1,0 +1,97 @@
+"""Unit + property tests for core/quant.py (paper §2.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quant import (
+    EmaRange,
+    activation_qparams,
+    dequantize,
+    fake_quant,
+    qrange,
+    quantize,
+    quantized_dot_terms,
+    weight_qparams,
+)
+
+
+def test_qrange():
+    assert qrange(8) == (-128, 127)
+    assert qrange(16) == (-32768, 32767)
+
+
+@pytest.mark.parametrize("bits", [4, 5, 6, 7, 8])
+def test_weight_roundtrip_error_bound(bits, rng):
+    w = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    qp = weight_qparams(w, bits)
+    err = jnp.abs(dequantize(quantize(w, qp), qp) - w)
+    assert float(err.max()) <= float(qp.scale) / 2 + 1e-6
+
+
+def test_weight_symmetric_offset_zero(rng):
+    w = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+    assert int(weight_qparams(w, 8).offset) == 0
+
+
+def test_activation_zero_maps_to_integer(rng):
+    x = jnp.asarray(rng.uniform(0.0, 5.0, size=(128,)), jnp.float32)
+    qp = activation_qparams(jnp.min(x), jnp.max(x), 8)
+    z = quantize(jnp.zeros(()), qp)
+    assert float(jnp.abs(dequantize(z, qp))) < 1e-6  # exact zero point
+
+
+@pytest.mark.parametrize("bits", [5, 8])
+def test_activation_range_covers(bits, rng):
+    x = jnp.asarray(rng.uniform(-2.0, 7.0, size=(1000,)), jnp.float32)
+    qp = activation_qparams(jnp.min(x), jnp.max(x), bits)
+    q = quantize(x, qp)
+    qmin, qmax = qrange(bits)
+    assert int(q.min()) >= qmin and int(q.max()) <= qmax
+    err = jnp.abs(dequantize(q, qp) - x)
+    assert float(err.max()) <= float(qp.scale) / 2 + 1e-5
+
+
+def test_fake_quant_ste_gradient(rng):
+    w = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+    qp = weight_qparams(w, 8)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, qp) ** 2))(w)
+    # STE: grad ~= 2*fake_quant(w) inside range (identity through rounding)
+    expect = 2 * fake_quant(w, qp)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expect), rtol=1e-5)
+
+
+def test_ema_range_update():
+    r = EmaRange.init()
+    r = r.update(jnp.asarray([0.0, 10.0]))
+    assert float(r.hi) == pytest.approx(0.1, rel=1e-5)  # 0.99*0 + 0.01*10
+
+
+def test_quantized_dot_terms_match_eq3(rng):
+    """Integer dot + offset correction == dequantized-domain dot (Eq. 3)."""
+    w = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    x = jnp.asarray(rng.uniform(0, 3, size=(64,)), jnp.float32)
+    w_qp = weight_qparams(w, 8)
+    x_qp = activation_qparams(jnp.zeros(()), jnp.max(x), 8)
+    wq, xq = quantize(w, w_qp), quantize(x, x_qp)
+    prods, corr = quantized_dot_terms(wq, xq, x_qp)
+    z_int = (jnp.sum(prods, -1) - corr).astype(jnp.float32)
+    z = z_int * w_qp.scale * x_qp.scale
+    expect = dequantize(wq, w_qp) @ dequantize(xq, x_qp)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(expect), rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.floats(-100, 100, allow_nan=False), min_size=4, max_size=64),
+    st.integers(4, 8),
+)
+def test_property_quantize_within_half_scale(vals, bits):
+    x = jnp.asarray(vals, jnp.float32)
+    qp = weight_qparams(x, bits)
+    err = jnp.abs(dequantize(quantize(x, qp), qp) - x)
+    assert float(err.max()) <= float(qp.scale) / 2 * (1 + 1e-5) + 1e-6

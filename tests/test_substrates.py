@@ -1,0 +1,317 @@
+"""Substrate tests: optimizer, data, checkpoint, fault tolerance, serving,
+qtensor, and the sharding rule engine."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    cleanup,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.core.qtensor import QTensor, quantize_tree, quantize_weight
+from repro.data import TokenStream, make_classification, synth_mnist
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule, sgd_momentum
+from repro.runtime import (
+    FailureInjector,
+    StragglerMonitor,
+    TrainSupervisor,
+    elastic_remesh,
+)
+
+
+# --- optim -------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)  # noqa: E731
+    for _ in range(60):
+        params, state = opt.update(jax.grad(loss)(params), state, params)
+    assert float(loss(params)) < 0.05  # Adam oscillates near the optimum
+    assert int(state.step) == 60
+
+
+def test_sgd_momentum_converges():
+    opt = sgd_momentum(lr=0.05, momentum=0.9)
+    params = jnp.asarray([4.0])
+    state = opt.init(params)
+    for _ in range(150):
+        g = 2 * params
+        params, state = opt.update(g, state, params)
+    assert abs(float(params[0])) < 1e-2
+
+
+def test_weight_decay_skips_1d():
+    opt = adamw(lr=0.0, weight_decay=1.0, max_grad_norm=None)
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    state = opt.init(params)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new, _ = opt.update(zeros, state, params)
+    # lr=0 -> nothing moves regardless; use lr>0 to check decay targeting
+    opt = adamw(lr=0.1, weight_decay=1.0, max_grad_norm=None)
+    state = opt.init(params)
+    new, _ = opt.update(zeros, state, params)
+    assert float(new["w"][0, 0]) < 1.0  # decayed
+    assert float(new["b"][0]) == 1.0  # not decayed
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_schedule(1.0, 100, warmup_steps=10)
+    assert float(fn(jnp.asarray(0))) == 0.0
+    assert float(fn(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(fn(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+# --- data --------------------------------------------------------------------
+
+
+def test_token_stream_deterministic_and_restorable():
+    a = TokenStream(vocab_size=100, seq_len=8, batch_size=2, seed=3)
+    b1, b2 = a.next_batch(), a.next_batch()
+    b = TokenStream(vocab_size=100, seq_len=8, batch_size=2, seed=3)
+    b.restore({"step": 1})
+    np.testing.assert_array_equal(b.next_batch()["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (2, 8)
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_token_stream_host_sharding():
+    h0 = TokenStream(vocab_size=50, seq_len=4, batch_size=2, host_id=0,
+                     num_hosts=2)
+    h1 = TokenStream(vocab_size=50, seq_len=4, batch_size=2, host_id=1,
+                     num_hosts=2)
+    assert not np.array_equal(
+        h0.next_batch()["tokens"], h1.next_batch()["tokens"]
+    )
+
+
+def test_classification_dataset():
+    ds = synth_mnist(n=512, seed=1)
+    assert ds.x.shape == (512, 784) and ds.num_classes == 10
+    tr, te = ds.split(0.75)
+    assert len(tr.x) == 384 and len(te.x) == 128
+    batches = list(tr.batches(64, epochs=1))
+    assert len(batches) == 6
+    # learnable: a linear probe separates classes better than chance
+    xs, ys = tr.x, tr.y
+    means = np.stack([xs[ys == c].mean(0) for c in range(10)])
+    pred = np.argmax(te.x @ means.T, axis=1)
+    assert (pred == te.y).mean() > 0.3  # >> 0.1 chance
+
+
+# --- checkpoint --------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "layer": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+        "step": jnp.asarray(7),
+        "nested": [jnp.ones((4,)), jnp.zeros((2, 2), jnp.bfloat16)],
+    }
+
+
+def test_checkpoint_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        t = _tree()
+        save_checkpoint(d, 5, t)
+        assert latest_step(d) == 5
+        restored, step = restore_checkpoint(d, jax.tree_util.tree_map(
+            jnp.zeros_like, t))
+        assert step == 5
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_shape_check():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4):
+            save_checkpoint(d, s, _tree())
+        cleanup(d, keep=2)
+        assert latest_step(d) == 4
+        assert len(os.listdir(d)) == 2
+        bad = {"layer": {"w": jnp.zeros((9, 9))}, "step": jnp.asarray(0),
+               "nested": [jnp.ones((4,)), jnp.zeros((2, 2), jnp.bfloat16)]}
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, bad)
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d, keep=2)
+        for s in (10, 20, 30):
+            ck.save(s, _tree())
+        ck.wait()
+        assert latest_step(d) == 30
+        assert len(os.listdir(d)) == 2
+
+
+# --- fault tolerance ---------------------------------------------------------
+
+
+def test_supervisor_recovers_from_failures():
+    def step_fn(state, batch):
+        return {"x": state["x"] + batch}, {}
+
+    with tempfile.TemporaryDirectory() as d:
+        inj = FailureInjector({4, 9})
+        sup = TrainSupervisor(d, step_fn, ckpt_every=2, failure_injector=inj,
+                              max_restarts=3)
+        state, step = sup.run(
+            {"x": jnp.asarray(0.0)}, lambda: jnp.asarray(1.0), num_steps=12
+        )
+        assert step == 12 and sup.restarts == 2
+        assert float(state["x"]) == 12.0  # no batch double-counted w/ ckpts?
+
+    # too many failures -> raises
+    with tempfile.TemporaryDirectory() as d:
+        inj = FailureInjector({1, 2, 3, 4, 5})
+        sup = TrainSupervisor(d, step_fn, ckpt_every=100,
+                              failure_injector=inj, max_restarts=2)
+        with pytest.raises(RuntimeError):
+            sup.run({"x": jnp.asarray(0.0)}, lambda: jnp.asarray(1.0), 10)
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(k=2.0, window=8)
+    for step in range(8):
+        rep = mon.observe(step, {0: 0.10, 1: 0.11, 2: 0.09})
+        assert rep.stragglers == []
+    rep = mon.observe(9, {0: 0.10, 1: 0.55, 2: 0.09})
+    assert rep.stragglers == [1]
+
+
+def test_elastic_remesh_reshards():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    state = {"w": jnp.arange(8, dtype=jnp.float32)}
+
+    def make_mesh(n):
+        return jax.make_mesh((n,), ("data",))
+
+    def rule(mesh):
+        return {"w": NamedSharding(mesh, P(None))}
+
+    new_state, mesh = elastic_remesh(state, make_mesh, 1, rule)
+    np.testing.assert_array_equal(np.asarray(new_state["w"]),
+                                  np.asarray(state["w"]))
+
+
+# --- qtensor -----------------------------------------------------------------
+
+
+def test_qtensor_roundtrip_error(rng):
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    qt = quantize_weight(w, bits=8)
+    err = np.abs(np.asarray(qt.dequant(jnp.float32) - w))
+    assert err.max() <= float(qt.scale.max()) / 2 + 1e-6
+
+
+def test_qtensor_nm_pruned(rng):
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    qt = quantize_weight(w, bits=8, n_keep=4, m=16)
+    vals = np.asarray(qt.values).reshape(4, 16, 32)
+    nnz = (vals != 0).sum(axis=1)
+    assert (nnz <= 4).all()  # N:M along the contraction axis
+
+
+def test_quantize_tree_selectivity(rng):
+    tree = {
+        "w": jnp.asarray(rng.normal(size=(512, 256)), jnp.float32),
+        "norm": jnp.ones((256,)),
+        "small": jnp.ones((4, 4)),
+        "ints": jnp.ones((512, 256), jnp.int32),
+    }
+    out = quantize_tree(tree, bits=8, min_size=1024)
+    assert isinstance(out["w"], QTensor)
+    assert not isinstance(out["norm"], QTensor)
+    assert not isinstance(out["small"], QTensor)
+    assert not isinstance(out["ints"], QTensor)
+
+
+def test_quantized_model_end_to_end():
+    """PQS as a serving feature: quantize a whole smoke model's params and
+    check the forward still produces close logits."""
+    from repro.configs import get_config
+    from repro.models.model import build_model
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.zeros((2, 16), jnp.int32),
+        "labels": jnp.zeros((2, 16), jnp.int32),
+    }
+    base = model.forward(params, batch).astype(jnp.float32)
+    qparams = quantize_tree(params, bits=8, min_size=1 << 10, min_dim=16)
+    quant = model.forward(qparams, batch).astype(jnp.float32)
+    # int8 weights: logits close but not identical
+    assert float(jnp.max(jnp.abs(base - quant))) < 0.5
+    assert not (base == quant).all()
+
+
+# --- sharding rule engine ----------------------------------------------------
+
+
+def test_sharding_rules_divisibility():
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+
+    from repro.launch.sharding import param_spec, sanitize
+
+    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    # generic weight: fsdp x model
+    spec = param_spec(mesh, "layers/attn/wq", (28, 1536, 1536))
+    assert spec == P(None, ("pod", "data"), "model")
+    # odd vocab drops fsdp components until divisible
+    spec = param_spec(mesh, "embed", (49155, 1536))
+    assert spec[0] is None
+    # out-type reversed
+    spec = param_spec(mesh, "layers/attn/wo", (28, 1536, 1536))
+    assert spec == P(None, "model", ("pod", "data"))
+    # expert-parallel when divisible
+    spec = param_spec(mesh, "layers/moe/w_gate", (32, 16, 4096, 14336))
+    assert spec[1] == "model"
+    # TP-within-expert fallback when not divisible
+    spec = param_spec(mesh, "layers/moe/w_gate", (32, 40, 1536, 512))
+    assert spec[1] is None and spec[3] == "model"
+    # sanitize drops non-dividing axes
+    assert sanitize(mesh, P("model"), (7,)) == P(None)
+    assert sanitize(mesh, P(("pod", "data")), (4,)) == P("pod")
+
+
+def test_serving_engine_continuous_batching():
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, num_slots=2, max_len=32)
+    reqs = [
+        Request(uid=i, prompt=np.asarray([1, 2, 3], np.int32),
+                max_new_tokens=3 + i)
+        for i in range(5)
+    ]
+    eng.drain(reqs)
+    assert all(r.done for r in reqs)
+    assert [len(r.output) for r in reqs] == [3, 4, 5, 6, 7]
+    # greedy sampling: identical prompts produce identical prefixes
+    assert reqs[0].output == reqs[1].output[:3]
