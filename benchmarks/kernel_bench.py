@@ -16,6 +16,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core.dispatch import pqs_dot
 from repro.core.pruning import nm_prune_mask
 from repro.kernels import ops, ref
 
@@ -63,10 +64,18 @@ def _nm_rows():
 
 
 def run() -> list[dict]:
-    # correctness spot checks (small shapes, interpret mode)
+    # correctness spot checks (small shapes, interpret mode): every policy
+    # through the unified dispatch layer, jnp vs pallas backends
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.integers(0, 127, (8, 128)), jnp.int8)
     w = jnp.asarray(rng.integers(-127, 127, (16, 128)), jnp.int8)
+    for policy in ("wide", "clip", "wrap", "sorted", "sorted_tiled",
+                   "sorted_tiled_seq"):
+        a = pqs_dot(x, w, acc_bits=16, policy=policy, k_tile=64,
+                    backend="jnp")
+        b = pqs_dot(x, w, acc_bits=16, policy=policy, k_tile=64,
+                    backend="pallas", block_m=4, block_n=8)
+        assert (np.asarray(a) == np.asarray(b)).all(), policy
     assert (np.asarray(ops.sorted_matmul(x, w, acc_bits=16, bm=4, bn=8, bk=64))
             == np.asarray(ref.sorted_matmul_ref(x, w, 16, 1, 64))).all()
     wd = rng.integers(-127, 127, (16, 128)).astype(np.int8)

@@ -12,6 +12,14 @@ For each regime reports the minimum accumulator width whose accuracy stays
 within 1% of the FP32 baseline. Reproduced claims: sorting buys ~2-4
 accumulator bits over clipping; PQS reaches narrower accumulators than A2Q
 at equal accuracy; frontier models are highly sparse.
+
+Every integer evaluation here executes through the unified
+``core.dispatch.pqs_dot`` layer (via ``quant_linear_int_fwd``), the same
+entry point the kernels and the serving engine use. For the frontier
+numbers to transfer to serving, the serving ``IntegerLinConfig`` must
+match this sweep's (policy, acc_bits, k_tile, rounds) — note
+``PQSConfig.rounds`` defaults to 2 sorting rounds while
+``IntegerLinConfig.rounds`` defaults to the paper's single round.
 """
 
 from __future__ import annotations

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 offline CI: runs the full test suite exactly as the roadmap
+# specifies. Works from any checkout location, no network, no TPU.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# pythonpath is also set via pyproject.toml [tool.pytest.ini_options];
+# exporting it here keeps bare `python -m pytest` and subprocess tests
+# (launch/dryrun.py) working identically.
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -x -q "$@"

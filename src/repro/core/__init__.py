@@ -1,3 +1,8 @@
 """PQS core: prune, quantize, and sort for low-bitwidth accumulation."""
 
+from repro.core.dispatch import (  # noqa: F401
+    IntegerLinConfig,
+    integer_lin,
+    pqs_dot,
+)
 from repro.core.pqs import PQSConfig  # noqa: F401

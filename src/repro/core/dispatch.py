@@ -1,0 +1,207 @@
+"""Unified accumulation-policy execution: one entry point for every
+quantized dot product in the framework.
+
+``pqs_dot(x, w, ...)`` runs any of the six accumulation policies
+
+    wide | clip | wrap | sorted | sorted_tiled | sorted_tiled_seq
+
+on either execution backend:
+
+  - ``jnp``    — the pure-jnp reference semantics (core.overflow /
+                 core.sorted_accum), exact on any platform;
+  - ``pallas`` — the TPU kernels (kernels/ops.py), interpret-mode on CPU,
+                 compiled on TPU.
+
+The backend is selected automatically by platform (TPU -> pallas,
+otherwise jnp) with an explicit override, and the two are bit-identical
+for every policy (tests/test_dispatch.py sweeps the matrix). Arbitrary
+shapes are handled here once — K is zero-padded to the policy's required
+length (a whole number of k_tile tiles, or a power of two for the global
+sort) for BOTH backends, so order-sensitive policies see the same
+permutation; M is batch-chunked to bound the (chunk, N, K) partial
+products tensor of the jnp backend.
+
+The optional census output classifies natural-order overflow behavior
+(persistent vs transient, paper Fig 2a) from the same partial products
+the jnp backend accumulates — the analysis path no longer re-derives
+them.
+
+``qtensor_dot`` + ``integer_lin`` put the serving stack on this path:
+inside the context, every ``models.layers.lin`` whose weight is a
+QTensor executes as a true integer dot product under the configured
+policy instead of dequantize-then-float-matmul.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.overflow import Census, accumulate, census, partial_products
+from repro.kernels import ops
+
+POLICIES = ops.POLICIES  # derived from the kernel modules — one list
+BACKENDS = ("jnp", "pallas")
+
+
+def default_backend() -> str:
+    """pallas on real TPUs (compiled kernels); jnp reference elsewhere.
+
+    Interpret-mode pallas is semantically identical but far slower than
+    jnp on CPU, so it is opt-in via backend="pallas"."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _validate(policy: str, backend: Optional[str], acc_bits: int,
+              k_tile: int) -> None:
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; expected {POLICIES}")
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if not 2 <= acc_bits <= 30:
+        raise ValueError(f"acc_bits={acc_bits} outside the int32-carrier "
+                         "range [2, 30]")
+    if policy in ("sorted_tiled", "sorted_tiled_seq") and (
+        k_tile <= 0 or k_tile & (k_tile - 1)
+    ):
+        raise ValueError(f"k_tile must be a power of 2, got {k_tile}")
+
+
+def pqs_dot(
+    x: jax.Array,  # (..., K) integer carrier (int8 or int32 holding int8)
+    w: jax.Array,  # (N, K) integer carrier; rows = output channels
+    *,
+    acc_bits: int = 16,
+    policy: str = "wide",
+    k_tile: int = 256,
+    rounds: int = 1,
+    backend: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    block_m: int = 8,
+    block_n: int = 128,
+    batch_chunk: Optional[int] = None,
+    with_census: bool = False,
+):
+    """Quantized dot products with simulated narrow accumulation.
+
+    Returns (..., N) int32 — each element a dot product accumulated into
+    an acc_bits register under ``policy``. With ``with_census=True``
+    returns ``(out, Census)`` where the census classifies natural-order
+    overflows of the same dot products (persistent / transient, Fig 2a).
+
+    Any M/N/K works: padding and batch chunking happen here, not at call
+    sites. ``backend`` overrides the platform default; both backends are
+    bit-identical per policy.
+    """
+    _validate(policy, backend, acc_bits, k_tile)
+    backend = backend or default_backend()
+    if x.shape[-1] != w.shape[-1]:
+        raise ValueError(f"contraction mismatch: {x.shape} vs {w.shape}")
+    lead = x.shape[:-1]
+    k, n = x.shape[-1], w.shape[0]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    # one K-padding rule for both backends: order-sensitive policies must
+    # see the same (padded) permutation domain to be bit-identical
+    kp = ops.padded_k(k, policy, k_tile)
+    if kp != k:
+        x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
+        w = jnp.pad(w, ((0, 0), (0, kp - k)))
+
+    chunk = m if (batch_chunk is None or batch_chunk >= m) else batch_chunk
+    outs = []
+    tot: Optional[Census] = None
+    for i in range(0, m, max(chunk, 1)):
+        xc = x2[i : i + chunk]
+        prods = None
+        if backend == "jnp":
+            prods = partial_products(w, xc)  # (c, N, Kp)
+            outs.append(accumulate(prods, acc_bits, policy, k_tile, rounds))
+        else:
+            outs.append(
+                ops.policy_matmul(
+                    xc, w, policy=policy, acc_bits=acc_bits, k_tile=k_tile,
+                    rounds=rounds, bm=block_m, bn=block_n,
+                    interpret=interpret,
+                )
+            )
+        if with_census:
+            if prods is None:
+                prods = partial_products(w, xc)
+            c = census(prods, acc_bits)
+            tot = c if tot is None else Census(
+                *(a + b for a, b in zip(tot, c))
+            )
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    out = out.reshape(*lead, n)
+    if with_census:
+        return out, tot
+    return out
+
+
+# ---------------------------------------------------------------------------
+# integer execution of QTensor projections (serving path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class IntegerLinConfig:
+    """How ``models.layers.lin`` should execute QTensor weights."""
+
+    policy: str = "sorted_tiled_seq"
+    acc_bits: int = 16
+    k_tile: int = 256
+    rounds: int = 1
+    act_bits: int = 8
+    backend: Optional[str] = None  # None = platform default
+
+
+_INT_LIN: list[IntegerLinConfig] = []
+
+
+def integer_lin_config() -> Optional[IntegerLinConfig]:
+    return _INT_LIN[-1] if _INT_LIN else None
+
+
+@contextlib.contextmanager
+def integer_lin(cfg: Optional[IntegerLinConfig] = None, **kw):
+    """Enable true integer dot products for QTensor projections.
+
+    Inside the context (including jit *tracing* that happens inside it),
+    ``lin(x, QTensor)`` quantizes activations dynamically and runs
+    ``pqs_dot`` under the configured policy instead of dequantizing the
+    weights to float.
+    """
+    _INT_LIN.append(cfg or IntegerLinConfig(**kw))
+    try:
+        yield _INT_LIN[-1]
+    finally:
+        _INT_LIN.pop()
+
+
+def qtensor_dot(x: jax.Array, qt, cfg: IntegerLinConfig) -> jax.Array:
+    """x (..., in) float @ QTensor (in, out) as an integer PQS dot.
+
+    Activations get dynamic symmetric per-tensor quantization (absmax at
+    act_bits); the integer matmul accumulates under cfg.policy at
+    cfg.acc_bits; output is rescaled by the activation scale and the
+    QTensor's per-channel weight scales.
+    """
+    qmax = 2 ** (cfg.act_bits - 1) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    s_x = (amax / qmax).astype(jnp.float32)
+    xq = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / s_x), -qmax - 1, qmax
+    ).astype(jnp.int32)
+    z = pqs_dot(
+        xq, qt.values.T.astype(jnp.int32), acc_bits=cfg.acc_bits,
+        policy=cfg.policy, k_tile=cfg.k_tile, rounds=cfg.rounds,
+        backend=cfg.backend,
+    )
+    zf = z.astype(jnp.float32) * (s_x * qt.scale)
+    return zf.astype(x.dtype)

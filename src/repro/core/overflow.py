@@ -163,17 +163,16 @@ def quantized_matmul_sim(
     """Full quantized matmul with simulated narrow accumulation.
 
     wq: (out, K), xq: (batch, K) -> (batch, out) int32, each output element
-    accumulated under ``policy``. Chunks the batch to bound the
-    (batch, out, K) partial-products tensor.
+    accumulated under ``policy``. Thin wrapper over the unified dispatch
+    layer (jnp reference backend) — kept for the analysis tooling's
+    (weights, activations) argument order.
     """
-    if batch_chunk is None or xq.shape[0] <= batch_chunk:
-        prods = partial_products(wq, xq)
-        return accumulate(prods, acc_bits, policy, k_tile, rounds)
-    outs = []
-    for i in range(0, xq.shape[0], batch_chunk):
-        prods = partial_products(wq, xq[i : i + batch_chunk])
-        outs.append(accumulate(prods, acc_bits, policy, k_tile, rounds))
-    return jnp.concatenate(outs, axis=0)
+    from repro.core.dispatch import pqs_dot  # dispatch builds on this module
+
+    return pqs_dot(
+        xq, wq, acc_bits=acc_bits, policy=policy, k_tile=k_tile,
+        rounds=rounds, backend="jnp", batch_chunk=batch_chunk,
+    )
 
 
 def matmul_census(

@@ -26,7 +26,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import overflow
+from repro.core import dispatch, overflow
 from repro.core.pruning import iterative_nm_schedule, nm_prune_mask
 from repro.core.quant import (
     EmaRange,
@@ -49,6 +49,7 @@ class PQSConfig:
     m: int = 16
     policy: overflow.Policy = "sorted_tiled"  # inference accumulation policy
     k_tile: int = 256
+    rounds: int = 2  # split/sort/pair rounds per sorting stage
     # training schedule: "pq" = prune-then-quantize (paper's winner),
     # "qp" = quantize-then-prune baseline.
     order: str = "pq"
@@ -66,6 +67,7 @@ class PQSConfig:
             "sorted_tiled_seq",
         )
         assert self.order in ("pq", "qp")
+        assert self.rounds >= 1
 
 
 # ---------------------------------------------------------------------------
@@ -108,7 +110,8 @@ def quant_linear_train_fwd(
     if quantizing:
         w_qp = weight_qparams(w, cfg.weight_bits)
         w = fake_quant(w, w_qp)
-        x_qp = activation_qparams(rng.lo, rng.hi, cfg.act_bits)
+        lo, hi = rng.bounds()
+        x_qp = activation_qparams(lo, hi, cfg.act_bits)
         x = fake_quant(x, x_qp)
     y = x @ w.T + params["b"]
     new_params = dict(params)
@@ -128,7 +131,8 @@ def quant_linear_freeze(params: dict[str, Any], cfg: PQSConfig) -> dict[str, Any
     w_qp = weight_qparams(w, cfg.weight_bits)
     wq = quantize(w, w_qp)
     rng: EmaRange = params["act_range"]
-    x_qp = activation_qparams(rng.lo, rng.hi, cfg.act_bits)
+    lo, hi = rng.bounds()
+    x_qp = activation_qparams(lo, hi, cfg.act_bits)
     return {"wq": wq, "w_qp": w_qp, "x_qp": x_qp, "b": params["b"]}
 
 
@@ -149,8 +153,9 @@ def quant_linear_int_fwd(
     xq = quantize(x, x_qp)
     lead = x.shape[:-1]
     xq2 = xq.reshape(-1, xq.shape[-1])
-    z = overflow.quantized_matmul_sim(
-        wq, xq2, cfg.acc_bits, cfg.policy, cfg.k_tile, batch_chunk
+    z = dispatch.pqs_dot(
+        xq2, wq, acc_bits=cfg.acc_bits, policy=cfg.policy,
+        k_tile=cfg.k_tile, rounds=cfg.rounds, batch_chunk=batch_chunk,
     )
     # offset correction: o_x * sum_i w_i^q per output neuron (wide domain)
     corr = x_qp.offset.astype(jnp.int32) * jnp.sum(wq, axis=-1)
@@ -163,7 +168,11 @@ def quant_linear_int_fwd(
 def quant_linear_census(
     frozen: dict[str, Any], x: jax.Array, cfg: PQSConfig
 ) -> overflow.Census:
-    """Overflow census for this layer on a batch (analysis path)."""
+    """Overflow census for this layer on a batch (analysis path).
+
+    Uses the census oracle directly — ``pqs_dot(..., with_census=True)``
+    is for callers that need the accumulated output *and* the census
+    from one partial-products pass."""
     xq = quantize(x, frozen["x_qp"]).reshape(-1, x.shape[-1])
     return overflow.matmul_census(frozen["wq"], xq, cfg.acc_bits)
 

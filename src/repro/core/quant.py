@@ -107,27 +107,45 @@ class EmaRange:
 
     activation ranges are collected during training). Functional update —
     returns the new state rather than mutating.
+
+    ``lo``/``hi`` are the raw zero-initialized EMA; after n updates they
+    underestimate the true range by a factor 1 - decay^n (for decay 0.99
+    that is still ~3x off after 40 steps). ``bounds()`` applies the
+    bias correction — exactly Adam's moment debiasing — and is what every
+    calibration consumer must read.
     """
 
     lo: jax.Array
     hi: jax.Array
     decay: float = 0.99
+    n: jax.Array | float = 0.0
 
     def update(self, x: jax.Array) -> "EmaRange":
         blo, bhi = jnp.min(x), jnp.max(x)
         new_lo = self.decay * self.lo + (1 - self.decay) * blo
         new_hi = self.decay * self.hi + (1 - self.decay) * bhi
-        return EmaRange(new_lo, new_hi, self.decay)
+        # float32 counter: the observer rides inside the param pytree that
+        # jax.grad differentiates, and grad rejects integer inputs.
+        return EmaRange(
+            new_lo, new_hi, self.decay,
+            jnp.asarray(self.n, jnp.float32) + 1.0,
+        )
+
+    def bounds(self) -> tuple[jax.Array, jax.Array]:
+        """Bias-corrected (lo, hi) calibrated range."""
+        n = jnp.asarray(self.n, jnp.float32)
+        corr = jnp.maximum(1.0 - self.decay**n, 1e-8)
+        return self.lo / corr, self.hi / corr
 
     @staticmethod
     def init() -> "EmaRange":
-        return EmaRange(jnp.zeros(()), jnp.zeros(()))
+        return EmaRange(jnp.zeros(()), jnp.zeros(()), n=jnp.zeros(()))
 
 
 jax.tree_util.register_pytree_node(
     EmaRange,
-    lambda e: ((e.lo, e.hi), (e.decay,)),
-    lambda aux, ch: EmaRange(ch[0], ch[1], aux[0]),
+    lambda e: ((e.lo, e.hi, e.n), (e.decay,)),
+    lambda aux, ch: EmaRange(ch[0], ch[1], aux[0], ch[2]),
 )
 
 

@@ -144,7 +144,7 @@ def monotone_accumulate(
 
 
 def tiled_sorted_order(
-    prods: jax.Array, k_tile: int, rounds: int = 2
+    prods: jax.Array, k_tile: int, rounds: int = 2, order_fn=None
 ) -> jax.Array:
     """Paper §6 tiled variant, TPU-adapted: two-level sorted accumulation.
 
@@ -161,13 +161,18 @@ def tiled_sorted_order(
     sums are just K/k_tile scalars, so the pairing itself is cheap.
 
     K must be divisible by k_tile (callers pad with zeros; zeros are inert).
+
+    ``order_fn(tiles, rounds)`` is the intra-tile sort implementation —
+    defaults to the jnp ``sorted_order``; the Pallas kernels pass the
+    bitonic network variant (bit-identical output, hardware-friendly ops)
+    so the pairing permutation below stays one shared code path.
     """
     k = prods.shape[-1]
     if k % k_tile != 0:
         raise ValueError(f"K={k} not divisible by k_tile={k_tile}")
     n_tiles = k // k_tile
     tiles = prods.reshape(*prods.shape[:-1], n_tiles, k_tile)
-    ordered = sorted_order(tiles, rounds)
+    ordered = (order_fn or sorted_order)(tiles, rounds)
     if n_tiles == 1:
         return ordered.reshape(prods.shape)
     # Pairing permutation: positives-descending tiles into even slots,

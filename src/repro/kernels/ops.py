@@ -1,11 +1,20 @@
 """Public jit'd wrappers for the Pallas kernels: padding, dtype plumbing,
 interpret-mode dispatch (CPU container -> interpret=True; real TPU ->
-compiled). This is the layer the rest of the framework calls.
+compiled). This is the layer ``core.dispatch.pqs_dot`` calls for its
+Pallas backend — callers outside kernels/ should go through ``pqs_dot``
+rather than these wrappers, so every quantized matmul shares one
+padding/selection policy.
+
+Shape handling: all entry points accept arbitrary (M, N, K); inputs are
+zero-padded up to block multiples and outputs sliced back. Zero partial
+products are sign-neutral and additively inert at every stage (sort,
+saturation, wraparound), so padding is exact for every accumulation
+policy. For the global-sort policies the *pairing permutation* is
+computed over the padded tile set — dispatch pads identically for the
+jnp backend, so both backends realize the same order.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +24,12 @@ from repro.core.pruning import nm_compress
 from repro.kernels import nm_spmm as _nm
 from repro.kernels import quant_matmul as _qm
 from repro.kernels import sorted_matmul as _sm
+
+POLICIES = _sm.SEQ_POLICIES + _sm.SORT_POLICIES
+
+# Largest K the compiled (non-interpret) global-sort kernels may keep
+# VMEM-resident: 8 * 128 * 4096 * 4 B = 16 MiB for the product cube.
+MAX_RESIDENT_K = 4096
 
 
 def _on_tpu() -> bool:
@@ -29,6 +44,77 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+def padded_k(k: int, policy: str, k_tile: int) -> int:
+    """The K length a policy's kernel actually accumulates over.
+
+    ``sorted`` runs one bitonic stage over the whole axis (power of two);
+    the tiled policies pad to a whole number of k_tile tiles; the
+    unsorted policies need no K padding at all.
+    """
+    if policy == "sorted":
+        return next_pow2(k)
+    if policy in ("sorted_tiled", "sorted_tiled_seq"):
+        return k + ((-k) % k_tile)
+    return k
+
+
+def policy_matmul(
+    x: jax.Array,  # (M, K) integer carrier
+    w: jax.Array,  # (N, K) integer carrier
+    *,
+    policy: str = "wide",
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(M, N) int32 under any accumulation policy, any shape.
+
+    The single Pallas entry point behind ``core.dispatch.pqs_dot``:
+    pads M/N/K to block multiples, picks the K-streaming kernel for
+    order-preserving policies and the K-resident sort kernel for the
+    global-permutation ones, and slices the result back.
+    """
+    assert policy in POLICIES, policy
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = x.shape[0], w.shape[0]
+    kp = padded_k(x.shape[1], policy, k_tile)
+    if policy in _sm.SORT_POLICIES and not interpret and kp > MAX_RESIDENT_K:
+        # compiled sort_matmul keeps the whole K axis VMEM-resident
+        # (bm*bn*K*4 bytes before sort temporaries)
+        raise ValueError(
+            f"policy {policy!r} needs K={kp} VMEM-resident, above the "
+            f"compiled-kernel bound {MAX_RESIDENT_K}; use "
+            "policy='sorted_tiled_seq' (K-streaming) or backend='jnp'"
+        )
+    xp = _pad_to(_pad_to(x, bm, 0), kp, 1)
+    wp = _pad_to(_pad_to(w, kp, 1), bn, 0)
+    if policy in _sm.SORT_POLICIES:
+        out = _sm.sort_matmul(
+            xp, wp, policy=policy, acc_bits=acc_bits, k_tile=k_tile,
+            rounds=rounds, bm=bm, bn=bn, interpret=interpret,
+        )
+    else:
+        # streaming block depth: the sort tile for sorted_tiled_seq, else
+        # a bandwidth-friendly slab that divides the (padded) K
+        bk = k_tile if policy == "sorted_tiled_seq" else min(
+            512, next_pow2(kp)
+        )
+        xp = _pad_to(xp, bk, 1)
+        wp = _pad_to(wp, bk, 1)
+        out = _sm.seq_policy_matmul(
+            xp, wp, policy=policy, acc_bits=acc_bits, rounds=rounds,
+            bm=bm, bn=bn, bk=bk, interpret=interpret,
+        )
+    return out[:m, :n]
 
 
 def quant_matmul(x, w, *, bm=128, bn=128, bk=512, interpret=None):
@@ -49,26 +135,17 @@ def sorted_matmul(
     Zero-padding is exact for the sort semantics: zero partial products are
     sign-neutral and additively inert at every stage.
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    m, n = x.shape[0], w.shape[0]
-    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
-    wp = _pad_to(_pad_to(w, bk, 1), bn, 0)
-    out = _sm.sorted_matmul(
-        xp, wp, acc_bits=acc_bits, rounds=rounds,
-        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    return policy_matmul(
+        x, w, policy="sorted_tiled_seq", acc_bits=acc_bits, k_tile=bk,
+        rounds=rounds, bm=bm, bn=bn, interpret=interpret,
     )
-    return out[:m, :n]
 
 
 def clip_matmul(x, w, *, acc_bits=16, bm=8, bn=128, bk=256, interpret=None):
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    m, n = x.shape[0], w.shape[0]
-    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
-    wp = _pad_to(_pad_to(w, bk, 1), bn, 0)
-    out = _sm.clip_matmul(
-        xp, wp, acc_bits=acc_bits, bm=bm, bn=bn, bk=bk, interpret=interpret
+    return policy_matmul(
+        x, w, policy="clip", acc_bits=acc_bits, k_tile=bk,
+        bm=bm, bn=bn, interpret=interpret,
     )
-    return out[:m, :n]
 
 
 def nm_spmm(

@@ -1,22 +1,38 @@
-"""PQS sorted-accumulation matmul kernel (the paper's core, TPU-adapted).
+"""PQS accumulation-policy matmul kernels (the paper's core, TPU-adapted).
 
-Computes Z = X Wᵀ in int8 with a *simulated narrow accumulator*: each
-output element's K partial products are processed k_tile at a time; within
-a tile they pass one (or more) split/sort/pairwise-add rounds on a bitonic
-sorting network (kernels/bitonic.py), then the re-ordered values are
-accumulated stepwise into a p-bit saturating register. This is the paper
-§6 tiled variant ("tile size k=256 still eliminates 99% of transient
-overflows") — the form compatible with blocked matmul hardware — with the
-sort itself vectorized over the (bm, bn) output block on the VPU.
+Computes Z = X Wᵀ in int8 with a *simulated narrow accumulator* under
+every accumulation policy of ``core.overflow``:
+
+  wide             — int32 MXU accumulation (the conventional baseline)
+  clip             — natural order, saturating add at every step
+  wrap             — natural order, two's-complement wraparound at p bits
+  sorted_tiled_seq — per-k_tile split/sort/pairwise-add rounds on a
+                     bitonic network (kernels/bitonic.py), tiles in
+                     natural order, stepwise saturation (paper §6: "tile
+                     size k=256 still eliminates 99% of transients")
+  sorted           — one full-K sorting stage, then stepwise saturation
+  sorted_tiled     — per-tile sort + sum-ranked tile pairing/interleave
+                     (this repo's beyond-paper refinement)
+
+``seq_policy_matmul`` streams K through the grid (k innermost, output
+block revisited — the blocked-matmul-compatible form); ``sort_matmul``
+keeps the full K axis VMEM-resident because its accumulation order is a
+global permutation of K. The sort itself is vectorized over the (bm, bn)
+output block on the VPU.
 
 VMEM budget: the (bm, bn, bk) partial-product cube dominates at
-bm*bn*bk*4 bytes — default (8, 128, 256) = 1 MiB, inside v5e's 128 MiB
-VMEM alongside the x/w slabs.
+bm*bn*bk*4 bytes — default (8, 128, 256) = 1 MiB, inside v5e's VMEM
+alongside the x/w slabs. For ``sort_matmul`` bk is the whole padded K:
+``kernels/ops.policy_matmul`` refuses compiled (non-interpret) calls
+above ``ops.MAX_RESIDENT_K`` and points callers at the K-streaming
+``sorted_tiled_seq`` policy or the jnp backend.
 
-Semantics are bit-exact with the pure-jnp oracle
-``ref.sorted_matmul_ref`` (= core.overflow 'sorted_tiled_seq' policy):
-stepwise saturation, not cumsum-then-clip, so a mid-tile excursion clips
-exactly like MCU saturation arithmetic would.
+Semantics are bit-exact with the pure-jnp oracles (``ref.py`` /
+``core.overflow.accumulate``): stepwise saturation, not cumsum-then-clip,
+so a mid-tile excursion clips exactly like MCU saturation arithmetic
+would. ``sorted_tiled``'s pairing permutation is literally
+``core.sorted_accum.tiled_sorted_order`` with the bitonic sort plugged
+in, so both backends share one definition of the order.
 """
 
 from __future__ import annotations
@@ -28,32 +44,159 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.quant import qrange
+from repro.core.sorted_accum import tiled_sorted_order
 from repro.kernels.bitonic import sorted_order_bitonic
 
+SEQ_POLICIES = ("wide", "clip", "wrap", "sorted_tiled_seq")
+SORT_POLICIES = ("sorted", "sorted_tiled")
 
-def _kernel(x_ref, w_ref, o_ref, *, acc_bits: int, rounds: int):
+
+def _stepwise(ordered: jax.Array, init: jax.Array, acc_bits: int,
+              saturate: bool) -> jax.Array:
+    """Accumulate (bm, bn, k) values into (bm, bn) p-bit registers, one
+    saturating/wrapping add per step — mirrors monotone_accumulate."""
     qmin, qmax = qrange(acc_bits)
+    span = jnp.int32(2**acc_bits)
 
+    def body(t, acc):
+        nxt = acc + ordered[:, :, t]
+        if saturate:
+            return jnp.clip(nxt, qmin, qmax)
+        return jnp.mod(nxt - qmin, span) + qmin
+
+    return jax.lax.fori_loop(0, ordered.shape[-1], body, init)
+
+
+def _seq_kernel(x_ref, w_ref, o_ref, *, policy: str, acc_bits: int,
+                rounds: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     xb = x_ref[...].astype(jnp.int32)  # (bm, bk)
     wb = w_ref[...].astype(jnp.int32)  # (bn, bk)
+    if policy == "wide":
+        o_ref[...] += jax.lax.dot_general(
+            xb, wb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        return
     prods = xb[:, None, :] * wb[None, :, :]  # (bm, bn, bk) partial products
-    ordered = sorted_order_bitonic(prods, rounds)  # sort stage (VPU)
+    if policy == "sorted_tiled_seq":
+        prods = sorted_order_bitonic(prods, rounds)  # sort stage (VPU)
+    o_ref[...] = _stepwise(prods, o_ref[...], acc_bits,
+                           saturate=(policy != "wrap"))
 
-    def body(t, acc):
-        nxt = acc + ordered[:, :, t]
-        return jnp.clip(nxt, qmin, qmax)  # saturating add, every step
 
-    o_ref[...] = jax.lax.fori_loop(0, ordered.shape[-1], body, o_ref[...])
+def _sort_kernel(x_ref, w_ref, o_ref, *, policy: str, acc_bits: int,
+                 k_tile: int, rounds: int):
+    xb = x_ref[...].astype(jnp.int32)  # (bm, K)
+    wb = w_ref[...].astype(jnp.int32)  # (bn, K)
+    prods = xb[:, None, :] * wb[None, :, :]  # (bm, bn, K)
+    if policy == "sorted":
+        ordered = sorted_order_bitonic(prods, rounds)
+    else:  # sorted_tiled: shared pairing permutation, bitonic intra-tile
+        ordered = tiled_sorted_order(prods, k_tile, rounds,
+                                     order_fn=sorted_order_bitonic)
+    o_ref[...] = _stepwise(ordered, jnp.zeros_like(o_ref), acc_bits,
+                           saturate=True)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("acc_bits", "rounds", "bm", "bn", "bk", "interpret"),
+    static_argnames=("policy", "acc_bits", "rounds", "bm", "bn", "bk",
+                     "interpret"),
 )
+def seq_policy_matmul(
+    x: jax.Array,  # (M, K) int8/int32-carrier activations
+    w: jax.Array,  # (N, K) weights (rows = output channels)
+    *,
+    policy: str = "clip",
+    acc_bits: int = 16,
+    rounds: int = 1,
+    bm: int = 8,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """K-streaming policies: wide | clip | wrap | sorted_tiled_seq.
+
+    For sorted_tiled_seq, bk IS the paper's k_tile (the sort never sees
+    across a block boundary) and must be a power of two for the bitonic
+    network.
+    """
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert policy in SEQ_POLICIES, policy
+    if policy == "sorted_tiled_seq":
+        assert bk & (bk - 1) == 0, f"bk must be a power of 2, got {bk}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    kern = functools.partial(_seq_kernel, policy=policy, acc_bits=acc_bits,
+                             rounds=rounds)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, w)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "acc_bits", "k_tile", "rounds", "bm", "bn",
+                     "interpret"),
+)
+def sort_matmul(
+    x: jax.Array,  # (M, K) int
+    w: jax.Array,  # (N, K) int
+    *,
+    policy: str = "sorted",
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Global-permutation policies: sorted | sorted_tiled (full K resident).
+
+    ``sorted`` requires K to be a power of two (one bitonic stage over the
+    whole axis); ``sorted_tiled`` requires K % k_tile == 0 with k_tile a
+    power of two. Callers (kernels/ops.py) zero-pad — zeros are
+    sign-neutral and additively inert through sort and saturation.
+    """
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert policy in SORT_POLICIES, policy
+    if policy == "sorted":
+        assert k & (k - 1) == 0, f"K must be a power of 2, got {k}"
+    else:
+        assert k_tile & (k_tile - 1) == 0 and k % k_tile == 0, (k, k_tile)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    kern = functools.partial(_sort_kernel, policy=policy, acc_bits=acc_bits,
+                             k_tile=k_tile, rounds=rounds)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, w)
+
+
 def sorted_matmul(
     x: jax.Array,  # (M, K) int8 activations
     w: jax.Array,  # (N, K) int8 weights (rows = output channels)
@@ -65,48 +208,14 @@ def sorted_matmul(
     bk: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """(M, N) int32 carrier holding acc_bits-bit saturated dot products."""
-    m, k = x.shape
-    n, k2 = w.shape
-    assert k == k2, (x.shape, w.shape)
-    assert bk & (bk - 1) == 0, f"bk must be a power of 2 (bitonic), got {bk}"
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    grid = (m // bm, n // bn, k // bk)
-    kern = functools.partial(_kernel, acc_bits=acc_bits, rounds=rounds)
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        interpret=interpret,
-    )(x, w)
+    """(M, N) int32 carrier holding acc_bits-bit saturated dot products
+    under the sorted_tiled_seq policy (bk = k_tile)."""
+    return seq_policy_matmul(
+        x, w, policy="sorted_tiled_seq", acc_bits=acc_bits, rounds=rounds,
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
 
 
-def _clip_kernel(x_ref, w_ref, o_ref, *, acc_bits: int):
-    """Clipping baseline: same tiling, natural order, saturating adds."""
-    qmin, qmax = qrange(acc_bits)
-
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    xb = x_ref[...].astype(jnp.int32)
-    wb = w_ref[...].astype(jnp.int32)
-    prods = xb[:, None, :] * wb[None, :, :]
-
-    def body(t, acc):
-        return jnp.clip(acc + prods[:, :, t], qmin, qmax)
-
-    o_ref[...] = jax.lax.fori_loop(0, prods.shape[-1], body, o_ref[...])
-
-
-@functools.partial(
-    jax.jit, static_argnames=("acc_bits", "bm", "bn", "bk", "interpret")
-)
 def clip_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -117,19 +226,8 @@ def clip_matmul(
     bk: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    m, k = x.shape
-    n, k2 = w.shape
-    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
-    grid = (m // bm, n // bn, k // bk)
-    kern = functools.partial(_clip_kernel, acc_bits=acc_bits)
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        interpret=interpret,
-    )(x, w)
+    """Clipping baseline: natural order, saturating adds."""
+    return seq_policy_matmul(
+        x, w, policy="clip", acc_bits=acc_bits,
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )

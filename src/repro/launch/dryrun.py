@@ -117,6 +117,33 @@ def _shardings_for(mesh, model, kind: str, shape, quantized: bool = False):
     return ins, outs, args
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize jax cost_analysis() output: some versions return a dict,
+    others a per-program list of dicts (take the entry program's)."""
+    if isinstance(cost, dict):
+        return cost
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return {}
+
+
+def _memory_dict(mem) -> dict:
+    """Per-device memory stats; older xla builds lack peak_memory_in_bytes,
+    in which case arguments + outputs + temps is the standard upper bound."""
+    arg = getattr(mem, "argument_size_in_bytes", None)
+    out = getattr(mem, "output_size_in_bytes", None)
+    tmp = getattr(mem, "temp_size_in_bytes", None)
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is None and None not in (arg, out, tmp):
+        peak = arg + out + tmp
+    return {
+        "argument_bytes": arg,
+        "output_bytes": out,
+        "temp_bytes": tmp,
+        "peak_bytes": peak,
+    }
+
+
 def probe_cost(arch: str, shape_name: str) -> dict[str, float]:
     """Trip-exact global HLO flops/bytes: unrolled scans, unchunked attention,
     single logical device, lower-only (never compiled, never allocated)."""
@@ -136,7 +163,7 @@ def probe_cost(arch: str, shape_name: str) -> dict[str, float]:
         args = (params_specs(model), token_specs(cfg, shape),
                 cache_specs(model, shape))
     lowered = jax.jit(step).lower(*args)
-    cost = lowered.cost_analysis()
+    cost = _cost_dict(lowered.cost_analysis())
     return {
         "global_flops": float(cost.get("flops", 0.0)),
         "global_bytes_hlo": float(cost.get("bytes accessed", 0.0)),
@@ -177,7 +204,7 @@ def run_cell(
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled.cost_analysis())
     census = collective_census(compiled.as_text())
     ndev = int(mesh.devices.size)
 
@@ -190,12 +217,7 @@ def run_cell(
         "num_devices": ndev,
         "lower_s": round(t_lower, 1),
         "compile_s": round(t_compile, 1),
-        "memory": {
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
-        },
+        "memory": _memory_dict(mem),
         "cost": {
             "flops_per_device_hlo": cost.get("flops"),
             "bytes_per_device_hlo": cost.get("bytes accessed"),

@@ -16,7 +16,28 @@ gradient all-reduce — which is the standard multi-pod training topology.
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
+
+
+def make_abstract_mesh(
+    shape: Sequence[int], axes: Sequence[str]
+) -> "jax.sharding.AbstractMesh":
+    """Device-free mesh for sharding-rule evaluation, across jax versions.
+
+    jax <= 0.4.x wants ``AbstractMesh(((name, size), ...))`` — a tuple of
+    (name, size) pairs; newer jax takes ``AbstractMesh(shape, axes)``.
+    Passing a bare shape tuple to the old signature raises
+    ``TypeError: 'int' object is not iterable``, so construction is
+    centralized here.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

@@ -207,8 +207,8 @@ def decode_step(
 ) -> tuple[jax.Array, Any]:
     dt = jnp.dtype(cfg.compute_dtype)
     x = asarray(params["embed"], dt)[token]
-    pos = caches["pos"][0]
-    x = x + asarray(params["pos_embed"], dt)[pos][None, None]
+    pos = caches["pos"][0]  # (B,) — layer 0's per-sequence positions
+    x = x + asarray(params["pos_embed"], dt)[pos][:, None]
 
     def body(x, inp):
         p, cache, xkv = inp

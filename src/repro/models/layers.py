@@ -26,7 +26,22 @@ Params = dict[str, Any]
 
 
 def lin(x: jax.Array, w: Any) -> jax.Array:
-    """x @ w with transparent QTensor dequantization (PQS int8 serving)."""
+    """x @ w with transparent QTensor handling (PQS int8 serving).
+
+    Default: dequantize-on-the-fly float matmul (the bandwidth story).
+    Inside a ``core.dispatch.integer_lin`` context, QTensor projections
+    instead run as true integer dot products with simulated narrow
+    accumulation through the unified ``pqs_dot`` layer (the numerics
+    story) — this is how the serving engine executes quantized
+    projections under an accumulation policy.
+    """
+    if not isinstance(w, jax.Array):
+        from repro.core import dispatch
+        from repro.core.qtensor import QTensor
+
+        cfg = dispatch.integer_lin_config()
+        if cfg is not None and isinstance(w, QTensor):
+            return dispatch.qtensor_dot(x, w, cfg)
     return x @ asarray(w, x.dtype)
 
 
@@ -284,7 +299,7 @@ def attention(
 def attention_decode(
     params: Params,
     x: jax.Array,  # (B, 1, d)
-    cache: dict[str, jax.Array],  # {"k","v": (B, S_max, G, hd), "pos": ()}
+    cache: dict[str, jax.Array],  # {"k","v": (B, S_max, G, hd), "pos": (B,)}
     cfg: ModelConfig,
     *,
     window: Optional[int] = None,
@@ -292,14 +307,18 @@ def attention_decode(
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """Single-token decode against a KV cache; returns (out, new_cache).
 
-    The cache position ``pos`` is a traced scalar. Sliding-window layers use
-    a ring buffer of size window (positions wrap), so local-layer caches stay
-    O(window) — the gemma3 long_500k memory story.
+    The cache position ``pos`` is a traced (B,) vector — one write index
+    per sequence, so continuous-batching slots at different depths share
+    one batched cache without leaking into each other. Sliding-window
+    layers use a ring buffer of size window (positions wrap), so
+    local-layer caches stay O(window) — the gemma3 long_500k memory story.
     """
     b, one, d = x.shape
     assert one == 1
     h, g, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    pos = cache["pos"]  # scalar int32 — next write index (tokens so far)
+    pos = cache["pos"]  # (B,) int32 — next write index (tokens so far)
+    if pos.ndim == 0:  # legacy scalar caches: all sequences in lockstep
+        pos = jnp.broadcast_to(pos, (b,))
     s_max = cache["k"].shape[1]
 
     q = lin(x, params["wq"])
@@ -316,18 +335,19 @@ def attention_decode(
         q = rms_norm(q, params["q_norm"])
         k = rms_norm(k, params["k_norm"])
     if use_rope:
-        pvec = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        pvec = pos[:, None].astype(jnp.int32)  # (B, 1) — per-sequence
         if cfg.mrope_sections is not None:
             pvec = jnp.broadcast_to(pvec, (3,) + pvec.shape)
         q = apply_rope(q, pvec, hd, cfg.rope_theta, cfg.mrope_sections)
         k = apply_rope(k, pvec, hd, cfg.rope_theta, cfg.mrope_sections)
 
-    write_idx = jnp.mod(pos, s_max) if window is not None else pos
-    new_k = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, write_idx, 0, 0)
+    write_idx = jnp.mod(pos, s_max) if window is not None else pos  # (B,)
+    rows = jnp.arange(b)
+    new_k = cache["k"].at[rows, write_idx].set(
+        k[:, 0].astype(cache["k"].dtype)
     )
-    new_v = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, write_idx, 0, 0)
+    new_v = cache["v"].at[rows, write_idx].set(
+        v[:, 0].astype(cache["v"].dtype)
     )
 
     rep = h // g
@@ -341,11 +361,11 @@ def attention_decode(
     slot = jnp.arange(s_max)
     if window is not None:
         # ring buffer: valid slots are the last min(pos+1, window) writes
-        age = jnp.mod(write_idx - slot, s_max)  # 0 = newest
-        valid = age < jnp.minimum(pos + 1, window)
+        age = jnp.mod(write_idx[:, None] - slot[None, :], s_max)  # 0 = newest
+        valid = age < jnp.minimum(pos + 1, window)[:, None]  # (B, S_max)
     else:
-        valid = slot <= pos
-    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+        valid = slot[None, :] <= pos[:, None]  # (B, S_max)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     o = jnp.einsum("bgrqk,bkgd->bqgrd", probs, vv)
     out = lin(o.reshape(b, 1, h * hd), params["wo"])
@@ -395,5 +415,5 @@ def empty_kv_cache(
     return {
         "k": jnp.zeros((batch, size, g, hd), dtype),
         "v": jnp.zeros((batch, size, g, hd), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),  # per-sequence write index
     }

@@ -118,6 +118,27 @@ def mamba_lm_decode(params: Params, token: jax.Array, caches, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
+def merge_caches_on_axis(axis: int) -> Callable[[Any, Any, jax.Array], Any]:
+    """Per-sequence cache selector for continuous batching.
+
+    Returns ``merge(old, new, active)`` where ``active`` is a (B,) bool
+    mask over the cache's batch axis: active lanes take the freshly
+    decoded cache, inactive lanes keep their previous state untouched.
+    ``axis`` is where the batch dim lives in every cache leaf (1 for
+    layer-stacked caches, 0 for per-layer cache lists).
+    """
+
+    def merge(old: Any, new: Any, active: jax.Array) -> Any:
+        def sel(o, n):
+            shape = [1] * o.ndim
+            shape[axis] = active.shape[0]
+            return jnp.where(active.reshape(shape), n, o)
+
+        return jax.tree_util.tree_map(sel, old, new)
+
+    return merge
+
+
 @dataclasses.dataclass(frozen=True)
 class Model:
     cfg: ModelConfig
@@ -126,6 +147,9 @@ class Model:
     loss: Callable[..., jax.Array]  # (params, batch) -> scalar
     init_caches: Callable[..., Any]  # (params, batch_size, max_len, dtype)
     decode: Callable[..., tuple]  # (params, token, caches) -> (logits, caches)
+    # (old_caches, new_caches, active (B,) bool) -> caches with inactive
+    # sequences' state preserved — the serving engine's slot isolation.
+    merge_caches: Callable[..., Any] = None
 
 
 def _tokens_or_embeddings(batch: dict) -> jax.Array:
@@ -155,6 +179,8 @@ def build_model(cfg: ModelConfig) -> Model:
             )
             return lm_loss(logits, batch["labels"], aux)
 
+        wins = transformer.layer_windows(cfg)
+        stacked = all(w == wins[0] for w in wins)
         return Model(
             cfg=cfg,
             init=lambda key: transformer.init_params(key, cfg),
@@ -164,6 +190,7 @@ def build_model(cfg: ModelConfig) -> Model:
                 transformer.init_decode_caches(params, cfg, b, L, dt),
             decode=lambda params, tok, caches: transformer.decode_step(
                 cast_for_compute(params, cfg), tok, caches, cfg),
+            merge_caches=merge_caches_on_axis(1 if stacked else 0),
         )
 
     if fam == "audio" or cfg.is_encoder_decoder:
@@ -192,6 +219,7 @@ def build_model(cfg: ModelConfig) -> Model:
                 lambda out: (out[0], {"self": out[1], "cross": caches["cross"]})
             )(encdec.decode_step(cast_for_compute(params, cfg), tok,
                                  caches["self"], caches["cross"], cfg)),
+            merge_caches=merge_caches_on_axis(1),  # {self,cross}: (L,B,...)
         )
 
     if fam == "hybrid":
@@ -211,6 +239,7 @@ def build_model(cfg: ModelConfig) -> Model:
                 hybrid.init_decode_caches(params, cfg, b, L, dt),
             decode=lambda params, tok, caches: hybrid.decode_step(
                 cast_for_compute(params, cfg), tok, caches, cfg),
+            merge_caches=merge_caches_on_axis(0),  # per-layer list: (B,...)
         )
 
     if fam == "ssm":
@@ -229,6 +258,7 @@ def build_model(cfg: ModelConfig) -> Model:
                 mamba_lm_init_caches(params, cfg, b, dt),
             decode=lambda params, tok, caches: mamba_lm_decode(
                 cast_for_compute(params, cfg), tok, caches, cfg),
+            merge_caches=merge_caches_on_axis(1),  # layer-stacked: (L,B,...)
         )
 
     raise ValueError(f"unknown family {fam!r}")

@@ -7,11 +7,19 @@ decode step per token — the slot axis stays fully batched no matter how
 requests arrive/finish (continuous batching). Finished slots are freed and
 refilled from the queue.
 
-Prefill here feeds the prompt through the decode path token-by-token into
-the slot's cache. That is the universally-correct path across all five
-architecture families (attention KV, SSM state, hybrid, cross-attn);
-the batched one-shot prefill used at scale is exercised by
+Prefill feeds the prompt through the decode path token-by-token into the
+slot's cache — all newly admitted slots advance together, one batched
+step per prompt position. That is the universally-correct path across
+all five architecture families (attention KV, SSM state, hybrid,
+cross-attn); the batched one-shot prefill used at scale is exercised by
 ``launch/dryrun.py``'s prefill cells, where it matters for the roofline.
+
+Slot isolation: every jitted step takes an ``active`` (B,) mask and
+merges caches through ``model.merge_caches``, so inactive slots' cache
+lanes (KV, SSM state, per-sequence positions) are bit-identical before
+and after the step. Decode results therefore do not depend on which
+other requests happen to share the batch — greedy decode of a prompt is
+reproducible under any slot occupancy.
 
 Sampling: greedy or temperature; per-slot RNG for reproducibility.
 """
@@ -25,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.models.model import Model
 
 
@@ -49,11 +58,13 @@ class ServingEngine:
         max_len: int = 512,
         cache_dtype=jnp.float32,
         seed: int = 0,
+        int_lin: Optional["dispatch.IntegerLinConfig"] = None,
     ):
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
+        self.int_lin = int_lin
         self.caches = model.init_caches(params, num_slots, max_len, cache_dtype)
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.queue: list[Request] = []
@@ -61,38 +72,81 @@ class ServingEngine:
         self._budget = np.zeros(num_slots, np.int64)
         self._rng = np.random.default_rng(seed)
 
-        def step(params, tok, caches):
-            return model.decode(params, tok, caches)
+        def step(params, tok, caches, active):
+            if self.int_lin is not None:
+                # trace-time context: QTensor projections lower to true
+                # integer dot products through pqs_dot under this policy
+                with dispatch.integer_lin(self.int_lin):
+                    logits, new_caches = model.decode(params, tok, caches)
+            else:
+                logits, new_caches = model.decode(params, tok, caches)
+            return logits, model.merge_caches(caches, new_caches, active)
 
         self._step = jax.jit(step)
+        self._reset = jax.jit(
+            lambda caches, mask: model.merge_caches(
+                caches,
+                jax.tree_util.tree_map(jnp.zeros_like, caches),
+                mask,
+            )
+        )
 
     # -- request lifecycle ---------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new_tokens
+        if total > self.max_len:
+            # past max_len the per-slot write index leaves the cache and
+            # scatters are silently dropped — refuse loudly instead
+            raise ValueError(
+                f"request {req.uid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) = {total} exceeds "
+                f"max_len={self.max_len}"
+            )
         self.queue.append(req)
 
     def _admit(self) -> None:
+        admitted: list[tuple[int, Request]] = []
         for slot in range(self.num_slots):
             if self.slots[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 self.slots[slot] = req
-                self._prefill(slot, req)
+                admitted.append((slot, req))
+        if not admitted:
+            return
+        # clear stale cache lanes (KV, SSM state, positions) of the
+        # re-used slots, then prefill all admissions together
+        mask = np.zeros(self.num_slots, bool)
+        for slot, _ in admitted:
+            mask[slot] = True
+        self.caches = self._reset(self.caches, jnp.asarray(mask))
+        self._prefill(admitted)
 
-    def _prefill(self, slot: int, req: Request) -> None:
-        """Feed the prompt through the decode path into this slot's cache.
+    def _prefill(self, admitted: list[tuple[int, Request]]) -> None:
+        """Feed prompts through the decode path into the admitted slots.
 
-        The batched cache is advanced with the *other* slots' tokens held
-        at their last value; only this slot's cache lanes change for those
-        steps because each slot's cache row is independent along batch.
+        One batched step per prompt position: at step t every admitted
+        slot with a t-th prompt token is active; all other slots (both
+        mid-generation and idle) are masked out, so their caches do not
+        advance. The final prompt token is held back — it is fed by the
+        first decode step, which produces the first sampled token.
         """
-        for t in req.prompt[:-1]:
+        longest = max(len(req.prompt) for _, req in admitted)
+        for t in range(longest - 1):
+            active = np.zeros(self.num_slots, bool)
             tok = self._next_token.copy()
-            tok[slot, 0] = int(t)
-            logits, self.caches = self._step(
-                self.params, jnp.asarray(tok), self.caches
-            )
-        self._next_token[slot, 0] = int(req.prompt[-1])
-        self._budget[slot] = req.max_new_tokens
+            for slot, req in admitted:
+                if t < len(req.prompt) - 1:
+                    active[slot] = True
+                    tok[slot, 0] = int(req.prompt[t])
+            if active.any():
+                _, self.caches = self._step(
+                    self.params, jnp.asarray(tok), self.caches,
+                    jnp.asarray(active),
+                )
+        for slot, req in admitted:
+            self._next_token[slot, 0] = int(req.prompt[-1])
+            self._budget[slot] = req.max_new_tokens
 
     # -- decode loop ----------------------------------------------------------
 
@@ -112,8 +166,11 @@ class ServingEngine:
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
+        mask = np.zeros(self.num_slots, bool)
+        mask[active] = True
         logits, self.caches = self._step(
-            self.params, jnp.asarray(self._next_token), self.caches
+            self.params, jnp.asarray(self._next_token), self.caches,
+            jnp.asarray(mask),
         )
         logits = np.asarray(logits.astype(jnp.float32))
         for slot in active:

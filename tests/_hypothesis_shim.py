@@ -1,0 +1,104 @@
+"""Hypothesis compatibility shim for offline containers.
+
+The property tests are written against the real ``hypothesis`` API. When
+the package is installed, this module re-exports it untouched. When it is
+absent (offline CI images), a minimal drop-in replacement runs each
+property over a deterministic, seeded sweep of examples instead: every
+``@given`` test still exercises a spread of random inputs, it just loses
+shrinking and the adaptive search.
+
+Supported surface (all the repo's tests use):
+  - ``given(*strategies)`` with positional strategies filling the trailing
+    test parameters
+  - ``settings(max_examples=..., deadline=...)`` stacked above ``given``
+  - ``strategies.integers(lo, hi)``, ``strategies.floats(lo, hi,
+    allow_nan=False)``, ``strategies.lists(elem, min_size=, max_size=)``
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings
+    from hypothesis import strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    # Cap the fallback sweep: the shim is a breadth check, not a search.
+    _MAX_FALLBACK_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, **_kw):
+            def draw(rng):
+                # mix endpoints and zero in occasionally, like hypothesis
+                r = rng.random()
+                if r < 0.05:
+                    return float(min_value)
+                if r < 0.10:
+                    return float(max_value)
+                if r < 0.15 and min_value <= 0.0 <= max_value:
+                    return 0.0
+                return float(rng.uniform(min_value, max_value))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    strategies = _Strategies()
+
+    def settings(max_examples=_MAX_FALLBACK_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(
+                    getattr(wrapper, "_shim_max_examples",
+                            _MAX_FALLBACK_EXAMPLES),
+                    _MAX_FALLBACK_EXAMPLES,
+                )
+                for i in range(n):
+                    rng = np.random.default_rng(0xC0FFEE + 7919 * i)
+                    drawn = [s.example(rng) for s in strats]
+                    fn(*args, *drawn, **kwargs)
+
+            # Hide the drawn parameters from pytest so it does not try to
+            # resolve them as fixtures (strategies fill trailing params).
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            remaining = params[: len(params) - len(strats)]
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            return wrapper
+
+        return deco

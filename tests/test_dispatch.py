@@ -1,0 +1,160 @@
+"""Parity matrix for the unified accumulation-policy dispatch layer.
+
+The contract: every policy produces bit-identical int32 results on the
+jnp reference backend and the Pallas(interpret) kernel backend, for any
+shape — including ragged, non-power-of-2 M/N/K — and the optional census
+output equals the overflow library's oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import overflow
+from repro.core.dispatch import (
+    IntegerLinConfig,
+    default_backend,
+    integer_lin,
+    pqs_dot,
+    qtensor_dot,
+)
+from repro.core.qtensor import quantize_weight
+
+POLICIES = ("wide", "clip", "wrap", "sorted", "sorted_tiled",
+            "sorted_tiled_seq")
+# ragged, non-power-of-2 shapes on purpose — padding is the dispatch
+# layer's job now, not the caller's
+SHAPES = ((5, 300, 70), (8, 64, 16), (3, 100, 9))
+
+
+def _xw(m, k, n, seed=0, lo=-127, hi=127):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(lo, hi, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(lo, hi, (n, k)), jnp.int8)
+    return x, w
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("acc_bits", [12, 16, 24])
+def test_backend_parity_ragged(policy, acc_bits):
+    for m, k, n in SHAPES:
+        x, w = _xw(m, k, n, seed=acc_bits * 31 + m)
+        a = pqs_dot(x, w, acc_bits=acc_bits, policy=policy, k_tile=64,
+                    backend="jnp")
+        b = pqs_dot(x, w, acc_bits=acc_bits, policy=policy, k_tile=64,
+                    backend="pallas", block_m=4, block_n=8)
+        assert a.dtype == jnp.int32 and a.shape == (m, n)
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{policy} acc_bits={acc_bits} shape={(m, k, n)}",
+        )
+
+
+def test_backend_parity_multi_round():
+    """Two sorting rounds (the overflow library's default) also agree."""
+    x, w = _xw(5, 192, 9, seed=21)
+    for policy in ("sorted", "sorted_tiled", "sorted_tiled_seq"):
+        a = pqs_dot(x, w, acc_bits=14, policy=policy, k_tile=32, rounds=2,
+                    backend="jnp")
+        b = pqs_dot(x, w, acc_bits=14, policy=policy, k_tile=32, rounds=2,
+                    backend="pallas", block_m=4, block_n=8)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=policy)
+
+
+def test_wide_matches_exact_matmul():
+    x, w = _xw(7, 130, 11, seed=5)
+    out = pqs_dot(x, w, acc_bits=30, policy="wide")
+    expect = x.astype(jnp.int32) @ w.astype(jnp.int32).T
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_matches_overflow_accumulate_oracle():
+    """jnp backend == raw overflow-library semantics, policy by policy."""
+    x, w = _xw(4, 128, 6, seed=9)
+    prods = overflow.partial_products(w, x)
+    for policy in POLICIES:
+        out = pqs_dot(x, w, acc_bits=14, policy=policy, k_tile=32,
+                      rounds=1, backend="jnp")
+        expect = overflow.accumulate(prods, 14, policy, 32, 1)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(expect), err_msg=policy
+        )
+
+
+def test_census_equals_matmul_census():
+    x, w = _xw(6, 200, 10, seed=3)
+    _, c = pqs_dot(x, w, acc_bits=16, policy="clip", backend="jnp",
+                   batch_chunk=2, with_census=True)
+    ref = overflow.matmul_census(w, x, 16, batch_chunk=4)
+    for field in ("n_dots", "n_persistent", "n_transient", "n_any"):
+        assert int(getattr(c, field)) == int(getattr(ref, field)), field
+    # census rides along unchanged for the pallas backend too
+    _, cp = pqs_dot(x, w, acc_bits=16, policy="clip", backend="pallas",
+                    block_m=2, block_n=2, with_census=True)
+    for field in ("n_dots", "n_persistent", "n_transient", "n_any"):
+        assert int(getattr(cp, field)) == int(getattr(ref, field)), field
+
+
+def test_leading_batch_dims():
+    """(..., K) leading dims flatten and restore transparently."""
+    x, w = _xw(12, 96, 5, seed=7)
+    x3 = x.reshape(2, 6, 96)
+    flat = pqs_dot(x, w, acc_bits=16, policy="sorted", backend="jnp")
+    shaped = pqs_dot(x3, w, acc_bits=16, policy="sorted", backend="jnp",
+                     batch_chunk=4)
+    assert shaped.shape == (2, 6, 5)
+    np.testing.assert_array_equal(
+        np.asarray(shaped).reshape(12, 5), np.asarray(flat)
+    )
+
+
+def test_quantized_matmul_sim_routes_through_dispatch():
+    """The overflow-library entry point and pqs_dot are the same function."""
+    x, w = _xw(5, 80, 7, seed=11)
+    a = overflow.quantized_matmul_sim(w, x, 13, "sorted_tiled", k_tile=16,
+                                      batch_chunk=2)  # legacy default rounds=2
+    b = pqs_dot(x, w, acc_bits=13, policy="sorted_tiled", k_tile=16,
+                rounds=2, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_validation_errors():
+    x, w = _xw(2, 32, 3)
+    with pytest.raises(ValueError):
+        pqs_dot(x, w, policy="bogus")
+    with pytest.raises(ValueError):
+        pqs_dot(x, w, backend="cuda")
+    with pytest.raises(ValueError):
+        pqs_dot(x, w, acc_bits=31)
+    with pytest.raises(ValueError):
+        pqs_dot(x, w, policy="sorted_tiled", k_tile=48)
+    with pytest.raises(ValueError):
+        pqs_dot(x, jnp.zeros((3, 33), jnp.int8))
+
+
+def test_default_backend_is_platform_appropriate():
+    assert default_backend() in ("jnp", "pallas")
+
+
+def test_integer_lin_context_and_qtensor_dot(rng):
+    """The serving path: QTensor projections as integer PQS dots."""
+    from repro.models.layers import lin
+
+    w = jnp.asarray(rng.normal(size=(64, 24)), jnp.float32) * 0.1
+    x = jnp.asarray(rng.normal(size=(3, 64)), jnp.float32)
+    qt = quantize_weight(w, bits=8)
+    dequant = np.asarray(x @ qt.dequant(jnp.float32))
+
+    cfg = IntegerLinConfig(policy="sorted_tiled_seq", acc_bits=24,
+                           k_tile=64, backend="jnp")
+    direct = np.asarray(qtensor_dot(x, qt, cfg))
+    # wide-enough accumulator: integer path tracks the dequant matmul to
+    # activation-quantization error
+    assert np.abs(direct - dequant).max() < 0.1 * np.abs(dequant).max() + 0.05
+
+    assert np.allclose(np.asarray(lin(x, qt)), dequant)  # default: dequant
+    with integer_lin(cfg):
+        inside = np.asarray(lin(x, qt))
+    np.testing.assert_array_equal(inside, direct)
+    assert np.allclose(np.asarray(lin(x, qt)), dequant)  # context restored

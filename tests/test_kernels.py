@@ -4,8 +4,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings
+from _hypothesis_shim import strategies as st
 
 from repro.core.pruning import nm_prune_mask
 from repro.kernels import ops, ref

@@ -125,11 +125,12 @@ def test_link_model():
 
 
 def test_param_spec_serve_mode():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
+    from repro.launch.mesh import make_abstract_mesh
     from repro.launch.sharding import param_spec
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     spec = param_spec(mesh, "layers/attn/wq", (64, 5120, 8192),
                       serve_mode=True)
     assert spec == P(None, None, "model")  # no FSDP axes at decode

@@ -3,8 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings
+from _hypothesis_shim import strategies as st
 
 from repro.core.a2q import (
     a2q_fake_quant,

@@ -8,8 +8,8 @@ overflow — and Algorithm 1 finds one.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings
+from _hypothesis_shim import strategies as st
 
 from repro.core.overflow import accumulate, census, transient_survivors
 from repro.core.quant import qrange

@@ -271,11 +271,12 @@ def test_quantized_model_end_to_end():
 
 
 def test_sharding_rules_divisibility():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
+    from repro.launch.mesh import make_abstract_mesh
     from repro.launch.sharding import param_spec, sanitize
 
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     # generic weight: fsdp x model
     spec = param_spec(mesh, "layers/attn/wq", (28, 1536, 1536))
     assert spec == P(None, ("pod", "data"), "model")
@@ -315,3 +316,7 @@ def test_serving_engine_continuous_batching():
     assert [len(r.output) for r in reqs] == [3, 4, 5, 6, 7]
     # greedy sampling: identical prompts produce identical prefixes
     assert reqs[0].output == reqs[1].output[:3]
+    # requests that would write past max_len are refused, not corrupted
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=99, prompt=np.asarray([1] * 30, np.int32),
+                           max_new_tokens=10))
