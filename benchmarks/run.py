@@ -16,7 +16,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3,fig4,fig5,tiled,kernels,roofline")
+                    help="comma list: fig2,fig3,fig4,fig5,tiled,kernels,"
+                         "roofline,serve")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -28,6 +29,7 @@ def main() -> None:
         pq_vs_qp_lowrank,
         pq_vs_qp_nets,
         roofline,
+        serving_latency,
         tiled_sort,
     )
 
@@ -40,6 +42,8 @@ def main() -> None:
         ("tiled", lambda: tiled_sort.run(epochs=max(epochs - 2, 6))),
         ("kernels", kernel_bench.run),
         ("roofline", roofline.run),
+        ("serve", lambda: serving_latency.run(
+            steps=8 if args.quick else 20)),
     ]
 
     t0 = time.time()

@@ -1,0 +1,91 @@
+"""Decode latency: dynamic vs calibrated-static activation quantization.
+
+The integer serving path quantizes activations before every ``pqs_dot``.
+Dynamically that is a data-dependent absmax reduction over the
+activations at every projection of every decode step; after the
+calibrate→freeze pass (``ServingEngine.calibrate``) the scale is a
+frozen constant and the reduction disappears from the step entirely
+(paper §2.1 setup: ranges collected offline). This benchmark times the
+jitted decode step of the same quantized model in three modes:
+
+  float    — dequantize-to-float matmuls (the bandwidth baseline)
+  int/dyn  — integer pqs_dot, dynamic per-call absmax
+  int/cal  — integer pqs_dot, calibrated static ranges
+
+and reports per-step latency plus the dyn→cal speedup.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.dispatch import IntegerLinConfig
+from repro.core.qtensor import quantize_tree
+from repro.models.model import build_model
+from repro.serving import Request, ServingEngine
+
+
+def _time_decode(eng, steps: int, slots: int, vocab: int) -> float:
+    """Median wall time of the jitted batched decode step, seconds."""
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(uid=i, prompt=rng.integers(1, vocab, 4).astype(np.int32),
+                max_new_tokens=steps + 4)
+        for i in range(slots)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()  # admit + prefill + first decode (compiles)
+    eng.step()  # warm
+    times = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        eng.step()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(arch: str = "qwen2-1.5b", steps: int = 20, slots: int = 4) -> dict:
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = quantize_tree(params, bits=8, min_size=1 << 10, min_dim=16)
+    il = IntegerLinConfig(policy="sorted_tiled_seq", acc_bits=24, k_tile=64,
+                          backend="jnp")
+    rng = np.random.default_rng(0)
+    cal_batches = [
+        {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)))}
+        for _ in range(4)
+    ]
+
+    results = {}
+    eng = ServingEngine(model, qparams, num_slots=slots, max_len=64)
+    results["float"] = _time_decode(eng, steps, slots, cfg.vocab_size)
+
+    eng = ServingEngine(model, qparams, num_slots=slots, max_len=64,
+                        int_lin=il)
+    results["int_dynamic"] = _time_decode(eng, steps, slots, cfg.vocab_size)
+
+    eng = ServingEngine(model, qparams, num_slots=slots, max_len=64,
+                        int_lin=il)
+    eng.calibrate(cal_batches)
+    results["int_calibrated"] = _time_decode(eng, steps, slots,
+                                             cfg.vocab_size)
+
+    speedup = results["int_dynamic"] / max(results["int_calibrated"], 1e-12)
+    print(f"[serving_latency] {arch} decode step ({slots} slots, "
+          f"median of {steps}):")
+    for k in ("float", "int_dynamic", "int_calibrated"):
+        print(f"  {k:15s} {results[k] * 1e3:8.2f} ms/step")
+    print(f"  calibrated static ranges: {speedup:.2f}x vs dynamic absmax")
+    results["dyn_over_cal"] = speedup
+    return results
+
+
+if __name__ == "__main__":
+    run()

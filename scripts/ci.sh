@@ -1,6 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 offline CI: runs the full test suite exactly as the roadmap
-# specifies. Works from any checkout location, no network, no TPU.
+# Tier-1 offline CI. Works from any checkout location, no network, no TPU.
+#
+#   1. full single-device test suite (exactly as the roadmap specifies)
+#   2. forced-multi-device shard: sharded pqs_dot + integer serving on an
+#      8-way host-device mesh (tests/test_sharded_dispatch.py self-skips
+#      in pass 1, so this is the only place it runs)
+#   3. examples/quickstart.py smoke run (the paper's idea end-to-end)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,4 +14,10 @@ cd "$(dirname "$0")/.."
 # (launch/dryrun.py) working identically.
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+echo "== multi-device shard (8 forced host devices) =="
+REPRO_FORCE_MULTIDEVICE=1 python -m pytest -x -q tests/test_sharded_dispatch.py
+
+echo "== quickstart smoke =="
+python examples/quickstart.py

@@ -30,18 +30,28 @@ them.
 inside the context, every ``models.layers.lin`` whose weight is a
 QTensor executes as a true integer dot product under the configured
 policy instead of dequantize-then-float-matmul.
+
+Distributed execution: ``pqs_dot(..., mesh=...)`` runs the same dot
+under ``shard_map`` on a named mesh — output channels (N) sharded on
+the tensor-parallel axis, rows (M) on the data axes, and the full K
+accumulation performed *inside* each shard under the configured policy,
+so every output element is produced by exactly the single-device
+routine and results stay bit-identical at any mesh shape. Specs are
+``sanitize``-degraded (non-dividing axes dropped), so ragged shapes
+lower everywhere.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.overflow import Census, accumulate, census, partial_products
+from repro.core.quant import qrange
 from repro.kernels import ops
 
 POLICIES = ops.POLICIES  # derived from the kernel modules — one list
@@ -71,48 +81,23 @@ def _validate(policy: str, backend: Optional[str], acc_bits: int,
         raise ValueError(f"k_tile must be a power of 2, got {k_tile}")
 
 
-def pqs_dot(
-    x: jax.Array,  # (..., K) integer carrier (int8 or int32 holding int8)
-    w: jax.Array,  # (N, K) integer carrier; rows = output channels
+def _local_dot(
+    x2: jax.Array,  # (M, Kp) — K already padded by the shared rule
+    w: jax.Array,  # (N, Kp)
     *,
-    acc_bits: int = 16,
-    policy: str = "wide",
-    k_tile: int = 256,
-    rounds: int = 1,
-    backend: Optional[str] = None,
-    interpret: Optional[bool] = None,
-    block_m: int = 8,
-    block_n: int = 128,
-    batch_chunk: Optional[int] = None,
-    with_census: bool = False,
-):
-    """Quantized dot products with simulated narrow accumulation.
-
-    Returns (..., N) int32 — each element a dot product accumulated into
-    an acc_bits register under ``policy``. With ``with_census=True``
-    returns ``(out, Census)`` where the census classifies natural-order
-    overflows of the same dot products (persistent / transient, Fig 2a).
-
-    Any M/N/K works: padding and batch chunking happen here, not at call
-    sites. ``backend`` overrides the platform default; both backends are
-    bit-identical per policy.
-    """
-    _validate(policy, backend, acc_bits, k_tile)
-    backend = backend or default_backend()
-    if x.shape[-1] != w.shape[-1]:
-        raise ValueError(f"contraction mismatch: {x.shape} vs {w.shape}")
-    lead = x.shape[:-1]
-    k, n = x.shape[-1], w.shape[0]
-    x2 = x.reshape(-1, k)
+    acc_bits: int,
+    policy: str,
+    k_tile: int,
+    rounds: int,
+    backend: str,
+    interpret: Optional[bool],
+    block_m: Optional[int],
+    block_n: Optional[int],
+    batch_chunk: Optional[int],
+    with_census: bool,
+) -> tuple[jax.Array, Optional[Census]]:
+    """Single-device policy matmul on pre-padded operands (+census)."""
     m = x2.shape[0]
-
-    # one K-padding rule for both backends: order-sensitive policies must
-    # see the same (padded) permutation domain to be bit-identical
-    kp = ops.padded_k(k, policy, k_tile)
-    if kp != k:
-        x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
-        w = jnp.pad(w, ((0, 0), (0, kp - k)))
-
     chunk = m if (batch_chunk is None or batch_chunk >= m) else batch_chunk
     outs = []
     tot: Optional[Census] = None
@@ -138,6 +123,124 @@ def pqs_dot(
                 *(a + b for a, b in zip(tot, c))
             )
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return out, tot
+
+
+def _sharded_dot(
+    x2: jax.Array,  # (M, Kp)
+    w: jax.Array,  # (N, Kp)
+    mesh,
+    m_axes: Optional[tuple[str, ...]],
+    n_axis: str,
+    with_census: bool,
+    **kw,
+):
+    """shard_map wrapper: M on the data axes, N on the TP axis, K whole.
+
+    Every shard runs the unmodified single-device routine over its
+    (M_shard, N_shard) block with the FULL (padded) K axis resident, so
+    the narrow-accumulation order — and therefore the result — is
+    bit-identical to the single-device reference. Specs degrade through
+    ``sanitize`` when a dimension does not divide its axes, so any shape
+    lowers (at worst fully replicated).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import data_axes
+    from repro.launch.sharding import sanitize
+
+    if m_axes is None:
+        m_axes = data_axes(mesh)
+    m_axes = tuple(a for a in m_axes if a in mesh.axis_names)
+    x_spec = sanitize(mesh, P(m_axes if m_axes else None, None), x2.shape)
+    w_spec = sanitize(
+        mesh, P(n_axis if n_axis in mesh.axis_names else None, None), w.shape
+    )
+    out_spec = P(x_spec[0], w_spec[0])
+    # census counters must be summed only over axes that actually
+    # partition the dots; replicated axes would multiply-count
+    used: list[str] = []
+    for entry in (x_spec[0], w_spec[0]):
+        if entry is not None:
+            used.extend(entry if isinstance(entry, tuple) else (entry,))
+
+    def body(xl, wl):
+        out, cns = _local_dot(xl, wl, with_census=with_census, **kw)
+        if with_census and used:
+            cns = jax.tree_util.tree_map(
+                lambda a: jax.lax.psum(a, tuple(used)), cns
+            )
+        return (out, cns) if with_census else out
+
+    out_specs = (out_spec, Census(P(), P(), P(), P())) if with_census \
+        else out_spec
+    return shard_map(
+        body, mesh, in_specs=(x_spec, w_spec), out_specs=out_specs,
+        check_rep=False,
+    )(x2, w)
+
+
+def pqs_dot(
+    x: jax.Array,  # (..., K) integer carrier (int8 or int32 holding int8)
+    w: jax.Array,  # (N, K) integer carrier; rows = output channels
+    *,
+    acc_bits: int = 16,
+    policy: str = "wide",
+    k_tile: int = 256,
+    rounds: int = 1,
+    backend: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    batch_chunk: Optional[int] = None,
+    with_census: bool = False,
+    mesh=None,
+    m_axes: Optional[tuple[str, ...]] = None,
+    n_axis: str = "model",
+):
+    """Quantized dot products with simulated narrow accumulation.
+
+    Returns (..., N) int32 — each element a dot product accumulated into
+    an acc_bits register under ``policy``. With ``with_census=True``
+    returns ``(out, Census)`` where the census classifies natural-order
+    overflows of the same dot products (persistent / transient, Fig 2a).
+
+    Any M/N/K works: padding and batch chunking happen here, not at call
+    sites. ``backend`` overrides the platform default; both backends are
+    bit-identical per policy. ``block_m``/``block_n`` default to the
+    per-platform table in ``kernels.ops`` (env-overridable).
+
+    With ``mesh`` (a ``jax.sharding.Mesh``), the dot executes under
+    ``shard_map``: M sharded over ``m_axes`` (default: the mesh's data
+    axes), N over ``n_axis`` ("model"), K accumulated whole inside each
+    shard — bit-identical to the single-device result.
+    """
+    _validate(policy, backend, acc_bits, k_tile)
+    backend = backend or default_backend()
+    if x.shape[-1] != w.shape[-1]:
+        raise ValueError(f"contraction mismatch: {x.shape} vs {w.shape}")
+    lead = x.shape[:-1]
+    k, n = x.shape[-1], w.shape[0]
+    x2 = x.reshape(-1, k)
+
+    # one K-padding rule for both backends: order-sensitive policies must
+    # see the same (padded) permutation domain to be bit-identical
+    kp = ops.padded_k(k, policy, k_tile)
+    if kp != k:
+        x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
+        w = jnp.pad(w, ((0, 0), (0, kp - k)))
+
+    kw = dict(
+        acc_bits=acc_bits, policy=policy, k_tile=k_tile, rounds=rounds,
+        backend=backend, interpret=interpret, block_m=block_m,
+        block_n=block_n, batch_chunk=batch_chunk,
+    )
+    if mesh is not None:
+        res = _sharded_dot(x2, w, mesh, m_axes, n_axis, with_census, **kw)
+        out, tot = res if with_census else (res, None)
+    else:
+        out, tot = _local_dot(x2, w, with_census=with_census, **kw)
     out = out.reshape(*lead, n)
     if with_census:
         return out, tot
@@ -151,7 +254,14 @@ def pqs_dot(
 
 @dataclasses.dataclass(frozen=True)
 class IntegerLinConfig:
-    """How ``models.layers.lin`` should execute QTensor weights."""
+    """How ``models.layers.lin`` should execute QTensor weights.
+
+    ``mesh`` (+ ``m_axes``/``n_axis``) distributes every integer
+    projection via the sharded ``pqs_dot`` path. ``use_static_acts``
+    selects the calibrated static activation QParams a QTensor carries
+    (``QTensor.act_qparams``, see ``core.qtensor.attach_act_qparams``)
+    over the dynamic per-call absmax reduction whenever present.
+    """
 
     policy: str = "sorted_tiled_seq"
     acc_bits: int = 16
@@ -159,6 +269,10 @@ class IntegerLinConfig:
     rounds: int = 1
     act_bits: int = 8
     backend: Optional[str] = None  # None = platform default
+    mesh: Any = None  # jax.sharding.Mesh -> distributed pqs_dot
+    m_axes: Optional[tuple[str, ...]] = None  # default: mesh data axes
+    n_axis: str = "model"
+    use_static_acts: bool = True
 
 
 _INT_LIN: list[IntegerLinConfig] = []
@@ -184,24 +298,68 @@ def integer_lin(cfg: Optional[IntegerLinConfig] = None, **kw):
         _INT_LIN.pop()
 
 
+_CALIBRATION: list = []
+
+
+def calibration_store():
+    """Active ``core.quant.ActCalibrator``, or None outside calibration."""
+    return _CALIBRATION[-1] if _CALIBRATION else None
+
+
+@contextlib.contextmanager
+def calibration(store):
+    """Collect activation ranges at QTensor projection sites.
+
+    Inside the context, ``models.layers.lin`` reports each QTensor
+    input's (min, max) to ``store`` (an ``ActCalibrator``) through
+    ``jax.debug.callback`` — the execution stays the float dequant path,
+    and the callback fires at runtime even from inside scanned layer
+    loops. Freeze the result with ``store.freeze()`` +
+    ``core.qtensor.attach_act_qparams``.
+    """
+    _CALIBRATION.append(store)
+    try:
+        yield store
+    finally:
+        _CALIBRATION.pop()
+
+
 def qtensor_dot(x: jax.Array, qt, cfg: IntegerLinConfig) -> jax.Array:
     """x (..., in) float @ QTensor (in, out) as an integer PQS dot.
 
-    Activations get dynamic symmetric per-tensor quantization (absmax at
-    act_bits); the integer matmul accumulates under cfg.policy at
-    cfg.acc_bits; output is rescaled by the activation scale and the
-    QTensor's per-channel weight scales.
+    Activation quantization is dynamic symmetric per-tensor (absmax at
+    act_bits) unless the QTensor carries calibrated static
+    ``act_qparams`` and ``cfg.use_static_acts`` — then the frozen
+    scale/offset is used and decode skips the data-dependent absmax
+    reduction entirely (paper §2.1 setup). The integer matmul
+    accumulates under cfg.policy at cfg.acc_bits (sharded over
+    ``cfg.mesh`` when set); output is rescaled by the activation scale
+    and the QTensor's per-channel weight scales.
     """
-    qmax = 2 ** (cfg.act_bits - 1) - 1
-    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
-    s_x = (amax / qmax).astype(jnp.float32)
-    xq = jnp.clip(
-        jnp.round(x.astype(jnp.float32) / s_x), -qmax - 1, qmax
-    ).astype(jnp.int32)
+    wq = qt.values.T.astype(jnp.int32)  # (out, in)
+    aq = getattr(qt, "act_qparams", None)
+    if cfg.use_static_acts and aq is not None:
+        qmin, qmax = qrange(aq.bits)
+        s_x = aq.scale.astype(jnp.float32)
+        xq = jnp.clip(
+            jnp.round(x.astype(jnp.float32) / s_x) + aq.offset, qmin, qmax
+        ).astype(jnp.int32)
+    else:
+        qmax = 2 ** (cfg.act_bits - 1) - 1
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+        s_x = (amax / qmax).astype(jnp.float32)
+        xq = jnp.clip(
+            jnp.round(x.astype(jnp.float32) / s_x), -qmax - 1, qmax
+        ).astype(jnp.int32)
     z = pqs_dot(
-        xq, qt.values.T.astype(jnp.int32), acc_bits=cfg.acc_bits,
+        xq, wq, acc_bits=cfg.acc_bits,
         policy=cfg.policy, k_tile=cfg.k_tile, rounds=cfg.rounds,
-        backend=cfg.backend,
+        backend=cfg.backend, mesh=cfg.mesh, m_axes=cfg.m_axes,
+        n_axis=cfg.n_axis,
     )
+    if cfg.use_static_acts and aq is not None and not aq.symmetric:
+        # Eq. (3) offset correction — precomputed at freeze time
+        # (qtensor.attach_act_qparams), a per-weight constant
+        z = z - qt.act_corr
     zf = z.astype(jnp.float32) * (s_x * qt.scale)
     return zf.astype(x.dtype)

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.pruning import nm_prune_mask
-from repro.core.quant import qrange
+from repro.core.quant import QParams, qrange
 
 
 @jax.tree_util.register_pytree_node_class
@@ -31,10 +31,23 @@ class QTensor:
 
     values: (in_dim, out_dim) int8 (same layout as the fp weight it replaces)
     scale:  (out_dim,) f32 — column scales (output channels)
+    act_qparams: optional calibrated STATIC input-activation QParams
+        (scale/offset shaped like values.shape[:-2] so layer-stacked
+        QTensors scan cleanly). When present, ``integer_lin`` execution
+        quantizes activations with these frozen params instead of the
+        dynamic per-call absmax reduction — the calibrate→freeze→serve
+        decode path.
+    act_corr: with ASYMMETRIC act_qparams, the Eq. (3) offset
+        correction o_x * sum_k w_k^q per output channel
+        (values.shape[:-2] + (out,)) — a weight-only constant, so it is
+        precomputed at freeze time rather than re-reduced every decode
+        step. None for symmetric params (o_x = 0).
     """
 
     values: jax.Array
     scale: jax.Array
+    act_qparams: Optional[QParams] = None
+    act_corr: Optional[jax.Array] = None
 
     @property
     def shape(self):
@@ -48,7 +61,7 @@ class QTensor:
         return (self.values.astype(jnp.float32) * self.scale).astype(dtype)
 
     def tree_flatten(self):
-        return (self.values, self.scale), None
+        return (self.values, self.scale, self.act_qparams, self.act_corr), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -108,6 +121,8 @@ def quantize_tree(
     """
 
     def conv(leaf):
+        if isinstance(leaf, QTensor):
+            return leaf
         if not isinstance(leaf, jax.Array) and not hasattr(leaf, "dtype"):
             return leaf
         if leaf.ndim < 2 or leaf.size < min_size:
@@ -126,4 +141,51 @@ def quantize_tree(
                 qfn = jax.vmap(qfn)
         return qfn(leaf)
 
-    return jax.tree_util.tree_map(conv, params)
+    return jax.tree_util.tree_map(
+        conv, params, is_leaf=lambda l: isinstance(l, QTensor)
+    )
+
+
+def attach_act_qparams(params: Any, frozen: dict[str, QParams]) -> Any:
+    """Freeze calibrated activation ranges into a quantized param tree.
+
+    ``frozen`` maps call-site names (the last path key of a QTensor leaf:
+    "wq", "w_gate", ...) to static QParams from ``ActCalibrator.freeze``.
+    Each matching QTensor gets ``act_qparams`` whose scale/offset are
+    broadcast to ``values.shape[:-2]`` — layer-stacked (L, in, out)
+    weights carry (L,)-shaped params so ``jax.lax.scan`` slices them
+    per layer alongside the weights.
+    """
+
+    def name_of(path) -> str:
+        for entry in reversed(path):
+            key = getattr(entry, "key", None)
+            if isinstance(key, str):
+                return key
+        return ""
+
+    def conv(path, leaf):
+        if not isinstance(leaf, QTensor):
+            return leaf
+        qp = frozen.get(name_of(path))
+        if qp is None:
+            return leaf
+        lead = leaf.values.shape[:-2]
+        aq = QParams(
+            jnp.broadcast_to(qp.scale, lead).astype(jnp.float32),
+            jnp.broadcast_to(qp.offset, lead).astype(jnp.int32),
+            qp.bits,
+            qp.symmetric,
+        )
+        corr = None
+        if not qp.symmetric:
+            # Eq. (3): o_x * sum_k w_k^q — weight-only, frozen here so
+            # decode never re-reduces the weight matrix
+            corr = aq.offset[..., None] * jnp.sum(
+                leaf.values.astype(jnp.int32), axis=-2
+            )
+        return QTensor(leaf.values, leaf.scale, aq, corr)
+
+    return jax.tree_util.tree_map_with_path(
+        conv, params, is_leaf=lambda l: isinstance(l, QTensor)
+    )

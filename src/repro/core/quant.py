@@ -25,18 +25,24 @@ def qrange(bits: int) -> tuple[int, int]:
 
 @dataclasses.dataclass(frozen=True)
 class QParams:
-    """Quantization parameters for one tensor (per-tensor granularity)."""
+    """Quantization parameters for one tensor (per-tensor granularity).
+
+    ``symmetric`` is STATIC metadata (pytree aux): True marks params whose
+    offset is identically zero by construction, so integer-dot consumers
+    may skip the offset-correction term without inspecting traced values.
+    """
 
     scale: jax.Array  # f32 scalar
     offset: jax.Array  # i32 scalar (0 for symmetric/weights)
     bits: int
+    symmetric: bool = False
 
     def tree_flatten(self):  # registered below
-        return (self.scale, self.offset), (self.bits,)
+        return (self.scale, self.offset), (self.bits, self.symmetric)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], aux[0])
+        return cls(children[0], children[1], *aux)
 
 
 jax.tree_util.register_pytree_node(
@@ -51,7 +57,8 @@ def weight_qparams(w: jax.Array, bits: int) -> QParams:
     amax = jnp.maximum(amax, 1e-8)
     _, qmax = qrange(bits)
     scale = amax / qmax
-    return QParams(scale.astype(jnp.float32), jnp.zeros((), jnp.int32), bits)
+    return QParams(scale.astype(jnp.float32), jnp.zeros((), jnp.int32), bits,
+                   symmetric=True)
 
 
 def activation_qparams(
@@ -72,6 +79,23 @@ def activation_qparams(
     return QParams(
         scale.astype(jnp.float32), offset.astype(jnp.int32), bits
     )
+
+
+def symmetric_activation_qparams(
+    lo: jax.Array, hi: jax.Array, bits: int
+) -> QParams:
+    """Symmetric (offset-free) activation params from a calibrated range.
+
+    scale = max(|lo|, |hi|) / (2^(b-1) - 1); offset = 0. Costs up to one
+    bit of range vs the asymmetric form but lets the integer dot skip the
+    o_x * sum(w) correction entirely — the serving-latency trade the
+    calibrated-static decode path defaults to.
+    """
+    amax = jnp.maximum(jnp.maximum(jnp.abs(lo), jnp.abs(hi)), 1e-8)
+    _, qmax = qrange(bits)
+    scale = amax / qmax
+    return QParams(scale.astype(jnp.float32), jnp.zeros((), jnp.int32), bits,
+                   symmetric=True)
 
 
 def quantize(x: jax.Array, qp: QParams) -> jax.Array:
@@ -121,7 +145,9 @@ class EmaRange:
     n: jax.Array | float = 0.0
 
     def update(self, x: jax.Array) -> "EmaRange":
-        blo, bhi = jnp.min(x), jnp.max(x)
+        return self.update_bounds(jnp.min(x), jnp.max(x))
+
+    def update_bounds(self, blo: jax.Array, bhi: jax.Array) -> "EmaRange":
         new_lo = self.decay * self.lo + (1 - self.decay) * blo
         new_hi = self.decay * self.hi + (1 - self.decay) * bhi
         # float32 counter: the observer rides inside the param pytree that
@@ -147,6 +173,45 @@ jax.tree_util.register_pytree_node(
     lambda e: ((e.lo, e.hi, e.n), (e.decay,)),
     lambda aux, ch: EmaRange(ch[0], ch[1], aux[0], ch[2]),
 )
+
+
+class ActCalibrator:
+    """Host-side per-site activation-range collector (paper §2.1 setup).
+
+    Sites are the named QTensor-projection call sites in the model zoo
+    ("wq", "w_gate", ...). During a calibration pass the sites report
+    concrete per-call (min, max) via ``jax.debug.callback`` — the only
+    channel that works from inside ``jax.lax.scan`` layer loops — and
+    each site's range is tracked by a bias-corrected ``EmaRange``. Layers
+    that share a scanned call site therefore share one range (per-site
+    granularity); ``freeze`` turns the corrected bounds into static
+    ``QParams`` for the serving decode path.
+    """
+
+    def __init__(self, decay: float = 0.9):
+        self.decay = decay
+        self.ranges: dict[str, EmaRange] = {}
+
+    def observe(self, site: str, lo, hi) -> None:
+        er = self.ranges.get(site)
+        if er is None:
+            er = EmaRange(jnp.zeros(()), jnp.zeros(()), self.decay,
+                          jnp.zeros(()))
+        self.ranges[site] = er.update_bounds(jnp.asarray(lo, jnp.float32),
+                                             jnp.asarray(hi, jnp.float32))
+
+    def freeze(self, bits: int = 8, symmetric: bool = True
+               ) -> dict[str, QParams]:
+        """Bias-corrected static QParams per calibrated site."""
+        out = {}
+        for site, er in self.ranges.items():
+            lo, hi = er.bounds()
+            out[site] = (
+                symmetric_activation_qparams(lo, hi, bits)
+                if symmetric
+                else activation_qparams(lo, hi, bits)
+            )
+        return out
 
 
 def quantized_dot_terms(

@@ -16,6 +16,8 @@ jnp backend, so both backends realize the same order.
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -30,6 +32,44 @@ POLICIES = _sm.SEQ_POLICIES + _sm.SORT_POLICIES
 # Largest K the compiled (non-interpret) global-sort kernels may keep
 # VMEM-resident: 8 * 128 * 4096 * 4 B = 16 MiB for the product cube.
 MAX_RESIDENT_K = 4096
+
+# Per-platform (bm, bn) defaults for policy_matmul, keyed by
+# jax.default_backend(). The sort policies keep bm small: their product
+# cube is bm*bn*K VMEM-resident, so M-blocking is the lever that keeps
+# the footprint under budget. On TPU, bn rides the 128-lane dim and the
+# stepwise policies want a full (8, 128) f32 tile; CPU interpret mode
+# favors small blocks (python-loop grid — fewer, larger steps lose).
+# Override for experiments with REPRO_PQS_BLOCKS="bm,bn" (both ints).
+_BLOCK_TABLE: dict[str, dict[str, tuple[int, int]]] = {
+    "tpu": {
+        "wide": (128, 128),  # MXU dot: full systolic tile
+        "clip": (8, 128),  # VPU stepwise: min f32 tile, K-streamed
+        "wrap": (8, 128),
+        "sorted": (8, 128),  # K fully resident: keep bm minimal
+        "sorted_tiled": (8, 128),
+        "sorted_tiled_seq": (8, 128),
+    },
+    # CPU/GPU run interpret mode; block shape only affects grid overhead
+    "cpu": {"*": (8, 128)},
+    "gpu": {"*": (8, 128)},
+}
+
+
+def default_blocks(policy: str, platform: str | None = None
+                   ) -> tuple[int, int]:
+    """(bm, bn) for a policy on the current (or given) platform."""
+    env = os.environ.get("REPRO_PQS_BLOCKS")
+    if env:
+        try:
+            bm, bn = (int(v) for v in env.split(","))
+            return bm, bn
+        except ValueError as e:
+            raise ValueError(
+                f"REPRO_PQS_BLOCKS must be 'bm,bn' (two ints), got {env!r}"
+            ) from e
+    table = _BLOCK_TABLE.get(platform or jax.default_backend(),
+                             _BLOCK_TABLE["cpu"])
+    return table.get(policy) or table.get("*") or (8, 128)
 
 
 def _on_tpu() -> bool:
@@ -72,8 +112,8 @@ def policy_matmul(
     acc_bits: int = 16,
     k_tile: int = 256,
     rounds: int = 1,
-    bm: int = 8,
-    bn: int = 128,
+    bm: int | None = None,
+    bn: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """(M, N) int32 under any accumulation policy, any shape.
@@ -81,9 +121,14 @@ def policy_matmul(
     The single Pallas entry point behind ``core.dispatch.pqs_dot``:
     pads M/N/K to block multiples, picks the K-streaming kernel for
     order-preserving policies and the K-resident sort kernel for the
-    global-permutation ones, and slices the result back.
+    global-permutation ones, and slices the result back. ``bm``/``bn``
+    default to the per-platform ``_BLOCK_TABLE`` entry for the policy
+    (env override: REPRO_PQS_BLOCKS="bm,bn").
     """
     assert policy in POLICIES, policy
+    dbm, dbn = default_blocks(policy)
+    bm = dbm if bm is None else bm
+    bn = dbn if bn is None else bn
     interpret = (not _on_tpu()) if interpret is None else interpret
     m, n = x.shape[0], w.shape[0]
     kp = padded_k(x.shape[1], policy, k_tile)
@@ -128,7 +173,7 @@ def quant_matmul(x, w, *, bm=128, bn=128, bk=512, interpret=None):
 
 
 def sorted_matmul(
-    x, w, *, acc_bits=16, rounds=1, bm=8, bn=128, bk=256, interpret=None
+    x, w, *, acc_bits=16, rounds=1, bm=None, bn=None, bk=256, interpret=None
 ):
     """PQS tiled-sort matmul: (M,K) x (N,K) -> (M,N) int32 @ acc_bits.
 
@@ -141,7 +186,8 @@ def sorted_matmul(
     )
 
 
-def clip_matmul(x, w, *, acc_bits=16, bm=8, bn=128, bk=256, interpret=None):
+def clip_matmul(x, w, *, acc_bits=16, bm=None, bn=None, bk=256,
+                interpret=None):
     return policy_matmul(
         x, w, policy="clip", acc_bits=acc_bits, k_tile=bk,
         bm=bm, bn=bn, interpret=interpret,

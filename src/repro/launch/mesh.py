@@ -16,7 +16,7 @@ gradient all-reduce — which is the standard multi-pod training topology.
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 
@@ -50,6 +50,22 @@ def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate mesh over the real local devices (tests / examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_host_serve_mesh(model_parallel: Optional[int] = None
+                         ) -> jax.sharding.Mesh:
+    """("data", "model") mesh over the local devices with a real TP axis.
+
+    For multi-device CPU runs (XLA_FLAGS=--xla_force_host_platform_
+    device_count=N) exercising the sharded ``pqs_dot`` serving path:
+    puts as much of the device count on "model" as divides it (or the
+    requested ``model_parallel``), the rest on "data".
+    """
+    n = len(jax.devices())
+    tp = model_parallel or (n if n % 2 or n < 4 else n // 2)
+    if n % tp:
+        raise ValueError(f"model_parallel={tp} does not divide {n} devices")
+    return jax.make_mesh((n // tp, tp), ("data", "model"))
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -30,6 +30,10 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prefill-mode", default="batched",
+                    choices=["batched", "steps"],
+                    help="batched: one jitted prefill step per admission "
+                         "cohort; steps: legacy token-by-token")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -39,7 +43,8 @@ def main() -> None:
           f"slots={args.slots}")
 
     engine = ServingEngine(
-        model, params, num_slots=args.slots, max_len=args.max_len
+        model, params, num_slots=args.slots, max_len=args.max_len,
+        prefill_mode=args.prefill_mode,
     )
     rng = np.random.default_rng(0)
     reqs = [
@@ -62,6 +67,10 @@ def main() -> None:
               f"{r.output}")
     print(f"[serve] {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s, batched over {args.slots} slots)")
+    st = engine.stats
+    print(f"[serve] device steps: {st['prefill_steps']} prefill for "
+          f"{st['cohorts']} admission cohorts ({args.prefill_mode}), "
+          f"{st['decode_steps']} decode")
 
 
 if __name__ == "__main__":

@@ -114,18 +114,65 @@ def param_spec(
     return sanitize(mesh, P(*lead, fsdp, "model"), shape)
 
 
+def qtensor_specs(
+    mesh: Mesh, path: str, qt: Any,
+    moe_replicate: bool = False, serve_mode: bool = False,
+) -> Any:
+    """PartitionSpec pytree for one QTensor leaf (specs ride the QTensor).
+
+    The int8 ``values`` take the same rule as the float matrix they
+    replaced; the per-output-channel ``scale`` (and any calibrated
+    ``act_qparams`` arrays, shaped like the leading/layer dims) inherit
+    the axis entries of the dims they index into ``values``, so weight
+    shards and their scales land on the same devices — no gather before
+    the integer dot.
+    """
+    from repro.core.qtensor import QTensor
+
+    v_shape = tuple(qt.values.shape)
+    v_spec = param_spec(mesh, path, v_shape, moe_replicate, serve_mode)
+    entries = list(v_spec) + [None] * (len(v_shape) - len(v_spec))
+    # scale: (..., out) — leading dims + the values' last (out) dim
+    s_spec = sanitize(
+        mesh, P(*entries[:-2], entries[-1]), tuple(qt.scale.shape)
+    )
+    aq = getattr(qt, "act_qparams", None)
+    aq_specs = None
+    if aq is not None:
+        lead = sanitize(mesh, P(*entries[:-2]), tuple(aq.scale.shape))
+        aq_specs = type(aq)(lead, lead, aq.bits, aq.symmetric)
+    corr = getattr(qt, "act_corr", None)
+    # act_corr is (..., out) like scale — same placement
+    corr_spec = None if corr is None else s_spec
+    return QTensor(v_spec, s_spec, aq_specs, corr_spec)
+
+
 def params_shardings(
     mesh: Mesh, params_shapes: Any, moe_replicate: bool = False,
     serve_mode: bool = False,
 ) -> Any:
-    """Pytree of NamedShardings matching a (ShapeDtypeStruct) param tree."""
+    """Pytree of NamedShardings matching a (ShapeDtypeStruct) param tree.
+
+    QTensor leaves map to QTensor-shaped sharding subtrees: int8 values
+    and their QParams scales shard together (see ``qtensor_specs``).
+    """
+    from repro.core.qtensor import QTensor
 
     def rule(path, leaf):
+        if isinstance(leaf, QTensor):
+            specs = qtensor_specs(mesh, _path_str(path), leaf,
+                                  moe_replicate, serve_mode)
+            return jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda s: isinstance(s, P),
+            )
         spec = param_spec(mesh, _path_str(path), tuple(leaf.shape),
                           moe_replicate, serve_mode)
         return NamedSharding(mesh, spec)
 
-    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+    return jax.tree_util.tree_map_with_path(
+        rule, params_shapes, is_leaf=lambda l: isinstance(l, QTensor)
+    )
 
 
 def opt_shardings(mesh: Mesh, opt_shapes: Any) -> Any:

@@ -35,6 +35,7 @@ from repro.models.layers import (
     mlp_init,
     norm,
     norm_init,
+    write_prefill_kv,
 )
 
 
@@ -185,17 +186,55 @@ def init_decode_caches(
 
 def _cross_attend_step(p: Params, x: jax.Array, xkv: Params,
                        cfg: ModelConfig) -> jax.Array:
-    b = x.shape[0]
+    """Cross-attention from precomputed encoder K/V; x: (B, Sq, d)."""
+    b, sq = x.shape[0], x.shape[1]
     h, hd = cfg.num_heads, cfg.resolved_head_dim
-    q = lin(x, p["wq"])
+    q = lin(x, p["wq"], site="wq")
     if cfg.qkv_bias:
         q = q + p["bq"].astype(q.dtype)
-    q = q.reshape(b, 1, h, hd)
+    q = q.reshape(b, sq, h, hd)
     k = xkv["k"].astype(x.dtype)
     v = xkv["v"].astype(x.dtype)
-    mask = jnp.ones((1, k.shape[1]), bool)
+    mask = jnp.ones((sq, k.shape[1]), bool)
     o = _sdpa(q, k, v, mask, cfg.attn_logit_softcap)
-    return lin(o.reshape(b, 1, h * hd), p["wo"])
+    return lin(o.reshape(b, sq, h * hd), p["wo"], site="wo")
+
+
+def prefill_step(
+    params: Params,
+    tokens: jax.Array,  # (B, S) int32, left-aligned prompts
+    caches: Any,  # stacked self-attn KV
+    cross_kv: Params,  # from precompute_cross_kv
+    lengths: jax.Array,  # (B,) int32 valid tokens per slot (0 = skip)
+    cfg: ModelConfig,
+) -> tuple[jax.Array, Any]:
+    """One-shot batched decoder prefill: self-KV captured per layer and
+    scattered into the slot caches; cross-attention reads the
+    precomputed encoder K/V exactly as the decode step does."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    x = asarray(params["embed"], dt)[tokens]
+    x = x + asarray(params["pos_embed"], dt)[None, :s]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, inp):
+        p, cache, xkv = inp
+        h, (k, v) = attention(
+            p["attn"], norm(x, p["ln1"], cfg), positions, cfg,
+            causal=True, use_rope=False, return_kv=True,
+        )
+        x = x + h
+        x = x + _cross_attend_step(p["xattn"], norm(x, p["ln_x"], cfg), xkv,
+                                   cfg)
+        x = x + mlp(p["mlp"], norm(x, p["ln2"], cfg), cfg)
+        return hint_batch(x), write_prefill_kv(cache, k, v, lengths)
+
+    x, new_caches = jax.lax.scan(
+        body, x, (params["dec_layers"], caches, cross_kv),
+        unroll=cfg.scan_unroll,
+    )
+    x = norm(x, params["dec_ln_f"], cfg)
+    return hint_logits(x @ asarray(params["embed"], x.dtype).T), new_caches
 
 
 def decode_step(

@@ -32,6 +32,7 @@ from repro.models.layers import (
     mlp_init,
     norm,
     norm_init,
+    write_prefill_kv,
 )
 from repro.models.ssm import (
     empty_ssm_cache,
@@ -111,6 +112,50 @@ def forward(
     x = norm(x, params["ln_f"], cfg)
     logits = hint_logits(x @ asarray(params["embed"], x.dtype).T)
     return logits, aux_total / max(cfg.num_layers, 1)
+
+
+def prefill_step(
+    params: Params,
+    tokens: jax.Array,  # (B, S) int32, left-aligned prompts
+    caches: list[Any],
+    lengths: jax.Array,  # (B,) int32 valid tokens per slot (0 = skip)
+    cfg: ModelConfig,
+) -> tuple[jax.Array, list[Any]]:
+    """One-shot batched prefill across the attention/Mamba interleave.
+
+    Attention layers capture per-layer K/V from the full-sequence pass
+    and scatter them into the slot caches (masked by ``lengths``); Mamba
+    layers run the SSD forward with dt zeroed past each lane's length,
+    so both cache kinds end at exactly the per-slot token count.
+    """
+    b, s = tokens.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = asarray(params["embed"], dt)[tokens]
+    new_caches: list[Any] = []
+
+    for i, p in enumerate(params["layers"]):
+        h = norm(x, p["ln1"], cfg)
+        if "attn" in p:
+            h, (k, v) = attention(p["attn"], h, positions, cfg, causal=True,
+                                  use_rope=False, return_kv=True)
+            new_caches.append(write_prefill_kv(caches[i], k, v, lengths))
+        else:
+            h, nc = mamba_forward(p["mamba"], h, cfg, h0=caches[i]["ssd"],
+                                  lengths=lengths)
+            new_caches.append(nc)
+        x = x + h
+        h = norm(x, p["ln2"], cfg)
+        if "moe" in p:
+            # per-token routing: matches the decode step's capacity
+            # situation, so prefill never drops a token decode would keep
+            h, _ = moe_lib.moe_ffn_per_token(p["moe"], h, cfg, cfg.moe)
+        else:
+            h = mlp(p["mlp"], h, cfg)
+        x = hint_batch(x + h)
+
+    x = norm(x, params["ln_f"], cfg)
+    return hint_logits(x @ asarray(params["embed"], x.dtype).T), new_caches
 
 
 def init_decode_caches(

@@ -25,7 +25,7 @@ from repro.core.qtensor import asarray
 Params = dict[str, Any]
 
 
-def lin(x: jax.Array, w: Any) -> jax.Array:
+def lin(x: jax.Array, w: Any, site: Optional[str] = None) -> jax.Array:
     """x @ w with transparent QTensor handling (PQS int8 serving).
 
     Default: dequantize-on-the-fly float matmul (the bandwidth story).
@@ -33,15 +33,30 @@ def lin(x: jax.Array, w: Any) -> jax.Array:
     instead run as true integer dot products with simulated narrow
     accumulation through the unified ``pqs_dot`` layer (the numerics
     story) — this is how the serving engine executes quantized
-    projections under an accumulation policy.
+    projections under an accumulation policy; with a serving mesh on
+    the config, the dot runs sharded (N on "model", M on data axes).
+
+    ``site`` names the projection call site ("wq", "w_gate", ...) for
+    the activation-range calibration pass: inside a
+    ``core.dispatch.calibration`` context the input's (min, max) is
+    reported per site (via jax.debug.callback, so scanned layer loops
+    work), to be frozen into static QParams on the QTensor.
     """
     if not isinstance(w, jax.Array):
         from repro.core import dispatch
         from repro.core.qtensor import QTensor
 
-        cfg = dispatch.integer_lin_config()
-        if cfg is not None and isinstance(w, QTensor):
-            return dispatch.qtensor_dot(x, w, cfg)
+        if isinstance(w, QTensor):
+            store = dispatch.calibration_store()
+            if store is not None and site is not None:
+                jax.debug.callback(
+                    partial(store.observe, site),
+                    jnp.min(x.astype(jnp.float32)),
+                    jnp.max(x.astype(jnp.float32)),
+                )
+            cfg = dispatch.integer_lin_config()
+            if cfg is not None:
+                return dispatch.qtensor_dot(x, w, cfg)
     return x @ asarray(w, x.dtype)
 
 
@@ -256,16 +271,25 @@ def attention(
     use_window: Optional[jax.Array] = None,  # traced local/global select
     kv_x: Optional[jax.Array] = None,  # cross-attention source
     use_rope: bool = True,
+    return_kv: bool = False,
 ) -> jax.Array:
-    """Full-sequence attention (train / prefill, no cache)."""
+    """Full-sequence attention (train / prefill, no cache).
+
+    ``return_kv=True`` additionally returns the unexpanded post-RoPE
+    (k, v) (B, Sk, G, hd) — what a decode cache stores — so one-shot
+    batched prefill can write them straight into the per-slot caches.
+    Calibration sites are the projection names; self- and
+    cross-attention share them (static QParams attach by the weight
+    leaf's key, which is "wq"/"wo"... for both).
+    """
     b, s, d = x.shape
     h, g, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     src = x if kv_x is None else kv_x
     sk = src.shape[1]
 
-    q = lin(x, params["wq"])
-    k = lin(src, params["wk"])
-    v = lin(src, params["wv"])
+    q = lin(x, params["wq"], site="wq")
+    k = lin(src, params["wk"], site="wk")
+    v = lin(src, params["wv"], site="wv")
     if cfg.qkv_bias:
         q = q + params["bq"].astype(x.dtype)
         k = k + params["bk"].astype(x.dtype)
@@ -279,6 +303,7 @@ def attention(
     if use_rope and kv_x is None:
         q = apply_rope(q, positions, hd, cfg.rope_theta, cfg.mrope_sections)
         k = apply_rope(k, positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    kv = (k, v)
 
     pos1d = positions[0] if positions.ndim == 3 else positions
     q_pos = pos1d[0]  # (S,) — shared across batch in this framework
@@ -293,7 +318,8 @@ def attention(
             q_pos, k_pos, causal and kv_x is None, window, use_window
         )
         o = _sdpa(q, k, v, mask, cfg.attn_logit_softcap)
-    return lin(o.reshape(b, s, h * hd), params["wo"])
+    out = lin(o.reshape(b, s, h * hd), params["wo"], site="wo")
+    return (out, kv) if return_kv else out
 
 
 def attention_decode(
@@ -321,9 +347,9 @@ def attention_decode(
         pos = jnp.broadcast_to(pos, (b,))
     s_max = cache["k"].shape[1]
 
-    q = lin(x, params["wq"])
-    k = lin(x, params["wk"])
-    v = lin(x, params["wv"])
+    q = lin(x, params["wq"], site="wq")
+    k = lin(x, params["wk"], site="wk")
+    v = lin(x, params["wv"], site="wv")
     if cfg.qkv_bias:
         q = q + params["bq"].astype(x.dtype)
         k = k + params["bk"].astype(x.dtype)
@@ -368,7 +394,7 @@ def attention_decode(
     scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     o = jnp.einsum("bgrqk,bkgd->bqgrd", probs, vv)
-    out = lin(o.reshape(b, 1, h * hd), params["wo"])
+    out = lin(o.reshape(b, 1, h * hd), params["wo"], site="wo")
     return out, {"k": new_k, "v": new_v, "pos": pos + 1}
 
 
@@ -398,13 +424,54 @@ def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
 
 def mlp(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     if cfg.activation == "gelu_plain":
-        hid = lin(x, params["w_in"]) + params["b_in"].astype(x.dtype)
+        hid = lin(x, params["w_in"], site="w_in") \
+            + params["b_in"].astype(x.dtype)
         hid = jax.nn.gelu(hid)
-        return lin(hid, params["w_out"]) + params["b_out"].astype(x.dtype)
+        return lin(hid, params["w_out"], site="w_out") \
+            + params["b_out"].astype(x.dtype)
     act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
-    gate = act(lin(x, params["w_gate"]))
-    up = lin(x, params["w_up"])
-    return lin(gate * up, params["w_out"])
+    gate = act(lin(x, params["w_gate"], site="w_gate"))
+    up = lin(x, params["w_up"], site="w_up")
+    return lin(gate * up, params["w_out"], site="w_out")
+
+
+def write_prefill_kv(
+    cache: dict[str, jax.Array],
+    k: jax.Array,  # (B, S, G, hd) post-RoPE, from attention(return_kv=True)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) int32 — tokens consumed per slot (0 = skip)
+) -> dict[str, jax.Array]:
+    """Write one-shot prefill K/V into a decode cache, per-slot masked.
+
+    For slot b, positions t < lengths[b] land at cache index t (global
+    layers) or t % size (sliding-window rings, size = cache length); only
+    the last ``size`` positions of a longer-than-window prompt are
+    written — each surviving position maps to a distinct ring slot, so
+    the scatter has no write conflicts. Masked (t >= length, or evicted
+    ring) positions scatter to an out-of-bounds sentinel and are
+    dropped. ``pos`` becomes ``lengths``: exactly the state the
+    token-by-token decode path would have reached.
+    """
+    size = cache["k"].shape[1]
+    b, s = k.shape[0], k.shape[1]
+    t = jnp.arange(s)
+    keep = (t[None, :] < lengths[:, None]) & (
+        t[None, :] >= lengths[:, None] - size
+    )  # (B, S)
+    idx = jnp.where(keep, t[None, :] % size, size)  # size = OOB sentinel
+
+    def scatter(ck, new):
+        def one(ck_b, new_b, idx_b):
+            return ck_b.at[idx_b].set(new_b.astype(ck_b.dtype), mode="drop")
+
+        return jax.vmap(one)(ck, new, idx)
+
+    return {
+        "k": scatter(cache["k"], k),
+        "v": scatter(cache["v"], v),
+        "pos": jnp.broadcast_to(lengths.astype(jnp.int32),
+                                cache["pos"].shape),
+    }
 
 
 def empty_kv_cache(

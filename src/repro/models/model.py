@@ -99,6 +99,28 @@ def mamba_lm_init_caches(params, cfg: ModelConfig, batch: int, dtype):
     )
 
 
+def mamba_lm_prefill(params: Params, tokens: jax.Array, caches,
+                     lengths: jax.Array, cfg: ModelConfig):
+    """One-shot batched prefill: full-sequence SSD per layer with dt
+    zeroed past each lane's length (identity recurrence), returning
+    layer-stacked {"ssd", "conv"} caches at exactly ``lengths`` tokens."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = asarray(params["embed"], dt)[tokens]
+
+    def body(x, inp):
+        p, cache = inp
+        h, nc = ssm_lib.mamba_forward(
+            p["mamba"], norm(x, p["ln"], cfg), cfg, h0=cache["ssd"],
+            lengths=lengths,
+        )
+        return hint_batch(x + h), nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches),
+                                 unroll=cfg.scan_unroll)
+    x = norm(x, params["ln_f"], cfg)
+    return hint_logits(x @ asarray(params["embed"], x.dtype).T), new_caches
+
+
 def mamba_lm_decode(params: Params, token: jax.Array, caches, cfg: ModelConfig):
     dt = jnp.dtype(cfg.compute_dtype)
     x = asarray(params["embed"], dt)[token]
@@ -150,6 +172,10 @@ class Model:
     # (old_caches, new_caches, active (B,) bool) -> caches with inactive
     # sequences' state preserved — the serving engine's slot isolation.
     merge_caches: Callable[..., Any] = None
+    # (params, tokens (B,S), caches, lengths (B,)) -> (logits, new_caches):
+    # one-shot batched prefill — consume tokens[b, :lengths[b]] into slot
+    # b's cache lanes in a single step (engine admission path).
+    prefill: Callable[..., tuple] = None
 
 
 def _tokens_or_embeddings(batch: dict) -> jax.Array:
@@ -191,6 +217,10 @@ def build_model(cfg: ModelConfig) -> Model:
             decode=lambda params, tok, caches: transformer.decode_step(
                 cast_for_compute(params, cfg), tok, caches, cfg),
             merge_caches=merge_caches_on_axis(1 if stacked else 0),
+            prefill=lambda params, toks, caches, lengths:
+                transformer.prefill_step(
+                    cast_for_compute(params, cfg), toks, caches, lengths,
+                    cfg),
         )
 
     if fam == "audio" or cfg.is_encoder_decoder:
@@ -220,6 +250,12 @@ def build_model(cfg: ModelConfig) -> Model:
             )(encdec.decode_step(cast_for_compute(params, cfg), tok,
                                  caches["self"], caches["cross"], cfg)),
             merge_caches=merge_caches_on_axis(1),  # {self,cross}: (L,B,...)
+            prefill=lambda params, toks, caches, lengths: (
+                lambda out: (out[0], {"self": out[1],
+                                      "cross": caches["cross"]})
+            )(encdec.prefill_step(cast_for_compute(params, cfg), toks,
+                                  caches["self"], caches["cross"], lengths,
+                                  cfg)),
         )
 
     if fam == "hybrid":
@@ -240,6 +276,9 @@ def build_model(cfg: ModelConfig) -> Model:
             decode=lambda params, tok, caches: hybrid.decode_step(
                 cast_for_compute(params, cfg), tok, caches, cfg),
             merge_caches=merge_caches_on_axis(0),  # per-layer list: (B,...)
+            prefill=lambda params, toks, caches, lengths:
+                hybrid.prefill_step(cast_for_compute(params, cfg), toks,
+                                    caches, lengths, cfg),
         )
 
     if fam == "ssm":
@@ -259,6 +298,8 @@ def build_model(cfg: ModelConfig) -> Model:
             decode=lambda params, tok, caches: mamba_lm_decode(
                 cast_for_compute(params, cfg), tok, caches, cfg),
             merge_caches=merge_caches_on_axis(1),  # layer-stacked: (L,B,...)
+            prefill=lambda params, toks, caches, lengths: mamba_lm_prefill(
+                cast_for_compute(params, cfg), toks, caches, lengths, cfg),
         )
 
     raise ValueError(f"unknown family {fam!r}")

@@ -216,6 +216,23 @@ def _moe_ffn_onehot(
     return out, aux
 
 
+def moe_ffn_per_token(
+    params: Params, x: jax.Array, cfg: ModelConfig, mcfg: MoEConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Decode-identical MoE for one-shot batched prefill.
+
+    Folds the sequence into the group axis so every token routes in its
+    own group of one — exactly the capacity situation of a single decode
+    step (capacity >= top_k, so nothing is ever dropped). The serving
+    prefill uses this so one-shot admission reproduces the
+    token-by-token path bit-for-bit in routing decisions; training and
+    the roofline prefill cells keep the grouped capacity-buffer form.
+    """
+    g, s, d = x.shape
+    out, aux = moe_ffn(params, x.reshape(g * s, 1, d), cfg, mcfg)
+    return out.reshape(g, s, d), aux
+
+
 def moe_ffn_dense(
     params: Params, x: jax.Array, cfg: ModelConfig, mcfg: MoEConfig
 ) -> tuple[jax.Array, jax.Array]:

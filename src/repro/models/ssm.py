@@ -154,17 +154,28 @@ def mamba_forward(
     x: jax.Array,  # (B, L, d_model)
     cfg: ModelConfig,
     h0: Optional[jax.Array] = None,
-) -> tuple[jax.Array, jax.Array]:
-    """Full-sequence Mamba2 block. Returns (out, final_ssd_state)."""
+    lengths: Optional[jax.Array] = None,  # (B,) — prefill valid lengths
+) -> tuple[jax.Array, Any]:
+    """Full-sequence Mamba2 block. Returns (out, final_ssd_state).
+
+    With ``lengths`` (one-shot batched prefill): positions t >=
+    lengths[b] get dt forced to 0, which makes the recurrence an exact
+    identity there (decay exp(0)=1, input weight dt=0) — so the final
+    state of lane b is its state after exactly lengths[b] tokens, and
+    the return value becomes (out, {"ssd", "conv"}) — a full decode
+    cache including the conv ring (last d_conv-1 *raw* xBC inputs per
+    lane, zero-padded like a fresh ring for short prompts).
+    """
     s = cfg.ssm
     dims = ssm_dims(cfg)
     bsz, l, _ = x.shape
     hh, pp = dims["nheads"], s.head_dim
 
-    zxbcdt = lin(x, params["in_proj"])
+    zxbcdt = lin(x, params["in_proj"], site="in_proj")
     z, xbc, dtv = jnp.split(
         zxbcdt, [dims["d_inner"], dims["d_inner"] + dims["d_xbc"]], axis=-1
     )
+    xbc_raw = xbc  # pre-conv inputs: what the decode conv ring stores
     xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
     xi, bmat, cmat = jnp.split(
         xbc, [dims["d_inner"], dims["d_inner"] + s.n_groups * s.d_state], axis=-1
@@ -172,6 +183,9 @@ def mamba_forward(
     dtv = jax.nn.softplus(
         dtv.astype(jnp.float32) + params["dt_bias"]
     )  # (B, L, H)
+    if lengths is not None:
+        valid = jnp.arange(l)[None, :] < lengths[:, None]  # (B, L)
+        dtv = dtv * valid[:, :, None]
     a = -jnp.exp(params["a_log"])  # (H,)
 
     xh = xi.reshape(bsz, l, hh, pp)
@@ -184,7 +198,19 @@ def mamba_forward(
     y = y.reshape(bsz, l, dims["d_inner"]).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = rms_norm(y, params["out_norm"])
-    return lin(y, params["out_proj"]), final
+    out = lin(y, params["out_proj"], site="out_proj")
+    if lengths is None:
+        return out, final
+    # conv ring: the last (d_conv - 1) raw inputs BEFORE each lane's end,
+    # zeros where the prompt is shorter than the ring (matches a fresh
+    # ring that shifted in `lengths` tokens)
+    km1 = s.d_conv - 1
+    idx = lengths[:, None] - km1 + jnp.arange(km1)[None, :]  # (B, K-1)
+    took = jnp.take_along_axis(
+        xbc_raw, jnp.maximum(idx, 0)[:, :, None], axis=1
+    )
+    conv = jnp.where(idx[:, :, None] >= 0, took, 0).astype(xbc_raw.dtype)
+    return out, {"ssd": final, "conv": conv}
 
 
 def empty_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
@@ -210,7 +236,7 @@ def mamba_step(
     bsz = x.shape[0]
     hh, pp = dims["nheads"], s.head_dim
 
-    zxbcdt = lin(x[:, 0], params["in_proj"])  # (B, d_in_proj)
+    zxbcdt = lin(x[:, 0], params["in_proj"], site="in_proj")  # (B, d_in_proj)
     z, xbc, dtv = jnp.split(
         zxbcdt, [dims["d_inner"], dims["d_inner"] + dims["d_xbc"]], axis=-1
     )
@@ -248,5 +274,5 @@ def mamba_step(
     y = y.reshape(bsz, dims["d_inner"]).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = rms_norm(y, params["out_norm"])
-    out = lin(y, params["out_proj"])[:, None, :]
+    out = lin(y, params["out_proj"], site="out_proj")[:, None, :]
     return out, {"ssd": h_new, "conv": new_conv}

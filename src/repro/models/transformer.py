@@ -35,6 +35,7 @@ from repro.models.layers import (
     mlp_init,
     norm,
     norm_init,
+    write_prefill_kv,
 )
 
 
@@ -120,7 +121,7 @@ def logits_from_hidden(params: Params, x: jax.Array, cfg: ModelConfig):
         from repro.core.qtensor import asarray
 
         return x @ asarray(params["embed"], x.dtype).T
-    return lin(x, params["head"])
+    return lin(x, params["head"], site="head")
 
 
 def _layer_body(p: Params, x, positions, is_local, *, cfg: ModelConfig,
@@ -172,6 +173,74 @@ def forward(
                                unroll=cfg.scan_unroll)
     logits = hint_logits(logits_from_hidden(params, x, cfg))
     return logits, aux / max(cfg.num_layers, 1)
+
+
+# ---------------------------------------------------------------------------
+# one-shot batched prefill (serving admission path)
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(
+    params: Params,
+    tokens: jax.Array,  # (B, S) int32 or (B, S, d) embeddings; left-aligned
+    caches: Any,
+    lengths: jax.Array,  # (B,) int32 — valid prompt tokens per slot (0=skip)
+    cfg: ModelConfig,
+) -> tuple[jax.Array, Any]:
+    """Consume whole prompts in ONE batched step, filling decode caches.
+
+    Functionally equivalent to feeding each slot's tokens[b, :lengths[b]]
+    through ``decode_step`` one position at a time, but executed as a
+    single full-sequence forward: per-layer post-RoPE K/V are captured
+    (unexpanded) and scattered into the per-slot cache lanes, masked by
+    ``lengths`` — padded tail positions never touch the cache, and
+    causality keeps them from influencing valid positions. Returns
+    (logits (B, S, V), new_caches) with ``pos = lengths``.
+    """
+    b = tokens.shape[0]
+    s = tokens.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions, (3, b, s))
+    x = hint_batch(embed_tokens(params, tokens, cfg))
+
+    window = cfg.sliding_window
+    wins = layer_windows(cfg)
+    flags = is_local_flags(cfg)
+    homogeneous = all(w == wins[0] for w in wins)
+
+    def one_layer(p, x, cache, flag, win):
+        h, (k, v) = attention(
+            p["attn"], norm(x, p["ln1"], cfg), positions, cfg,
+            causal=True, window=win, use_window=flag, return_kv=True,
+        )
+        x = x + h
+        if cfg.moe is not None:
+            # per-token routing: identical capacity situation to decode,
+            # so prefill never capacity-drops a token decode would keep
+            h, _ = moe_lib.moe_ffn_per_token(
+                p["moe"], norm(x, p["ln2"], cfg), cfg, cfg.moe)
+        else:
+            h = mlp(p["mlp"], norm(x, p["ln2"], cfg), cfg)
+        return x + h, write_prefill_kv(cache, k, v, lengths)
+
+    if homogeneous:
+        def body(x, inp):
+            p, flag, cache = inp
+            x, new_cache = one_layer(p, x, cache, flag, wins[0])
+            return hint_batch(x), new_cache
+
+        x, new_caches = jax.lax.scan(
+            body, x, (params["layers"], flags, caches),
+            unroll=cfg.scan_unroll,
+        )
+    else:
+        new_caches = []
+        for i, win in enumerate(wins):
+            p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, nc = one_layer(p, x, caches[i], flags[i], win)
+            new_caches.append(nc)
+    return hint_logits(logits_from_hidden(params, x, cfg)), new_caches
 
 
 # ---------------------------------------------------------------------------

@@ -7,12 +7,14 @@ decode step per token — the slot axis stays fully batched no matter how
 requests arrive/finish (continuous batching). Finished slots are freed and
 refilled from the queue.
 
-Prefill feeds the prompt through the decode path token-by-token into the
-slot's cache — all newly admitted slots advance together, one batched
-step per prompt position. That is the universally-correct path across
-all five architecture families (attention KV, SSM state, hybrid,
-cross-attn); the batched one-shot prefill used at scale is exercised by
-``launch/dryrun.py``'s prefill cells, where it matters for the roofline.
+Prefill is ONE jitted batched step per admission cohort
+(``Model.prefill``): every admitted slot's whole prompt (minus the
+held-back final token) is consumed in a single full-sequence pass that
+scatters per-layer K/V (or runs the length-masked SSD recurrence) into
+the slot cache lanes — across all architecture families (attention KV,
+SSM state, hybrid, cross-attn). Prompt lengths are padded to power-of-
+two buckets so recompiles stay bounded. ``prefill_mode="steps"`` keeps
+the legacy token-by-token path (the parity oracle in tests).
 
 Slot isolation: every jitted step takes an ``active`` (B,) mask and
 merges caches through ``model.merge_caches``, so inactive slots' cache
@@ -26,6 +28,7 @@ Sampling: greedy or temperature; per-slot RNG for reproducibility.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Optional
 
@@ -59,30 +62,57 @@ class ServingEngine:
         cache_dtype=jnp.float32,
         seed: int = 0,
         int_lin: Optional["dispatch.IntegerLinConfig"] = None,
+        mesh=None,
+        prefill_mode: str = "batched",
     ):
+        if prefill_mode not in ("batched", "steps"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if mesh is not None and int_lin is not None:
+            # distribute the integer projections over the serving mesh
+            int_lin = dataclasses.replace(int_lin, mesh=mesh)
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
         self.int_lin = int_lin
+        self.mesh = mesh
+        self.prefill_mode = prefill_mode
         self.caches = model.init_caches(params, num_slots, max_len, cache_dtype)
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.queue: list[Request] = []
         self._next_token = np.zeros((num_slots, 1), np.int32)
         self._budget = np.zeros(num_slots, np.int64)
         self._rng = np.random.default_rng(seed)
+        # device-step accounting: admission latency is prefill_steps per
+        # cohort (1 on the batched path, max prompt length - 1 on the
+        # token-by-token path)
+        self.stats = {"prefill_steps": 0, "decode_steps": 0, "cohorts": 0}
+
+        def _int_ctx():
+            # trace-time context: QTensor projections lower to true
+            # integer dot products through pqs_dot under this policy
+            # (sharded over the mesh when one is configured)
+            if self.int_lin is not None:
+                return dispatch.integer_lin(self.int_lin)
+            return contextlib.nullcontext()
 
         def step(params, tok, caches, active):
-            if self.int_lin is not None:
-                # trace-time context: QTensor projections lower to true
-                # integer dot products through pqs_dot under this policy
-                with dispatch.integer_lin(self.int_lin):
-                    logits, new_caches = model.decode(params, tok, caches)
-            else:
+            with _int_ctx():
                 logits, new_caches = model.decode(params, tok, caches)
             return logits, model.merge_caches(caches, new_caches, active)
 
+        def prefill_step(params, toks, caches, lengths, active):
+            with _int_ctx():
+                _, new_caches = model.prefill(params, toks, caches, lengths)
+            # match cache leaf dtypes (e.g. f32 conv rings fed bf16
+            # activations) so merged caches keep the decode signature
+            new_caches = jax.tree_util.tree_map(
+                lambda o, n: n.astype(o.dtype), caches, new_caches
+            )
+            return model.merge_caches(caches, new_caches, active)
+
         self._step = jax.jit(step)
+        self._prefill_step = jax.jit(prefill_step)
         self._reset = jax.jit(
             lambda caches, mask: model.merge_caches(
                 caches,
@@ -90,6 +120,40 @@ class ServingEngine:
                 mask,
             )
         )
+
+    # -- calibration ---------------------------------------------------------
+
+    def calibrate(
+        self,
+        batches: list[Any],
+        act_bits: int = 8,
+        symmetric: bool = True,
+        decay: float = 0.9,
+    ) -> dict:
+        """Calibrate→freeze static activation ranges for integer decode.
+
+        Runs the model forward over ``batches`` (training-style batch
+        dicts) with the activation-range observer active, freezes the
+        bias-corrected per-site bounds into static QParams, and attaches
+        them to this engine's QTensor params (``QTensor.act_qparams``).
+        Subsequent decode steps quantize activations with the frozen
+        scales — no per-call absmax reduction (the jitted steps retrace
+        automatically because the param pytree structure changed).
+        Returns the frozen site → QParams dict.
+        """
+        from repro.core.quant import ActCalibrator
+        from repro.core.qtensor import attach_act_qparams
+
+        cal = ActCalibrator(decay=decay)
+        with dispatch.calibration(cal):
+            # jit keeps the pass fast; the range observations ride
+            # jax.debug.callback, which fires at runtime under jit/scan
+            fwd = jax.jit(self.model.forward)
+            for batch in batches:
+                jax.block_until_ready(fwd(self.params, batch))
+        frozen = cal.freeze(bits=act_bits, symmetric=symmetric)
+        self.params = attach_act_qparams(self.params, frozen)
+        return frozen
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -123,13 +187,54 @@ class ServingEngine:
         self._prefill(admitted)
 
     def _prefill(self, admitted: list[tuple[int, Request]]) -> None:
-        """Feed prompts through the decode path into the admitted slots.
+        """Consume the admitted prompts into their slots' cache lanes.
 
-        One batched step per prompt position: at step t every admitted
-        slot with a t-th prompt token is active; all other slots (both
-        mid-generation and idle) are masked out, so their caches do not
-        advance. The final prompt token is held back — it is fed by the
+        The final prompt token is always held back — it is fed by the
         first decode step, which produces the first sampled token.
+        """
+        self.stats["cohorts"] += 1
+        if self.prefill_mode == "batched":
+            self._prefill_batched(admitted)
+        else:
+            self._prefill_steps(admitted)
+        for slot, req in admitted:
+            self._next_token[slot, 0] = int(req.prompt[-1])
+            self._budget[slot] = req.max_new_tokens
+
+    def _prefill_batched(self, admitted: list[tuple[int, Request]]) -> None:
+        """ONE jitted batched prefill step for the whole admission cohort.
+
+        Prompts are left-aligned into a (num_slots, S) buffer with
+        per-slot lengths; S is padded to a power-of-two bucket so the
+        number of distinct compiled shapes stays logarithmic in max_len.
+        Non-admitted slots carry length 0 and are additionally masked
+        out of the cache merge, so mid-generation lanes are untouched.
+        """
+        longest = max(len(req.prompt) for _, req in admitted) - 1
+        if longest <= 0:
+            return  # single-token prompts: nothing to prefill
+        s = 1 << (longest - 1).bit_length()  # pow2 bucket >= longest
+        toks = np.zeros((self.num_slots, s), np.int32)
+        lengths = np.zeros(self.num_slots, np.int32)
+        active = np.zeros(self.num_slots, bool)
+        for slot, req in admitted:
+            n = len(req.prompt) - 1
+            toks[slot, :n] = req.prompt[:-1]
+            lengths[slot] = n
+            active[slot] = True
+        self.caches = self._prefill_step(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(lengths), jnp.asarray(active),
+        )
+        self.stats["prefill_steps"] += 1
+
+    def _prefill_steps(self, admitted: list[tuple[int, Request]]) -> None:
+        """Legacy path: prompts through the decode step token-by-token.
+
+        At step t every admitted slot with a t-th prompt token is
+        active; all other slots (both mid-generation and idle) are
+        masked out, so their caches do not advance. Kept as the parity
+        oracle for the batched path (tests/test_prefill_parity.py).
         """
         longest = max(len(req.prompt) for _, req in admitted)
         for t in range(longest - 1):
@@ -144,9 +249,7 @@ class ServingEngine:
                     self.params, jnp.asarray(tok), self.caches,
                     jnp.asarray(active),
                 )
-        for slot, req in admitted:
-            self._next_token[slot, 0] = int(req.prompt[-1])
-            self._budget[slot] = req.max_new_tokens
+                self.stats["prefill_steps"] += 1
 
     # -- decode loop ----------------------------------------------------------
 
@@ -172,6 +275,7 @@ class ServingEngine:
             self.params, jnp.asarray(self._next_token), self.caches,
             jnp.asarray(mask),
         )
+        self.stats["decode_steps"] += 1
         logits = np.asarray(logits.astype(jnp.float32))
         for slot in active:
             req = self.slots[slot]

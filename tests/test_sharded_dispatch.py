@@ -1,0 +1,175 @@
+"""Sharded ``pqs_dot``: multi-device CPU mesh vs single-device reference.
+
+Run with forced host devices (scripts/ci.sh does this as its own shard):
+
+    REPRO_FORCE_MULTIDEVICE=1 python -m pytest tests/test_sharded_dispatch.py
+
+The contract: for every accumulation policy and every sharding layout
+(data-only, model-only, full 2-D, degraded/non-dividing), the mesh
+execution is BIT-IDENTICAL to the single-device reference — each shard
+accumulates its (M_shard, N_shard) block over the whole K axis with the
+unmodified single-device routine, so distribution never changes the
+narrow-accumulation order. Inside the normal single-device suite this
+module self-skips (forcing 8 host devices there would change every
+other test's topology).
+"""
+
+import os
+
+# opt-in, and only effective before the first jax backend init — the
+# flag must not leak a 2-device-topology into the single-device suite
+if os.environ.get("REPRO_FORCE_MULTIDEVICE") and (
+    "--xla_force_host_platform_device_count"
+    not in os.environ.get("XLA_FLAGS", "")
+):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+if len(jax.devices()) < 2:
+    pytest.skip(
+        "needs a multi-device backend (XLA_FLAGS="
+        "--xla_force_host_platform_device_count=8 before jax init)",
+        allow_module_level=True,
+    )
+
+from repro.core.dispatch import IntegerLinConfig, pqs_dot  # noqa: E402
+from repro.core.qtensor import QTensor, quantize_tree  # noqa: E402
+
+POLICIES = ("wide", "clip", "wrap", "sorted", "sorted_tiled",
+            "sorted_tiled_seq")
+# ragged shapes on purpose: M=5 does not divide the 4-way data axis and
+# N=6 does not divide the 2-way model axis -> sanitize degradation path
+SHAPES = ((8, 300, 6), (5, 128, 16), (4, 96, 8))
+
+
+def _mesh(data, model):
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def _xw(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 127, (n, k)), jnp.int8)
+    return x, w
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("mesh_shape", [(4, 2), (8, 1), (1, 8), (2, 2)])
+def test_sharded_bit_identical(policy, mesh_shape):
+    mesh = _mesh(*mesh_shape)
+    for i, (m, k, n) in enumerate(SHAPES):
+        x, w = _xw(m, k, n, seed=i)
+        ref = pqs_dot(x, w, acc_bits=14, policy=policy, k_tile=64,
+                      backend="jnp")
+        out = pqs_dot(x, w, acc_bits=14, policy=policy, k_tile=64,
+                      backend="jnp", mesh=mesh)
+        np.testing.assert_array_equal(
+            np.asarray(ref), np.asarray(out),
+            err_msg=f"{policy} mesh={mesh_shape} shape={(m, k, n)}",
+        )
+
+
+def test_sharded_pallas_backend():
+    """The interpret-mode Pallas kernels also run inside shard_map."""
+    mesh = _mesh(4, 2)
+    x, w = _xw(8, 128, 16, seed=3)
+    ref = pqs_dot(x, w, acc_bits=14, policy="sorted_tiled_seq", k_tile=64,
+                  backend="jnp")
+    out = pqs_dot(x, w, acc_bits=14, policy="sorted_tiled_seq", k_tile=64,
+                  backend="pallas", block_m=4, block_n=8, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_sharded_census_counts_once():
+    """Census counters psum only over the partitioning axes — a dot is
+    never double-counted by replicated shards."""
+    mesh = _mesh(4, 2)
+    x, w = _xw(6, 200, 10, seed=5)
+    _, ref = pqs_dot(x, w, acc_bits=16, policy="clip", backend="jnp",
+                     with_census=True)
+    _, out = pqs_dot(x, w, acc_bits=16, policy="clip", backend="jnp",
+                     mesh=mesh, with_census=True)
+    for field in ("n_dots", "n_persistent", "n_transient", "n_any"):
+        assert int(getattr(out, field)) == int(getattr(ref, field)), field
+
+
+def test_sharded_under_jit_and_leading_dims():
+    mesh = _mesh(2, 4)
+    x, w = _xw(12, 96, 8, seed=9)
+    x3 = x.reshape(2, 6, 96)
+    ref = pqs_dot(x, w, acc_bits=16, policy="sorted", backend="jnp")
+    f = jax.jit(lambda a, b: pqs_dot(a, b, acc_bits=16, policy="sorted",
+                                     backend="jnp", mesh=mesh))
+    out = f(x3, w)
+    assert out.shape == (2, 6, 8)
+    np.testing.assert_array_equal(np.asarray(out).reshape(12, 8),
+                                  np.asarray(ref))
+
+
+def test_qtensor_param_shardings_on_mesh():
+    """QTensor pytrees shard values+scales together through the rules."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import params_shardings
+
+    mesh = _mesh(4, 2)
+    params = {
+        "layers": {
+            "attn": {
+                "wq": QTensor(jnp.zeros((4, 128, 256), jnp.int8),
+                              jnp.zeros((4, 256)),
+                              None),
+                "wo": QTensor(jnp.zeros((4, 256, 128), jnp.int8),
+                              jnp.zeros((4, 128)),
+                              None),
+            }
+        },
+        "norm": jnp.zeros((128,)),
+    }
+    sh = params_shardings(mesh, params)
+    wq = sh["layers"]["attn"]["wq"]
+    assert isinstance(wq, QTensor)
+    assert wq.values.spec == P(None, "data", "model")
+    # scale follows the values' output-channel entry
+    assert wq.scale.spec == P(None, "model")
+    # out-type projections reverse -> scale rides the data axes
+    wo = sh["layers"]["attn"]["wo"]
+    assert wo.values.spec == P(None, "model", "data")
+    assert wo.scale.spec == P(None, "data")
+
+
+def test_integer_serving_engine_on_mesh():
+    """End-to-end: quantized engine decode with the integer projections
+    distributed over the mesh reproduces the single-device outputs."""
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = quantize_tree(params, bits=8, min_size=1 << 10, min_dim=16)
+    il = IntegerLinConfig(policy="sorted_tiled_seq", acc_bits=24, k_tile=64,
+                          backend="jnp")
+
+    def run(mesh):
+        rng = np.random.default_rng(1)
+        reqs = [
+            Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 5).astype(np.int32),
+                    max_new_tokens=3)
+            for i in range(3)
+        ]
+        eng = ServingEngine(model, qparams, num_slots=2, max_len=16,
+                            int_lin=il, mesh=mesh)
+        eng.drain(reqs)
+        return [r.output for r in reqs]
+
+    assert run(None) == run(_mesh(4, 2))
