@@ -63,6 +63,124 @@ def _nm_rows():
     return rows
 
 
+def _vmem_bytes(kernel: str, bm: int, bn: int, k: int, k_tile: int) -> int:
+    """Per-grid-step VMEM working set of the sort kernels (the quantity
+    that decides whether a K compiles at all)."""
+    n_tiles = max(k // k_tile, 1)
+    if kernel == "onepass":  # product cube fully resident
+        return (bm + bn) * k + bm * bn * k * 4 + bm * bn * 4
+    # twopass: int8 slabs + perm block + interleaved working pair
+    return ((bm + bn) * k + bm * bn * n_tiles * 4
+            + bm * bn * 2 * k_tile * 4 + bm * bn * 4)
+
+
+def _time_us(fn, reps: int) -> float:
+    from repro.kernels.autotune import measure_us  # one timing protocol
+
+    return measure_us(fn, reps)
+
+
+def bench_kernels(quick: bool = False) -> list[dict]:
+    """One-pass vs two-pass sort kernels and tuned vs static blocks over
+    an (M, N, K) sweep -> BENCH_kernels.json.
+
+    On CPU the kernels run interpret mode, so absolute wall-times are
+    NOT TPU predictions — they are recorded to seed the perf trajectory
+    (the same harness on a TPU runner produces honest numbers) alongside
+    the structural VMEM working sets, which are platform truths. The
+    one-pass column reads "refused" where the compiled kernel would
+    exceed MAX_RESIDENT_K.
+    """
+    import os
+    import tempfile
+
+    import jax
+    from repro.kernels import autotune, ops
+
+    reps = 1 if quick else 3
+    shapes = [(16, 16, 512), (16, 16, 2048)] if quick else [
+        (16, 16, 512), (16, 16, 2048), (8, 16, 8192), (32, 32, 1024)]
+    k_tile, bm, bn = 128, 4, 8  # small blocks: interpret grids are loops
+    rng = np.random.default_rng(0)
+    rows = []
+    for policy in ("sorted", "sorted_tiled"):
+        for m, n, k in shapes:
+            x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
+            w = jnp.asarray(rng.integers(-127, 127, (n, k)), jnp.int8)
+            kp = ops.padded_k(k, policy, k_tile)
+            base = dict(policy=policy, acc_bits=16, k_tile=k_tile,
+                        bm=bm, bn=bn)
+            two_us = _time_us(lambda: ops.policy_matmul(
+                x, w, sort_impl="twopass", **base), reps)
+            # VMEM columns are computed at the SAME blocks the timings
+            # ran on (recorded in "blocks"), so time and footprint in a
+            # row describe one configuration
+            row = {
+                "policy": policy, "m": m, "n": n, "k": k,
+                "blocks": f"{bm}x{bn}x{k_tile}",
+                "twopass_us": round(two_us),
+                "twopass_vmem_kib": round(
+                    _vmem_bytes("twopass", bm, bn, kp, k_tile) / 1024, 1),
+                "onepass_vmem_kib": round(
+                    _vmem_bytes("onepass", bm, bn, kp, k_tile) / 1024, 1),
+            }
+            if kp <= ops.MAX_RESIDENT_K:
+                one_us = _time_us(lambda: ops.policy_matmul(
+                    x, w, sort_impl="onepass", **base), reps)
+                row["onepass_us"] = round(one_us)
+                out_a = ops.policy_matmul(x, w, sort_impl="onepass", **base)
+                out_b = ops.policy_matmul(x, w, sort_impl="twopass", **base)
+                assert (np.asarray(out_a) == np.asarray(out_b)).all(), \
+                    (policy, m, n, k)
+            else:
+                row["onepass_us"] = "refused"
+            rows.append(row)
+
+    # tuned vs static blocks: run the measured autotuner on one shape per
+    # policy kind with a trimmed candidate set, then compare
+    m, n, k = (16, 16, 512)
+    x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 127, (n, k)), jnp.int8)
+    tiny = {"clip": ((4, 8, 64), (2, 4, 32), (8, 8, 128)),
+            "sorted_tiled": ((4, 8, None), (2, 4, None), (8, 8, None))}
+    saved_env = {kk: os.environ.get(kk) for kk in
+                 ("REPRO_PQS_AUTOTUNE", "REPRO_PQS_AUTOTUNE_CACHE")}
+    saved_cand = autotune.CANDIDATES
+    tmp = tempfile.mkdtemp(prefix="pqs-bench-autotune-")
+    try:
+        os.environ["REPRO_PQS_AUTOTUNE_CACHE"] = os.path.join(tmp, "at.json")
+        os.environ["REPRO_PQS_AUTOTUNE"] = "tune"
+        autotune.CANDIDATES = tiny
+        autotune.reset()
+        for policy in ("clip", "sorted_tiled"):
+            base = dict(policy=policy, acc_bits=16, k_tile=128)
+            static_us = _time_us(
+                lambda: ops.policy_matmul(x, w, bm=4, bn=8, **base), reps)
+            ops.policy_matmul(x, w, **base)  # first call tunes + persists
+            tuned_us = _time_us(lambda: ops.policy_matmul(x, w, **base),
+                                reps)
+            win = autotune.best_blocks(policy, m, n,
+                                       ops.padded_k(k, policy, 128))
+            rows.append({
+                "policy": policy, "m": m, "n": n, "k": k,
+                "static_us": round(static_us),
+                "tuned_us": round(tuned_us),
+                "tuned_blocks": f"{win[0]}x{win[1]}x{win[2]}",
+            })
+    finally:
+        autotune.CANDIDATES = saved_cand
+        for kk, v in saved_env.items():
+            os.environ.pop(kk, None) if v is None else \
+                os.environ.__setitem__(kk, v)
+        autotune.reset()
+
+    keys = ["policy", "m", "n", "k", "blocks", "onepass_us", "twopass_us",
+            "onepass_vmem_kib", "twopass_vmem_kib", "static_us",
+            "tuned_us", "tuned_blocks"]
+    emit("BENCH_kernels", rows, keys)
+    return rows
+
+
 def run() -> list[dict]:
     # correctness spot checks (small shapes, interpret mode): every policy
     # through the unified dispatch layer, jnp vs pallas backends

@@ -17,7 +17,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,fig4,fig5,tiled,kernels,"
-                         "roofline,serve")
+                         "kbench,roofline,serve")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -41,6 +41,7 @@ def main() -> None:
         ("fig5", lambda: pareto_accum.run(epochs=epochs)),
         ("tiled", lambda: tiled_sort.run(epochs=max(epochs - 2, 6))),
         ("kernels", kernel_bench.run),
+        ("kbench", lambda: kernel_bench.bench_kernels(quick=args.quick)),
         ("roofline", roofline.run),
         ("serve", lambda: serving_latency.run(
             steps=8 if args.quick else 20)),

@@ -21,3 +21,6 @@ REPRO_FORCE_MULTIDEVICE=1 python -m pytest -x -q tests/test_sharded_dispatch.py
 
 echo "== quickstart smoke =="
 python examples/quickstart.py
+
+echo "== kernel bench smoke (one-pass vs two-pass sort, CPU interpret) =="
+python -m benchmarks.run --only kbench --quick

@@ -57,6 +57,11 @@ from repro.kernels import ops
 POLICIES = ops.POLICIES  # derived from the kernel modules — one list
 BACKENDS = ("jnp", "pallas")
 
+# Cap on the HBM tile-sum + permutation statistic of the two-pass
+# sorted_tiled kernel (per M-chunk: 2 * 4 * N * K/k_tile bytes/row);
+# pqs_dot defaults batch_chunk to stay under it.
+_SORT_STATS_BUDGET = 256 * 1024 * 1024
+
 
 def default_backend() -> str:
     """pallas on real TPUs (compiled kernels); jnp reference elsewhere.
@@ -93,6 +98,7 @@ def _local_dot(
     interpret: Optional[bool],
     block_m: Optional[int],
     block_n: Optional[int],
+    sort_impl: str,
     batch_chunk: Optional[int],
     with_census: bool,
 ) -> tuple[jax.Array, Optional[Census]]:
@@ -112,7 +118,7 @@ def _local_dot(
                 ops.policy_matmul(
                     xc, w, policy=policy, acc_bits=acc_bits, k_tile=k_tile,
                     rounds=rounds, bm=block_m, bn=block_n,
-                    interpret=interpret,
+                    sort_impl=sort_impl, interpret=interpret,
                 )
             )
         if with_census:
@@ -193,6 +199,7 @@ def pqs_dot(
     interpret: Optional[bool] = None,
     block_m: Optional[int] = None,
     block_n: Optional[int] = None,
+    sort_impl: str = "auto",
     batch_chunk: Optional[int] = None,
     with_census: bool = False,
     mesh=None,
@@ -209,7 +216,11 @@ def pqs_dot(
     Any M/N/K works: padding and batch chunking happen here, not at call
     sites. ``backend`` overrides the platform default; both backends are
     bit-identical per policy. ``block_m``/``block_n`` default to the
-    per-platform table in ``kernels.ops`` (env-overridable).
+    measured-autotune winner when REPRO_PQS_AUTOTUNE is enabled, else
+    the per-platform table in ``kernels.ops`` (env-overridable).
+    ``sort_impl`` picks the Pallas kernel for the global-sort policies:
+    ``auto`` (one-pass K-resident up to ``ops.MAX_RESIDENT_K``, two-pass
+    streaming above), ``onepass``, or ``twopass``.
 
     With ``mesh`` (a ``jax.sharding.Mesh``), the dot executes under
     ``shard_map``: M sharded over ``m_axes`` (default: the mesh's data
@@ -231,10 +242,19 @@ def pqs_dot(
         x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
         w = jnp.pad(w, ((0, 0), (0, kp - k)))
 
+    if (batch_chunk is None and backend == "pallas"
+            and policy == "sorted_tiled" and sort_impl != "onepass"):
+        # the two-pass kernel's pass 1 materializes (chunk, N, K/k_tile)
+        # int32 tile sums (+ a same-shape permutation) in HBM; chunk M so
+        # that statistic stays bounded instead of scaling with the full
+        # batch. Chunking M is exact — every dot is element-independent.
+        per_row = 2 * 4 * n * max(kp // k_tile, 1)  # sums + perm bytes
+        batch_chunk = max(_SORT_STATS_BUDGET // per_row, 1)
+
     kw = dict(
         acc_bits=acc_bits, policy=policy, k_tile=k_tile, rounds=rounds,
         backend=backend, interpret=interpret, block_m=block_m,
-        block_n=block_n, batch_chunk=batch_chunk,
+        block_n=block_n, sort_impl=sort_impl, batch_chunk=batch_chunk,
     )
     if mesh is not None:
         res = _sharded_dot(x2, w, mesh, m_axes, n_axis, with_census, **kw)

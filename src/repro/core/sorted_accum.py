@@ -143,6 +143,33 @@ def monotone_accumulate(
     return acc, ovf
 
 
+def pair_permutation(sums: jax.Array) -> jax.Array:
+    """Rank-and-interleave tile pairing from per-tile net sums.
+
+    ``sums`` is (..., n_tiles); the result is a permutation of tile
+    indices placing positives-descending ranks into even slots and
+    ascending (most negative first) ranks into odd slots —
+    ``pairwise_round`` at tile granularity. desc[:half] and
+    asc[:n_tiles - half] partition the ranks, so every tile appears
+    exactly once.
+
+    This is THE pairing rule of the ``sorted_tiled`` policy: the jnp
+    oracle (``tiled_sorted_order``) and both Pallas kernels (one-pass
+    ``sort_matmul`` and the two-pass ``kernels.sorted_stream`` pipeline)
+    all call it, so the permutation has a single definition. Ties break
+    like ``jnp.argsort`` (stable): equal sums order by tile index
+    ascending in ``asc`` and by flipped position in ``desc``.
+    """
+    n_tiles = sums.shape[-1]
+    desc = jnp.flip(jnp.argsort(sums, axis=-1), axis=-1)
+    asc = jnp.argsort(sums, axis=-1)
+    half = (n_tiles + 1) // 2
+    perm = jnp.zeros(desc.shape, desc.dtype)
+    perm = perm.at[..., 0::2].set(desc[..., :half])
+    perm = perm.at[..., 1::2].set(asc[..., : n_tiles - half])
+    return perm
+
+
 def tiled_sorted_order(
     prods: jax.Array, k_tile: int, rounds: int = 2, order_fn=None
 ) -> jax.Array:
@@ -175,16 +202,12 @@ def tiled_sorted_order(
     ordered = (order_fn or sorted_order)(tiles, rounds)
     if n_tiles == 1:
         return ordered.reshape(prods.shape)
-    # Pairing permutation: positives-descending tiles into even slots,
-    # ascending (most negative first) into odd slots — pairwise_round at
-    # tile granularity. desc[:half] and asc[:n-half] partition the ranks.
+    # Tile pairing: the shared rank-and-interleave rule over tile sums
+    # (sorting a tile never changes its sum, so the permutation is
+    # identical whether computed from raw or intra-tile-sorted products —
+    # the property the two-pass kernel's pass 1 relies on).
     sums = jnp.sum(ordered, axis=-1)  # (..., n_tiles)
-    desc = jnp.flip(jnp.argsort(sums, axis=-1), axis=-1)
-    asc = jnp.argsort(sums, axis=-1)
-    half = (n_tiles + 1) // 2
-    perm = jnp.zeros(desc.shape, desc.dtype)
-    perm = perm.at[..., 0::2].set(desc[..., :half])
-    perm = perm.at[..., 1::2].set(asc[..., : n_tiles - half])
+    perm = pair_permutation(sums)
     ordered = jnp.take_along_axis(ordered, perm[..., None], axis=-2)
     # Element-interleave each adjacent tile pair; odd leftover tile appended.
     n_pairs = n_tiles // 2

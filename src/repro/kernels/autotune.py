@@ -1,0 +1,197 @@
+"""Measure-and-cache block-shape autotuning for ``kernels.ops``.
+
+The static ``_BLOCK_TABLE`` in ``ops.py`` encodes one reasonable (bm, bn)
+per (platform, policy); real layer shapes reward different blockings
+(long-K decode projections vs wide prefill batches), so ``policy_matmul``
+can instead *measure*: on the first call per (policy, platform,
+pow2-bucketed padded M/N/K), time a small per-policy candidate set of
+(bm, bn, bk) and persist the winner to an on-disk JSON cache. Later
+calls — including in other processes — reuse the winner.
+
+Env control (``REPRO_PQS_AUTOTUNE``):
+
+  off       (default) never measure, never read the cache — the static
+            table (and the ``REPRO_PQS_BLOCKS`` override) rules.
+  tune      measure cache misses, persist winners to the cache file.
+  readonly  use cached winners, fall back to the static table on a miss;
+            never measure (the serving-fleet mode: tune once offline,
+            ship the cache file read-only).
+
+Cache file: ``REPRO_PQS_AUTOTUNE_CACHE`` or
+``~/.cache/repro-pqs/autotune-<platform>.json``. Schema:
+``{"version": 1, "entries": {"<policy>|<platform>|MxNxK": {"bm", "bn",
+"bk", "us"}}}`` — ``bk`` is null for policies whose K depth is semantic
+(``sorted_tiled_seq``, where bk IS the paper's k_tile) or slab-resident
+(the global-sort policies).
+
+Tuning is skipped (readonly behavior) under a jit trace — timing a
+tracer is meaningless — and measured times are wall-clock with
+``block_until_ready``, median of ``REPS`` runs after one warmup, so the
+numbers are honest on TPU and merely self-consistent in interpret mode.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Callable, Optional
+
+import jax
+
+MODES = ("off", "tune", "readonly")
+REPS = 3
+
+# Per-policy candidate (bm, bn, bk) sets. bk=None means "not tunable for
+# this policy" (k_tile-bound or slab-resident); keep the sets small —
+# tune mode compiles and times every candidate on first use per bucket.
+CANDIDATES: dict[str, tuple[tuple[int, int, Optional[int]], ...]] = {
+    "wide": ((128, 128, 512), (64, 128, 512), (128, 256, 512),
+             (128, 128, 1024)),
+    "clip": ((8, 128, 256), (16, 128, 256), (8, 128, 512), (8, 256, 256)),
+    "wrap": ((8, 128, 256), (16, 128, 256), (8, 128, 512), (8, 256, 256)),
+    "sorted": ((8, 128, None), (4, 128, None), (8, 256, None)),
+    "sorted_tiled": ((8, 128, None), (4, 128, None), (8, 256, None)),
+    "sorted_tiled_seq": ((8, 128, None), (16, 128, None), (8, 256, None)),
+}
+
+_MEMO: dict[str, Optional[dict]] = {}  # key -> winning entry (in-process)
+_DISK: dict[str, dict] = {}  # path -> loaded entries
+
+
+def mode() -> str:
+    m = os.environ.get("REPRO_PQS_AUTOTUNE", "off").strip().lower()
+    if m not in MODES:
+        raise ValueError(
+            f"REPRO_PQS_AUTOTUNE must be one of {MODES}, got {m!r}")
+    return m
+
+
+def cache_path(platform: Optional[str] = None) -> str:
+    env = os.environ.get("REPRO_PQS_AUTOTUNE_CACHE")
+    if env:
+        return env
+    platform = platform or jax.default_backend()
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-pqs",
+                        f"autotune-{platform}.json")
+
+
+def reset() -> None:
+    """Drop in-process memoization (tests; cache files are untouched)."""
+    _MEMO.clear()
+    _DISK.clear()
+
+
+def _bucket(v: int) -> int:
+    return 1 if v <= 1 else 1 << (v - 1).bit_length()
+
+
+def shape_key(policy: str, platform: str, m: int, n: int, kp: int) -> str:
+    return (f"{policy}|{platform}|"
+            f"{_bucket(m)}x{_bucket(n)}x{_bucket(kp)}")
+
+
+def _read(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f).get("entries", {})
+    except (OSError, ValueError):
+        return {}
+
+
+def _load(path: str) -> dict:
+    if path not in _DISK:
+        _DISK[path] = _read(path)
+    return _DISK[path]
+
+
+def _persist(path: str, entries: dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"version": 1, "entries": entries}, f, indent=1,
+                      sort_keys=True)
+        os.replace(tmp, path)  # atomic on POSIX
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+def measure_us(run: Callable[[], jax.Array], reps: int | None = None
+               ) -> float:
+    """Median wall-clock microseconds over ``reps`` runs (default REPS),
+    after one untimed warmup (compile + cache warm). The one timing
+    protocol — the tuner and benchmarks/kernel_bench.py both use it."""
+    reps = REPS if reps is None else reps
+    jax.block_until_ready(run())
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def best_blocks(
+    policy: str,
+    m: int,
+    n: int,
+    kp: int,
+    *,
+    platform: Optional[str] = None,
+    runner: Optional[Callable[[int, int, Optional[int]], jax.Array]] = None,
+    tracing: bool = False,
+) -> Optional[tuple[int, int, Optional[int]]]:
+    """(bm, bn, bk) for this shape bucket, or None (caller falls back).
+
+    ``runner(bm, bn, bk)`` executes the real matmul once with those
+    blocks (``ops.policy_matmul`` passes a closure over its actual
+    operands, so the measurement includes its padding). Only consulted
+    in tune mode; readonly mode (and tune mode under a jit trace, when
+    ``tracing``) answers purely from the cache.
+    """
+    md = mode()
+    if md == "off":
+        return None
+    platform = platform or jax.default_backend()
+    key = shape_key(policy, platform, m, n, kp)
+    if key in _MEMO:
+        e = _MEMO[key]
+        return (e["bm"], e["bn"], e["bk"]) if e else None
+    path = cache_path(platform)
+    e = _load(path).get(key)
+    if e is None and md == "tune" and runner is not None and not tracing:
+        e = _measure(policy, key, runner)
+        if e is not None:
+            # merge into a FRESH read so concurrent tuners sharing the
+            # file don't clobber each other's buckets, then swap the
+            # in-process view to the merged state
+            entries = _read(path)
+            entries[key] = e
+            _persist(path, entries)
+            _DISK[path] = entries
+        _MEMO[key] = e  # a completed measurement (even a failed one,
+        # e=None when every candidate errored) is this process's answer
+    elif e is not None:
+        _MEMO[key] = e
+    # a miss due to readonly mode or an in-trace call is NOT memoized:
+    # a later eager tune-mode call must still be able to measure
+    return (e["bm"], e["bn"], e["bk"]) if e else None
+
+
+def _measure(policy: str, key: str, runner) -> Optional[dict]:
+    best = None
+    for bm, bn, bk in CANDIDATES.get(policy, ()):
+        try:
+            us = measure_us(lambda: runner(bm, bn, bk))
+        except Exception:  # candidate failed to lower/fit — skip it
+            continue
+        if best is None or us < best["us"]:
+            best = {"bm": bm, "bn": bn, "bk": bk, "us": round(us, 1)}
+    return best

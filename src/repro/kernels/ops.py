@@ -23,23 +23,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pruning import nm_compress
+from repro.kernels import autotune
 from repro.kernels import nm_spmm as _nm
 from repro.kernels import quant_matmul as _qm
 from repro.kernels import sorted_matmul as _sm
+from repro.kernels import sorted_stream as _ss
 
 POLICIES = _sm.SEQ_POLICIES + _sm.SORT_POLICIES
 
-# Largest K the compiled (non-interpret) global-sort kernels may keep
-# VMEM-resident: 8 * 128 * 4096 * 4 B = 16 MiB for the product cube.
+# Largest K the compiled (non-interpret) LEGACY one-pass sort kernel may
+# keep VMEM-resident: 8 * 128 * 4096 * 4 B = 16 MiB for the product cube.
+# The two-pass streaming pipeline (kernels/sorted_stream.py) is bounded
+# by its int8 operand slabs instead: bn * K bytes, so MAX_STREAM_K below.
 MAX_RESIDENT_K = 4096
+MAX_STREAM_K = 65536
+
+SORT_IMPLS = ("auto", "onepass", "twopass")
 
 # Per-platform (bm, bn) defaults for policy_matmul, keyed by
 # jax.default_backend(). The sort policies keep bm small: their product
-# cube is bm*bn*K VMEM-resident, so M-blocking is the lever that keeps
-# the footprint under budget. On TPU, bn rides the 128-lane dim and the
-# stepwise policies want a full (8, 128) f32 tile; CPU interpret mode
-# favors small blocks (python-loop grid — fewer, larger steps lose).
-# Override for experiments with REPRO_PQS_BLOCKS="bm,bn" (both ints).
+# cube (one-pass) or working pair (two-pass) scales with bm, so
+# M-blocking is the lever that keeps the footprint under budget. On TPU,
+# bn rides the 128-lane dim and the stepwise policies want a full
+# (8, 128) f32 tile; CPU interpret mode favors small blocks
+# (python-loop grid — fewer, larger steps lose). This table is the seed
+# and fallback for the measured autotuner (kernels/autotune.py,
+# REPRO_PQS_AUTOTUNE=off|tune|readonly); REPRO_PQS_BLOCKS overrides
+# everything — "bm,bn" for all policies, or per-policy entries like
+# "sorted:8,128;wide:128,128" (policies without an entry fall through).
 _BLOCK_TABLE: dict[str, dict[str, tuple[int, int]]] = {
     "tpu": {
         "wide": (128, 128),  # MXU dot: full systolic tile
@@ -55,18 +66,55 @@ _BLOCK_TABLE: dict[str, dict[str, tuple[int, int]]] = {
 }
 
 
+_BLOCKS_SYNTAX = (
+    "REPRO_PQS_BLOCKS must be 'bm,bn' (two ints, all policies) or "
+    "';'-separated per-policy entries 'policy:bm,bn' "
+    "(e.g. \"sorted:8,128;wide:128,128\")"
+)
+
+
+def env_blocks(policy: str) -> tuple[int, int] | None:
+    """The REPRO_PQS_BLOCKS override for ``policy``, or None.
+
+    Accepts the bare ``"bm,bn"`` form (applies to every policy) and
+    per-policy entries ``"sorted:8,128;wide:128,128"``; the two forms
+    may be mixed (the bare entry becomes the default for policies
+    without their own). Malformed input raises with the full syntax.
+    """
+    env = os.environ.get("REPRO_PQS_BLOCKS")
+    if not env:
+        return None
+    default = None
+    per_policy: dict[str, tuple[int, int]] = {}
+    for entry in env.split(";"):
+        entry = entry.strip()
+        if not entry:
+            continue
+        name, _, pair = entry.rpartition(":")
+        try:
+            bm, bn = (int(v) for v in pair.split(","))
+        except ValueError as e:
+            raise ValueError(
+                f"{_BLOCKS_SYNTAX}; bad entry {entry!r} in {env!r}"
+            ) from e
+        if name:
+            if name not in POLICIES:
+                raise ValueError(
+                    f"{_BLOCKS_SYNTAX}; unknown policy {name!r} in {env!r} "
+                    f"(expected one of {POLICIES})"
+                )
+            per_policy[name] = (bm, bn)
+        else:
+            default = (bm, bn)
+    return per_policy.get(policy, default)
+
+
 def default_blocks(policy: str, platform: str | None = None
                    ) -> tuple[int, int]:
     """(bm, bn) for a policy on the current (or given) platform."""
-    env = os.environ.get("REPRO_PQS_BLOCKS")
+    env = env_blocks(policy)
     if env:
-        try:
-            bm, bn = (int(v) for v in env.split(","))
-            return bm, bn
-        except ValueError as e:
-            raise ValueError(
-                f"REPRO_PQS_BLOCKS must be 'bm,bn' (two ints), got {env!r}"
-            ) from e
+        return env
     table = _BLOCK_TABLE.get(platform or jax.default_backend(),
                              _BLOCK_TABLE["cpu"])
     return table.get(policy) or table.get("*") or (8, 128)
@@ -87,7 +135,9 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
 
 
 def next_pow2(n: int) -> int:
-    return 1 << max(n - 1, 1).bit_length()
+    """Smallest power of two >= n (and 1 for n <= 1: a K=1 dot is already
+    bitonic-sortable — padding it to 2 would be pure waste)."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
 def padded_k(k: int, policy: str, k_tile: int) -> int:
@@ -104,6 +154,81 @@ def padded_k(k: int, policy: str, k_tile: int) -> int:
     return k
 
 
+def _as_int8(a: jax.Array) -> jax.Array:
+    """Narrow an integer carrier to int8 for the streaming sort slabs.
+
+    Slab VMEM is what scales with K in the two-pass pipeline, and
+    carriers hold int8 values by the ``pqs_dot`` contract, so the cast
+    is lossless for every legitimate caller. A silently wrapped
+    out-of-contract value would diverge from the jnp backend, so on
+    concrete (non-traced) operands the contract is checked loudly; the
+    check is one cheap reduction next to a sort matmul. Traced calls
+    (jitted serving steps, whose carriers come from int8 quantizers)
+    trust the contract.
+    """
+    if a.dtype == jnp.int8:
+        return a
+    if not isinstance(a, jax.core.Tracer):
+        lo, hi = int(jnp.min(a)), int(jnp.max(a))
+        if lo < -128 or hi > 127:
+            raise ValueError(
+                f"two-pass sort carriers must hold int8 values (pqs_dot "
+                f"contract); got range [{lo}, {hi}] in {a.dtype}. Use "
+                "sort_impl='onepass' (K-resident) or backend='jnp' for "
+                "wider products."
+            )
+    return a.astype(jnp.int8)
+
+
+def resolve_sort_impl(kp: int, interpret: bool,
+                      sort_impl: str = "auto") -> str:
+    """Which global-sort kernel serves a (padded-)K request.
+
+    ``auto`` keeps the legacy one-pass kernel where it is known-good
+    (K within MAX_RESIDENT_K) and switches to the two-pass streaming
+    pipeline above it. Explicit ``onepass`` above the resident bound on
+    a compiled path raises — that is the one case the old hard refusal
+    still covers; ``twopass`` is refused only past MAX_STREAM_K (the
+    int8 slab budget), interpret mode is unbounded.
+    """
+    if sort_impl not in SORT_IMPLS:
+        raise ValueError(
+            f"sort_impl must be one of {SORT_IMPLS}, got {sort_impl!r}")
+    if sort_impl == "auto":
+        sort_impl = "onepass" if kp <= MAX_RESIDENT_K else "twopass"
+    if interpret:
+        return sort_impl
+    if sort_impl == "onepass" and kp > MAX_RESIDENT_K:
+        raise ValueError(
+            f"one-pass sort kernel needs K={kp} VMEM-resident, above the "
+            f"compiled-kernel bound {MAX_RESIDENT_K}; use "
+            "sort_impl='twopass' (default above the bound)"
+        )
+    if sort_impl == "twopass" and kp > MAX_STREAM_K:
+        raise ValueError(
+            f"two-pass sort pipeline keeps (bn, K) int8 slabs resident; "
+            f"K={kp} exceeds MAX_STREAM_K={MAX_STREAM_K}; use "
+            "policy='sorted_tiled_seq' (fully K-streaming) or "
+            "backend='jnp'"
+        )
+    return sort_impl
+
+
+def _blocks_for(policy, m, n, kp, runner, tracing):
+    """bm, bn, bk resolution: env override > autotune (when enabled) >
+    static table. bk is only tunable for the free-depth seq policies."""
+    env = env_blocks(policy)
+    if env:
+        return env[0], env[1], None
+    if autotune.mode() != "off":
+        tuned = autotune.best_blocks(policy, m, n, kp, runner=runner,
+                                     tracing=tracing)
+        if tuned:
+            return tuned
+    dbm, dbn = default_blocks(policy)
+    return dbm, dbn, None
+
+
 def policy_matmul(
     x: jax.Array,  # (M, K) integer carrier
     w: jax.Array,  # (N, K) integer carrier
@@ -114,47 +239,69 @@ def policy_matmul(
     rounds: int = 1,
     bm: int | None = None,
     bn: int | None = None,
+    bk: int | None = None,
+    sort_impl: str = "auto",
     interpret: bool | None = None,
 ) -> jax.Array:
     """(M, N) int32 under any accumulation policy, any shape.
 
     The single Pallas entry point behind ``core.dispatch.pqs_dot``:
     pads M/N/K to block multiples, picks the K-streaming kernel for
-    order-preserving policies and the K-resident sort kernel for the
-    global-permutation ones, and slices the result back. ``bm``/``bn``
-    default to the per-platform ``_BLOCK_TABLE`` entry for the policy
-    (env override: REPRO_PQS_BLOCKS="bm,bn").
+    order-preserving policies and a global-sort kernel (one-pass
+    K-resident or two-pass streaming, ``sort_impl``) for the
+    permutation ones, and slices the result back. ``bm``/``bn``/``bk``
+    default to the measured-autotune winner when REPRO_PQS_AUTOTUNE is
+    enabled, else the per-platform ``_BLOCK_TABLE`` entry
+    (REPRO_PQS_BLOCKS overrides both — bare "bm,bn" or per-policy
+    "sorted:8,128;wide:128,128").
     """
     assert policy in POLICIES, policy
-    dbm, dbn = default_blocks(policy)
-    bm = dbm if bm is None else bm
-    bn = dbn if bn is None else bn
     interpret = (not _on_tpu()) if interpret is None else interpret
     m, n = x.shape[0], w.shape[0]
     kp = padded_k(x.shape[1], policy, k_tile)
-    if policy in _sm.SORT_POLICIES and not interpret and kp > MAX_RESIDENT_K:
-        # compiled sort_matmul keeps the whole K axis VMEM-resident
-        # (bm*bn*K*4 bytes before sort temporaries)
-        raise ValueError(
-            f"policy {policy!r} needs K={kp} VMEM-resident, above the "
-            f"compiled-kernel bound {MAX_RESIDENT_K}; use "
-            "policy='sorted_tiled_seq' (K-streaming) or backend='jnp'"
-        )
-    xp = _pad_to(_pad_to(x, bm, 0), kp, 1)
-    wp = _pad_to(_pad_to(w, kp, 1), bn, 0)
+    if bm is None and bn is None:
+        # the tuner only rules when the caller pinned NEITHER dimension:
+        # a winner was measured as a (bm, bn, bk) unit, so grafting one
+        # of its axes onto a caller-pinned other would apply (and cache)
+        # a configuration that was never timed or fit-checked
+        def _runner(cbm, cbn, cbk):
+            return policy_matmul(
+                x, w, policy=policy, acc_bits=acc_bits, k_tile=k_tile,
+                rounds=rounds, bm=cbm, bn=cbn, bk=cbk,
+                sort_impl=sort_impl, interpret=interpret,
+            )
+
+        bm, bn, abk = _blocks_for(policy, m, n, kp, _runner,
+                                  tracing=isinstance(x, jax.core.Tracer))
+        bk = abk if bk is None else bk
+    elif bm is None or bn is None:
+        dbm, dbn = default_blocks(policy)
+        bm = dbm if bm is None else bm
+        bn = dbn if bn is None else bn
     if policy in _sm.SORT_POLICIES:
-        out = _sm.sort_matmul(
-            xp, wp, policy=policy, acc_bits=acc_bits, k_tile=k_tile,
-            rounds=rounds, bm=bm, bn=bn, interpret=interpret,
-        )
+        impl = resolve_sort_impl(kp, interpret, sort_impl)
+        xp = _pad_to(_pad_to(x, bm, 0), kp, 1)
+        wp = _pad_to(_pad_to(w, kp, 1), bn, 0)
+        if impl == "onepass":
+            out = _sm.sort_matmul(
+                xp, wp, policy=policy, acc_bits=acc_bits, k_tile=k_tile,
+                rounds=rounds, bm=bm, bn=bn, interpret=interpret,
+            )
+        else:
+            out = _ss.stream_sort_matmul(
+                _as_int8(xp), _as_int8(wp), policy=policy,
+                acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
+                bm=bm, bn=bn, interpret=interpret,
+            )
     else:
         # streaming block depth: the sort tile for sorted_tiled_seq, else
         # a bandwidth-friendly slab that divides the (padded) K
-        bk = k_tile if policy == "sorted_tiled_seq" else min(
-            512, next_pow2(kp)
-        )
-        xp = _pad_to(xp, bk, 1)
-        wp = _pad_to(wp, bk, 1)
+        if policy == "sorted_tiled_seq":
+            bk = k_tile
+        elif bk is None:
+            bk = min(512, next_pow2(kp))
+        xp = _pad_to(_pad_to(_pad_to(x, bm, 0), kp, 1), bk, 1)
+        wp = _pad_to(_pad_to(_pad_to(w, kp, 1), bk, 1), bn, 0)
         out = _sm.seq_policy_matmul(
             xp, wp, policy=policy, acc_bits=acc_bits, rounds=rounds,
             bm=bm, bn=bn, bk=bk, interpret=interpret,

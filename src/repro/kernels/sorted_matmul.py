@@ -22,10 +22,12 @@ output block on the VPU.
 
 VMEM budget: the (bm, bn, bk) partial-product cube dominates at
 bm*bn*bk*4 bytes — default (8, 128, 256) = 1 MiB, inside v5e's VMEM
-alongside the x/w slabs. For ``sort_matmul`` bk is the whole padded K:
-``kernels/ops.policy_matmul`` refuses compiled (non-interpret) calls
-above ``ops.MAX_RESIDENT_K`` and points callers at the K-streaming
-``sorted_tiled_seq`` policy or the jnp backend.
+alongside the x/w slabs. ``sort_matmul`` is the *legacy one-pass* form
+of the global-permutation policies (bk = the whole padded K, cube fully
+resident): ``kernels/ops.policy_matmul`` uses it up to
+``ops.MAX_RESIDENT_K`` and routes larger K to the two-pass streaming
+pipeline in ``kernels/sorted_stream.py``, which bounds VMEM by the int8
+operand slabs instead of the cube (``ops.MAX_STREAM_K``).
 
 Semantics are bit-exact with the pure-jnp oracles (``ref.py`` /
 ``core.overflow.accumulate``): stepwise saturation, not cumsum-then-clip,

@@ -1,0 +1,290 @@
+"""Two-pass K-streaming kernels for the global-permutation sort policies.
+
+The legacy ``sorted_matmul.sort_matmul`` keeps the whole (bm, bn, K)
+partial-product cube VMEM-resident, which caps compiled calls at
+``kernels.ops.MAX_RESIDENT_K``. The kernels here replace the cube with
+the operand *slabs* (int8, 4x narrower than the int32 products and bn x
+smaller than the cube) plus an O(k_tile) working set, lifting the K
+ceiling from 4096 to ``kernels.ops.MAX_STREAM_K`` (65536 by default):
+
+``sorted_tiled`` — two genuine passes over K:
+
+  pass 1  ``tile_sums_matmul``: stream k_tiles through the grid (MXU dot
+          per tile) into a (M, N, K/k_tile) tile-sum statistic. Sorting
+          a tile never changes its sum, so these raw-product sums equal
+          the oracle's post-sort sums exactly (int32 addition is
+          associative; k_tile * 127^2 is far below 2^31).
+  pairing ``core.sorted_accum.pair_permutation`` over the tile sums —
+          literally the oracle's rank-and-interleave rule, evaluated
+          once outside the kernels on the small (M, N, n_tiles) array.
+  pass 2  ``paired_accum_matmul``: revisit K in *paired* order. The
+          pairing is per output element (each (m, n) dot ranks its own
+          tile sums), so a permutation-driven BlockSpec index map —
+          which is necessarily uniform across the (bm, bn) block —
+          cannot realize it. Instead the int8 operand slabs stay
+          resident, and each pair slot gathers its two k_tiles per
+          element (``take_along_axis`` over the K axis), bitonic-sorts
+          them intra-tile, element-interleaves (a0, b0, a1, b1, ...)
+          and saturating-accumulates stepwise. Only the (bm, bn,
+          2*k_tile) interleaved pair is ever materialized as products.
+
+``sorted`` — the order is one split/sort/pair stage over the *whole* K
+axis per element, so the product cube genuinely must exist to be
+sorted; ``chunked_sort_matmul`` bounds it by chunking the bn axis
+inside the kernel ((bm, bc, K) live at a time, bc chosen so the chunk
+stays under ``CUBE_BUDGET`` bytes) while the int8 slabs stay resident.
+
+VMEM budget (pass 2, defaults bm=8, bn=128, k_tile=256, K=32768):
+x slab 8*32Ki = 256 KiB int8, w slab 128*32Ki = 4 MiB int8, perm block
+8*128*128*4 = 512 KiB, working pair 8*128*512*4 = 2 MiB — ~7 MiB total
+vs the 128 MiB cube the one-pass kernel would need.
+
+HBM budget: the tile-sum statistic and its permutation are
+(M, N, K/k_tile) int32 each — per-M-row cost 8 * N * K/k_tile bytes.
+``core.dispatch.pqs_dot`` bounds it by chunking M (its
+``_SORT_STATS_BUDGET``); direct callers of ``stream_sort_matmul`` with
+large M*N should chunk M themselves.
+
+Semantics are bit-exact with ``core.overflow.accumulate`` (the jnp
+oracle) and with the legacy one-pass ``sort_matmul`` where that still
+runs; ``tests/test_sorted_stream.py`` sweeps both, including K well
+above ``MAX_RESIDENT_K``. Mosaic lowering of the per-element gather on
+real TPUs is untested (same standing caveat as the in-kernel argsort of
+the one-pass kernel); interpret mode is exact everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sorted_accum import pair_permutation
+from repro.kernels.bitonic import sorted_order_bitonic
+from repro.kernels.sorted_matmul import SORT_POLICIES, _stepwise
+
+# Largest (bm, bc, K) int32 product chunk chunked_sort_matmul keeps live
+# while sorting (the bitonic network roughly doubles it with temporaries).
+CUBE_BUDGET = 4 * 1024 * 1024
+
+
+def _tile_sums_kernel(x_ref, w_ref, o_ref):
+    xb = x_ref[...].astype(jnp.int32)  # (bm, k_tile)
+    wb = w_ref[...].astype(jnp.int32)  # (bn, k_tile)
+    o_ref[:, :, 0] = jax.lax.dot_general(
+        xb, wb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_tile", "bm", "bn", "interpret")
+)
+def tile_sums_matmul(
+    x: jax.Array,  # (M, K) int
+    w: jax.Array,  # (N, K) int
+    *,
+    k_tile: int = 256,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pass 1: per-element per-k_tile partial sums, (M, N, K/k_tile) int32.
+
+    One MXU dot per (i, j, t) grid step — K streams through the grid, so
+    VMEM holds only the (bm, k_tile) / (bn, k_tile) slabs plus a
+    (bm, bn, 1) output block.
+    """
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2 and k % k_tile == 0, (x.shape, w.shape, k_tile)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    n_tiles = k // k_tile
+    return pl.pallas_call(
+        _tile_sums_kernel,
+        grid=(m // bm, n // bn, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, k_tile), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bn, k_tile), lambda i, j, t: (j, t)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn, 1), lambda i, j, t: (i, j, t)),
+        out_shape=jax.ShapeDtypeStruct((m, n, n_tiles), jnp.int32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _gather_tile(xb, wb, tile_idx, k_tile):
+    """Products of one k_tile per element: (bm, bn) tile indices ->
+    (bm, bn, k_tile) int32. xb is (bm, K), wb is (bn, K)."""
+    ks = tile_idx[:, :, None] * k_tile + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, k_tile), 2
+    )  # (bm, bn, k_tile) absolute K offsets
+    xg = jnp.take_along_axis(xb[:, None, :], ks, axis=-1)
+    wg = jnp.take_along_axis(wb[None, :, :], ks, axis=-1)
+    return xg * wg
+
+
+def _paired_kernel(x_ref, w_ref, p_ref, o_ref, *, acc_bits: int,
+                   k_tile: int, rounds: int):
+    xb = x_ref[...].astype(jnp.int32)  # (bm, K) slab
+    wb = w_ref[...].astype(jnp.int32)  # (bn, K) slab
+    pm = p_ref[...]  # (bm, bn, n_tiles) per-element pairing permutation
+    n_tiles = pm.shape[-1]
+    bm, bn = xb.shape[0], wb.shape[0]
+
+    def slot(s, acc):
+        pa = _gather_tile(xb, wb, pm[:, :, 2 * s], k_tile)
+        pb = _gather_tile(xb, wb, pm[:, :, 2 * s + 1], k_tile)
+        pa = sorted_order_bitonic(pa, rounds)
+        pb = sorted_order_bitonic(pb, rounds)
+        inter = jnp.stack([pa, pb], axis=-1).reshape(bm, bn, 2 * k_tile)
+        return _stepwise(inter, acc, acc_bits, saturate=True)
+
+    acc = jax.lax.fori_loop(
+        0, n_tiles // 2, slot, jnp.zeros_like(o_ref)
+    )
+    if n_tiles % 2:  # unpaired leftover tile rides last, un-interleaved
+        tail = _gather_tile(xb, wb, pm[:, :, n_tiles - 1], k_tile)
+        acc = _stepwise(sorted_order_bitonic(tail, rounds), acc, acc_bits,
+                        saturate=True)
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("acc_bits", "k_tile", "rounds", "bm", "bn",
+                     "interpret"),
+)
+def paired_accum_matmul(
+    x: jax.Array,  # (M, K) int
+    w: jax.Array,  # (N, K) int
+    perm: jax.Array,  # (M, N, K/k_tile) int32 pairing permutation
+    *,
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pass 2: accumulate K in per-element paired order, (M, N) int32."""
+    m, k = x.shape
+    n = w.shape[0]
+    assert perm.shape == (m, n, k // k_tile), (perm.shape, (m, n, k, k_tile))
+    assert k_tile & (k_tile - 1) == 0 and k % k_tile == 0, (k, k_tile)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    n_tiles = k // k_tile
+    kern = functools.partial(_paired_kernel, acc_bits=acc_bits,
+                             k_tile=k_tile, rounds=rounds)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, bn, n_tiles), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, w, perm)
+
+
+def _chunked_sort_kernel(x_ref, w_ref, o_ref, *, acc_bits: int, bc: int,
+                         rounds: int):
+    xb = x_ref[...].astype(jnp.int32)  # (bm, K) slab
+
+    def chunk(c, _):
+        wb = w_ref[pl.ds(c * bc, bc), :].astype(jnp.int32)  # (bc, K)
+        prods = xb[:, None, :] * wb[None, :, :]  # (bm, bc, K) live chunk
+        ordered = sorted_order_bitonic(prods, rounds)
+        o_ref[:, pl.ds(c * bc, bc)] = _stepwise(
+            ordered, jnp.zeros((xb.shape[0], bc), jnp.int32), acc_bits,
+            saturate=True,
+        )
+        return 0
+
+    n_chunks = o_ref.shape[1] // bc
+    jax.lax.fori_loop(0, n_chunks, chunk, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("acc_bits", "rounds", "bm", "bn", "bc", "interpret"),
+)
+def chunked_sort_matmul(
+    x: jax.Array,  # (M, K) int, K a power of two
+    w: jax.Array,  # (N, K) int
+    *,
+    acc_bits: int = 16,
+    rounds: int = 1,
+    bm: int = 8,
+    bn: int = 128,
+    bc: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Full-K ``sorted`` policy with a bn-chunked product cube.
+
+    The global sort needs all K products of an element live at once, but
+    only for ``bc`` output channels at a time: (bm, bc, K) int32 must fit
+    ``CUBE_BUDGET``; the (bm, K)/(bn, K) int8 slabs are what scale with K.
+    """
+    m, k = x.shape
+    n = w.shape[0]
+    assert k & (k - 1) == 0, f"K must be a power of 2, got {k}"
+    assert m % bm == 0 and n % bn == 0 and bn % bc == 0, (m, n, bm, bn, bc)
+    kern = functools.partial(_chunked_sort_kernel, acc_bits=acc_bits,
+                             bc=bc, rounds=rounds)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _sort_chunk(bm: int, bn: int, k: int) -> int:
+    """Largest bc dividing bn with the (bm, bc, K) int32 chunk in budget."""
+    for bc in range(bn, 1, -1):
+        if bn % bc == 0 and bm * bc * k * 4 <= CUBE_BUDGET:
+            return bc
+    return 1
+
+
+def stream_sort_matmul(
+    x: jax.Array,  # (M, K) int — M, N multiples of bm, bn; K pre-padded
+    w: jax.Array,  # (N, K) int
+    *,
+    policy: str = "sorted",
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Streaming entry point for ``sorted`` | ``sorted_tiled``.
+
+    Same contract as ``sorted_matmul.sort_matmul`` (callers zero-pad; the
+    padding rules are identical) but with slab-bounded VMEM, so
+    ``kernels.ops.policy_matmul`` routes K above ``MAX_RESIDENT_K`` here.
+    """
+    assert policy in SORT_POLICIES, policy
+    if policy == "sorted":
+        return chunked_sort_matmul(
+            x, w, acc_bits=acc_bits, rounds=rounds, bm=bm, bn=bn,
+            bc=_sort_chunk(bm, bn, x.shape[1]), interpret=interpret,
+        )
+    sums = tile_sums_matmul(x, w, k_tile=k_tile, bm=bm, bn=bn,
+                            interpret=interpret)
+    perm = jax.jit(pair_permutation)(sums)
+    return paired_accum_matmul(
+        x, w, perm, acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
+        bm=bm, bn=bn, interpret=interpret,
+    )

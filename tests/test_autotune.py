@@ -1,0 +1,181 @@
+"""Measured block autotuning (kernels/autotune.py) and the block
+resolution chain in kernels/ops (env override > autotune > static)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.dispatch import pqs_dot
+from repro.kernels import autotune, ops
+
+TINY = ((4, 8, 32), (2, 4, 16))  # fast interpret-mode candidate set
+
+
+@pytest.fixture
+def tuner(tmp_path, monkeypatch):
+    """Isolated cache file + tiny candidates; restores module state."""
+    cache = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE_CACHE", cache)
+    monkeypatch.setattr(autotune, "CANDIDATES",
+                        {p: TINY for p in ops.POLICIES})
+    monkeypatch.setattr(autotune, "REPS", 1)
+    autotune.reset()
+    yield cache
+    autotune.reset()
+
+
+def _xw(m=8, k=64, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8),
+            jnp.asarray(rng.integers(-127, 127, (n, k)), jnp.int8))
+
+
+def test_mode_parsing(monkeypatch):
+    monkeypatch.delenv("REPRO_PQS_AUTOTUNE", raising=False)
+    assert autotune.mode() == "off"
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "TUNE")
+    assert autotune.mode() == "tune"
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "always")
+    with pytest.raises(ValueError, match="REPRO_PQS_AUTOTUNE"):
+        autotune.mode()
+
+
+def test_off_mode_never_touches_cache(tuner, monkeypatch):
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "off")
+    x, w = _xw()
+    out = ops.policy_matmul(x, w, policy="clip", acc_bits=16)
+    ref = ops.policy_matmul(x, w, policy="clip", acc_bits=16, bm=2, bn=2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert not os.path.exists(tuner)
+
+
+def test_tune_persist_readonly_roundtrip(tuner, monkeypatch):
+    """The acceptance criterion: tune -> persist -> readonly reload picks
+    the same blocks, and results stay bit-identical throughout."""
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
+    x, w = _xw()
+    ref = ops.policy_matmul(x, w, policy="clip", acc_bits=16, bm=2, bn=2)
+    out = ops.policy_matmul(x, w, policy="clip", acc_bits=16)  # tunes
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    data = json.load(open(tuner))
+    assert data["version"] == 1
+    (key, e), = data["entries"].items()
+    assert key == autotune.shape_key("clip", "cpu", 8, 8, 64)
+    winner = (e["bm"], e["bn"], e["bk"])
+    assert winner in TINY and e["us"] > 0
+
+    # fresh process simulation: drop memos, readonly reload
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "readonly")
+    autotune.reset()
+    assert autotune.best_blocks("clip", 8, 8, 64) == winner
+    out2 = ops.policy_matmul(x, w, policy="clip", acc_bits=16)
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(ref))
+    # readonly never measures: a miss answers None (static fallback)
+    assert autotune.best_blocks("clip", 2048, 2048, 2048) is None
+    assert json.load(open(tuner)) == data  # file untouched
+
+
+def test_readonly_without_cache_falls_back(tuner, monkeypatch):
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "readonly")
+    x, w = _xw(seed=1)
+    out = ops.policy_matmul(x, w, policy="wrap", acc_bits=12)
+    ref = ops.policy_matmul(x, w, policy="wrap", acc_bits=12, bm=2, bn=2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert not os.path.exists(tuner)
+
+
+def test_tune_covers_sort_policies(tuner, monkeypatch):
+    """Sort policies tune (bm, bn) with bk pinned to None."""
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
+    monkeypatch.setattr(autotune, "CANDIDATES",
+                        {"sorted_tiled": ((4, 8, None), (2, 4, None))})
+    x, w = _xw(k=128)
+    ref = pqs_dot(x, w, acc_bits=16, policy="sorted_tiled", k_tile=32,
+                  backend="jnp")
+    out = ops.policy_matmul(x, w, policy="sorted_tiled", acc_bits=16,
+                            k_tile=32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    (key, e), = json.load(open(tuner))["entries"].items()
+    assert key.startswith("sorted_tiled|") and e["bk"] is None
+
+
+def test_env_blocks_beat_autotune(tuner, monkeypatch):
+    """REPRO_PQS_BLOCKS wins over the tuner (and suppresses tuning)."""
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
+    monkeypatch.setenv("REPRO_PQS_BLOCKS", "clip:2,4")
+    x, w = _xw(seed=2)
+    out = ops.policy_matmul(x, w, policy="clip", acc_bits=16)
+    ref = ops.policy_matmul(x, w, policy="clip", acc_bits=16, bm=2, bn=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert not os.path.exists(tuner)  # env override short-circuits
+
+
+def test_partially_pinned_blocks_skip_autotune(tuner, monkeypatch):
+    """Pinning one of bm/bn bypasses the tuner entirely: a winner is a
+    measured (bm, bn, bk) unit, so grafting half of it onto a pinned
+    other half would apply a configuration that was never timed."""
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
+    x, w = _xw(seed=6)
+    out = ops.policy_matmul(x, w, policy="clip", acc_bits=16, bn=4)
+    ref = ops.policy_matmul(x, w, policy="clip", acc_bits=16, bm=8, bn=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert not os.path.exists(tuner)  # nothing was measured
+
+
+def test_shape_bucketing():
+    """Keys bucket padded shapes to pow2 so near sizes share winners."""
+    a = autotune.shape_key("clip", "cpu", 100, 500, 3000)
+    b = autotune.shape_key("clip", "cpu", 128, 512, 4096)
+    assert a == b == "clip|cpu|128x512x4096"
+    assert autotune.shape_key("clip", "cpu", 1, 1, 1) == "clip|cpu|1x1x1"
+
+
+def test_traced_first_call_does_not_poison_bucket(tuner, monkeypatch):
+    """A first call under jit (tracing) skips measurement but must NOT
+    memoize the miss — a later eager call still tunes the bucket."""
+    import jax
+
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
+    x, w = _xw()
+
+    @jax.jit
+    def traced(x, w):
+        return ops.policy_matmul(x, w, policy="clip", acc_bits=16)
+
+    jax.block_until_ready(traced(x, w))  # first touch happens in-trace
+    assert not os.path.exists(tuner)  # nothing measured under the trace
+    out = ops.policy_matmul(x, w, policy="clip", acc_bits=16)  # eager
+    assert os.path.exists(tuner)  # ...and the eager call did tune
+    ref = ops.policy_matmul(x, w, policy="clip", acc_bits=16, bm=2, bn=2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_concurrent_tuner_entries_merge(tuner, monkeypatch):
+    """Persisting a new bucket merges with what other processes wrote to
+    the shared file since our last read (no lost updates)."""
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
+    x, w = _xw()
+    ops.policy_matmul(x, w, policy="clip", acc_bits=16)  # tune bucket 1
+    # another process lands its own bucket in the shared file
+    data = json.load(open(tuner))
+    foreign = {"bm": 64, "bn": 64, "bk": 512, "us": 1.0}
+    data["entries"]["wide|cpu|512x512x512"] = foreign
+    with open(tuner, "w") as f:
+        json.dump(data, f)
+    x2, w2 = _xw(m=16, k=128, n=16, seed=4)  # different bucket
+    ops.policy_matmul(x2, w2, policy="clip", acc_bits=16)  # tune bucket 2
+    entries = json.load(open(tuner))["entries"]
+    assert entries["wide|cpu|512x512x512"] == foreign  # survived
+    assert len(entries) == 3
+
+
+def test_corrupt_cache_is_ignored(tuner, monkeypatch):
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "readonly")
+    with open(tuner, "w") as f:
+        f.write("{not json")
+    autotune.reset()
+    assert autotune.best_blocks("clip", 8, 8, 64) is None

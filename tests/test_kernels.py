@@ -54,6 +54,70 @@ def test_property_pairwise_bitonic_equals_core(seed):
     )
 
 
+def test_next_pow2():
+    """next_pow2(1) must be 1 — a K=1 dot is already bitonic-sortable;
+    padding it to 2 over-padded every K=1 `sorted` dot."""
+    assert ops.next_pow2(1) == 1
+    assert ops.next_pow2(2) == 2
+    assert ops.next_pow2(3) == 4
+    assert ops.next_pow2(4) == 4
+    assert ops.next_pow2(4097) == 8192
+    for n in range(1, 300):
+        p = ops.next_pow2(n)
+        assert p >= n and p & (p - 1) == 0 and (p == 1 or p // 2 < n), n
+
+
+def test_padded_k():
+    # sorted: one bitonic stage over the whole axis -> power of two
+    assert ops.padded_k(1, "sorted", 256) == 1
+    assert ops.padded_k(300, "sorted", 256) == 512
+    assert ops.padded_k(4096, "sorted", 256) == 4096
+    # tiled policies: whole number of k_tile tiles
+    assert ops.padded_k(300, "sorted_tiled", 256) == 512
+    assert ops.padded_k(300, "sorted_tiled_seq", 64) == 320
+    assert ops.padded_k(256, "sorted_tiled", 256) == 256
+    # unsorted policies: no K padding at all
+    for policy in ("wide", "clip", "wrap"):
+        assert ops.padded_k(300, policy, 256) == 300
+
+
+def test_pad_to(rng):
+    x = jnp.asarray(rng.integers(-5, 5, (5, 6)), jnp.int32)
+    same = ops._pad_to(x, 3, 1)
+    assert same is x  # already a multiple: no copy
+    p0 = ops._pad_to(x, 4, 0)
+    assert p0.shape == (8, 6)
+    np.testing.assert_array_equal(np.asarray(p0[:5]), np.asarray(x))
+    assert int(jnp.abs(p0[5:]).sum()) == 0
+    p1 = ops._pad_to(x, 4, 1)
+    assert p1.shape == (5, 8) and int(jnp.abs(p1[:, 6:]).sum()) == 0
+
+
+def test_env_blocks_forms(monkeypatch):
+    monkeypatch.delenv("REPRO_PQS_BLOCKS", raising=False)
+    assert ops.env_blocks("clip") is None
+    monkeypatch.setenv("REPRO_PQS_BLOCKS", "16,64")
+    assert ops.env_blocks("clip") == (16, 64)
+    assert ops.env_blocks("wide") == (16, 64)  # bare form: every policy
+    monkeypatch.setenv("REPRO_PQS_BLOCKS", "sorted:8,128;wide:128,128")
+    assert ops.env_blocks("sorted") == (8, 128)
+    assert ops.env_blocks("wide") == (128, 128)
+    assert ops.env_blocks("clip") is None  # no entry -> fall through
+    # mixed: bare entry is the default for policies without their own
+    monkeypatch.setenv("REPRO_PQS_BLOCKS", "16,64;sorted:8,128")
+    assert ops.env_blocks("sorted") == (8, 128)
+    assert ops.env_blocks("clip") == (16, 64)
+    assert ops.default_blocks("clip") == (16, 64)  # flows into defaults
+
+
+@pytest.mark.parametrize("bad", ["8", "8,x", "1,2,3", "bogus:1,2",
+                                 "sorted:1", "sorted=8,128"])
+def test_env_blocks_malformed(monkeypatch, bad):
+    monkeypatch.setenv("REPRO_PQS_BLOCKS", bad)
+    with pytest.raises(ValueError, match="REPRO_PQS_BLOCKS"):
+        ops.env_blocks("clip")
+
+
 @pytest.mark.parametrize(
     "m,k,n,bm,bn,bk",
     [(16, 64, 16, 8, 8, 32), (32, 128, 24, 16, 8, 64), (7, 50, 9, 8, 8, 32)],
