@@ -49,7 +49,6 @@ def _nm_rows():
     for n_keep, m_group in ((4, 16), (8, 16), (2, 16)):
         m = k = 1024
         n = 512
-        dense_hbm = m * k + n * k + m * n * 4
         nm_hbm = m * k + 2 * n * (k // m_group) * n_keep + m * n * 4
         rows.append({
             "kernel": "nm_spmm", "block": f"{n_keep}:{m_group}",
@@ -94,7 +93,6 @@ def bench_kernels(quick: bool = False) -> list[dict]:
     import os
     import tempfile
 
-    import jax
     from repro.kernels import autotune, ops
 
     reps = 1 if quick else 3
@@ -130,11 +128,46 @@ def bench_kernels(quick: bool = False) -> list[dict]:
                 row["onepass_us"] = round(one_us)
                 out_a = ops.policy_matmul(x, w, sort_impl="onepass", **base)
                 out_b = ops.policy_matmul(x, w, sort_impl="twopass", **base)
-                assert (np.asarray(out_a) == np.asarray(out_b)).all(), \
-                    (policy, m, n, k)
+                assert (np.asarray(out_a) == np.asarray(out_b)).all(), (
+                    policy,
+                    m,
+                    n,
+                    k,
+                )
             else:
                 row["onepass_us"] = "refused"
             rows.append(row)
+
+    # policy x sparse-storage composition: the nm: kernel family vs the
+    # dense kernels on the same (decompressed) weights — parity asserted,
+    # both timed, plus the compressed-weight HBM ratio (the structural
+    # platform truth; interpret-mode wall-times seed the trajectory only)
+    for policy, n_keep, mg in (("clip", 4, 16), ("sorted_tiled", 4, 16)):
+        m, n, k = (16, 16, 1024)
+        wd = rng.integers(-127, 127, (n, k)).astype(np.int8)
+        mask = np.asarray(
+            nm_prune_mask(jnp.asarray(wd, jnp.float32), n_keep, mg))
+        wd = (wd * mask).astype(np.int8)
+        vals, idx = ops.compress_nm_weights(wd, n_keep, mg)
+        x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
+        w = jnp.asarray(wd)
+        base = dict(policy=policy, acc_bits=16, k_tile=k_tile, bm=bm, bn=bn)
+        dense_us = _time_us(lambda: ops.policy_matmul(x, w, **base), reps)
+        nm_us = _time_us(lambda: ops.nm_policy_matmul(
+            x, vals, idx, m_group=mg, policy=policy, acc_bits=16,
+            k_tile=k_tile, bm=bm, bn=bn), reps)
+        out_d = ops.policy_matmul(x, w, **base)
+        out_s = ops.nm_policy_matmul(x, vals, idx, m_group=mg,
+                                     policy=policy, acc_bits=16,
+                                     k_tile=k_tile, bm=bm, bn=bn)
+        assert (np.asarray(out_d) == np.asarray(out_s)).all(), policy
+        rows.append({
+            "policy": f"nm:{policy}", "m": m, "n": n, "k": k,
+            "blocks": f"{bm}x{bn}x{k_tile}",
+            "nm_us": round(nm_us),
+            "dense_us": round(dense_us),
+            "weight_bytes_vs_dense": round(2 * n_keep / mg, 3),
+        })
 
     # tuned vs static blocks: run the measured autotuner on one shape per
     # policy kind with a trimmed candidate set, then compare
@@ -170,15 +203,64 @@ def bench_kernels(quick: bool = False) -> list[dict]:
     finally:
         autotune.CANDIDATES = saved_cand
         for kk, v in saved_env.items():
-            os.environ.pop(kk, None) if v is None else \
-                os.environ.__setitem__(kk, v)
+            if v is None:
+                os.environ.pop(kk, None)
+            else:
+                os.environ[kk] = v
         autotune.reset()
 
     keys = ["policy", "m", "n", "k", "blocks", "onepass_us", "twopass_us",
-            "onepass_vmem_kib", "twopass_vmem_kib", "static_us",
-            "tuned_us", "tuned_blocks"]
+            "onepass_vmem_kib", "twopass_vmem_kib", "nm_us", "dense_us",
+            "weight_bytes_vs_dense", "static_us", "tuned_us",
+            "tuned_blocks"]
     emit("BENCH_kernels", rows, keys)
     return rows
+
+
+def check_against(
+    rows: list[dict], baseline_path: str, tolerance: float = 1.5
+) -> list[tuple]:
+    """Bench regression guard: compare a fresh kbench run to a committed
+    baseline. A row matches on (policy, m, n, k); every ``*_us`` field
+    the BASELINE row tracked numerically must still be produced
+    numerically and stay within ``tolerance`` x the baseline — a kernel
+    that stopped running (e.g. its column turned into "refused") or
+    stopped being benched is itself a regression, not a skip. Rows and
+    fields absent from the baseline are ignored (new kernels don't fail
+    the guard — regenerate the baseline to start tracking them).
+    Returns the list of regressions: (key, field, baseline_us, now_us)
+    where now_us may be a non-numeric marker.
+    """
+    import json
+
+    with open(baseline_path) as f:
+        base = json.load(f)
+
+    def key(r):
+        # "blocks" disambiguates the sweep rows from the autotune rows
+        # (which carry no blocks column) at the same (policy, m, n, k)
+        return (r.get("policy"), r.get("m"), r.get("n"), r.get("k"),
+                r.get("blocks"))
+
+    fresh = {key(r): r for r in rows}
+    regressions = []
+    for b in base:
+        r = fresh.get(key(b))
+        if not r:
+            continue  # baseline config not benched this run (e.g. --quick)
+        for field, bv in b.items():
+            if not field.endswith("_us"):
+                continue
+            if not isinstance(bv, (int, float)) or bv <= 0:
+                continue  # baseline itself had a "refused"/zero marker
+            val = r.get(field)
+            if not isinstance(val, (int, float)):
+                # previously-timed kernel now refuses / no longer emits
+                regressions.append((key(b), field, bv,
+                                    "missing" if val is None else val))
+            elif val > tolerance * bv:
+                regressions.append((key(b), field, bv, val))
+    return regressions
 
 
 def run() -> list[dict]:

@@ -19,8 +19,18 @@ def main() -> None:
                     help="comma list: fig2,fig3,fig4,fig5,tiled,kernels,"
                          "kbench,roofline,serve")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check-against", default=None, metavar="BASELINE.json",
+                    help="bench regression guard: after the kbench suite, "
+                         "fail if any kernel's *_us time exceeds "
+                         "--tolerance x the committed baseline row")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="allowed slowdown factor vs the baseline "
+                         "(default 1.5)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.check_against and only is not None and "kbench" not in only:
+        ap.error("--check-against needs the kbench suite in the run "
+                 "(drop --only or include kbench in it)")
 
     from benchmarks import (
         kernel_bench,
@@ -49,15 +59,31 @@ def main() -> None:
 
     t0 = time.time()
     failures = []
+    results = {}
     for name, fn in suites:
         if only and name not in only:
             continue
         print(f"\n===== {name} =====", flush=True)
         try:
-            fn()
+            results[name] = fn()
         except Exception as e:
             traceback.print_exc()
             failures.append((name, repr(e)))
+    if args.check_against and "kbench" in results:
+        regs = kernel_bench.check_against(
+            results["kbench"], args.check_against, args.tolerance)
+        if regs:
+            print(f"\n[bench-guard] {len(regs)} regression(s) vs "
+                  f"{args.check_against} (tolerance {args.tolerance}x):")
+            for key, field, base_us, now_us in regs:
+                ratio = (f"{now_us / base_us:.2f}x"
+                         if isinstance(now_us, (int, float))
+                         else "no longer runs")
+                print(f"  {key} {field}: {base_us} -> {now_us} us ({ratio})")
+            failures.append(("bench-guard", f"{len(regs)} regressions"))
+        else:
+            print(f"\n[bench-guard] ok — all kernel times within "
+                  f"{args.tolerance}x of {args.check_against}")
     print(f"\n[benchmarks] total {time.time() - t0:.0f}s; "
           f"{len(failures)} failures: {failures}")
     if failures:

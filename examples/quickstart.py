@@ -13,7 +13,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.overflow import accumulate, census, partial_products
+from repro.core.overflow import census
 from repro.core.pruning import nm_prune_mask
 from repro.core.quant import activation_qparams, quantize, weight_qparams
 from repro.core.sorted_accum import monotone_accumulate, sorted_order

@@ -1,11 +1,26 @@
 #!/usr/bin/env bash
 # Tier-1 offline CI. Works from any checkout location, no network, no TPU.
 #
-#   1. full single-device test suite (exactly as the roadmap specifies)
-#   2. forced-multi-device shard: sharded pqs_dot + integer serving on an
-#      8-way host-device mesh (tests/test_sharded_dispatch.py self-skips
-#      in pass 1, so this is the only place it runs)
-#   3. examples/quickstart.py smoke run (the paper's idea end-to-end)
+# One definition shared by local runs and .github/workflows/ci.yml: every
+# Actions job invokes a single stage of this script, so what CI gates is
+# exactly what `scripts/ci.sh --stage all` checks on a laptop.
+#
+#   scripts/ci.sh [--stage lint|unit|shard|smoke|bench|all] [pytest args]
+#
+#   lint   ruff check + ruff format --check (config in pyproject.toml);
+#          skipped with a notice when ruff is not installed (the offline
+#          container does not ship it — CI installs it)
+#   unit   full single-device test suite (exactly as the roadmap
+#          specifies); extra args go to pytest
+#   shard  forced-multi-device shard: sharded pqs_dot + integer serving
+#          + nm-storage composition on an 8-way host-device mesh (the
+#          selected tests self-skip in the unit stage, so this is the
+#          only place they run; test_nm_policy's single-device tests
+#          already ran in unit and are not repeated here)
+#   smoke  examples/quickstart.py (the paper's idea end-to-end)
+#   bench  kernel bench smoke -> BENCH_kernels.json, gated against the
+#          committed CPU baseline (see REPRO_BENCH_TOL below)
+#   all    every stage above, in order (the default)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,13 +29,89 @@ cd "$(dirname "$0")/.."
 # (launch/dryrun.py) working identically.
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q "$@"
+STAGE="all"
+if [[ "${1:-}" == "--stage" ]]; then
+    STAGE="${2:?--stage needs an argument}"
+    shift 2
+fi
+case "$STAGE" in
+    lint|unit|shard|smoke|bench|all) ;;
+    *) echo "unknown stage '$STAGE' (lint|unit|shard|smoke|bench|all)" >&2
+       exit 2 ;;
+esac
 
-echo "== multi-device shard (8 forced host devices) =="
-REPRO_FORCE_MULTIDEVICE=1 python -m pytest -x -q tests/test_sharded_dispatch.py
+# Interpret-mode CPU wall-times jitter >2x even on one machine (single
+# --quick rep) and runner generations vary another 2-3x, so the CI
+# wiring widens the guard: the catch target is structural regressions
+# (a disabled fast path, an accidental O(K^2) — those show up as 10x+),
+# not jitter. `benchmarks/run.py --check-against` itself defaults to
+# 1.5x for stable same-machine comparisons.
+REPRO_BENCH_TOL="${REPRO_BENCH_TOL:-8.0}"
 
-echo "== quickstart smoke =="
-python examples/quickstart.py
+STAGE_NAMES=()
+STAGE_SECS=()
 
-echo "== kernel bench smoke (one-pass vs two-pass sort, CPU interpret) =="
-python -m benchmarks.run --only kbench --quick
+run_stage() {
+    local name="$1"; shift
+    echo
+    echo "== stage: $name =="
+    local t0=$SECONDS
+    "$@"
+    STAGE_NAMES+=("$name")
+    STAGE_SECS+=("$((SECONDS - t0))")
+}
+
+summary() {
+    echo
+    echo "== stage timing summary =="
+    local i
+    for i in "${!STAGE_NAMES[@]}"; do
+        printf '  %-8s %4ss\n' "${STAGE_NAMES[$i]}" "${STAGE_SECS[$i]}"
+    done
+}
+trap summary EXIT
+
+lint_stage() {
+    if command -v ruff >/dev/null 2>&1; then
+        ruff check src tests benchmarks examples scripts
+        ruff format --check src tests benchmarks examples scripts
+    else
+        echo "ruff not installed — lint stage skipped (CI installs it)"
+    fi
+}
+
+unit_stage() {
+    python -m pytest -x -q "$@"
+}
+
+shard_stage() {
+    REPRO_FORCE_MULTIDEVICE=1 python -m pytest -x -q \
+        tests/test_sharded_dispatch.py \
+        "tests/test_nm_policy.py::test_nm_sharded_bit_identical" \
+        "tests/test_nm_policy.py::test_nm_sharded_census_counts_once"
+}
+
+smoke_stage() {
+    python examples/quickstart.py
+}
+
+bench_stage() {
+    python -m benchmarks.run --only kbench --quick \
+        --check-against benchmarks/baselines/BENCH_kernels_cpu.json \
+        --tolerance "$REPRO_BENCH_TOL"
+}
+
+case "$STAGE" in
+    lint)  run_stage lint lint_stage ;;
+    unit)  run_stage unit unit_stage "$@" ;;
+    shard) run_stage shard shard_stage ;;
+    smoke) run_stage smoke smoke_stage ;;
+    bench) run_stage bench bench_stage ;;
+    all)
+        run_stage lint lint_stage
+        run_stage unit unit_stage "$@"
+        run_stage shard shard_stage
+        run_stage smoke smoke_stage
+        run_stage bench bench_stage
+        ;;
+esac

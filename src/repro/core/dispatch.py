@@ -31,6 +31,15 @@ inside the context, every ``models.layers.lin`` whose weight is a
 QTensor executes as a true integer dot product under the configured
 policy instead of dequantize-then-float-matmul.
 
+Sparse storage: ``pqs_dot(..., storage="nm")`` accepts N:M-compressed
+weights (``core.qtensor.SparseQTensor`` or a raw (values, indices)
+pair) and runs every policy directly on the compressed form —
+bit-identical, census included, to decompressing first (see
+``kernels.ops.nm_policy_matmul``). This is the P of PQS composed with
+the Q+S: pruning shortens the effective dot-product length the narrow
+accumulator sees, and the compressed slabs cut weight HBM traffic by
+~n_keep/m on the serving path.
+
 Distributed execution: ``pqs_dot(..., mesh=...)`` runs the same dot
 under ``shard_map`` on a named mesh — output channels (N) sharded on
 the tensor-parallel axis, rows (M) on the data axes, and the full K
@@ -50,12 +59,20 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.overflow import Census, accumulate, census, partial_products
+from repro.core.overflow import (
+    Census,
+    accumulate,
+    census,
+    nm_partial_products,
+    partial_products,
+)
+from repro.core.pruning import nm_decompress_jax
 from repro.core.quant import qrange
 from repro.kernels import ops
 
 POLICIES = ops.POLICIES  # derived from the kernel modules — one list
 BACKENDS = ("jnp", "pallas")
+STORAGES = ("dense", "nm")
 
 # Cap on the HBM tile-sum + permutation statistic of the two-pass
 # sorted_tiled kernel (per M-chunk: 2 * 4 * N * K/k_tile bytes/row);
@@ -72,11 +89,13 @@ def default_backend() -> str:
 
 
 def _validate(policy: str, backend: Optional[str], acc_bits: int,
-              k_tile: int) -> None:
+              k_tile: int, storage: str = "dense") -> None:
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; expected {POLICIES}")
     if backend is not None and backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if storage not in STORAGES:
+        raise ValueError(f"unknown storage {storage!r}; expected {STORAGES}")
     if not 2 <= acc_bits <= 30:
         raise ValueError(f"acc_bits={acc_bits} outside the int32-carrier "
                          "range [2, 30]")
@@ -86,9 +105,43 @@ def _validate(policy: str, backend: Optional[str], acc_bits: int,
         raise ValueError(f"k_tile must be a power of 2, got {k_tile}")
 
 
+def _unpack_nm(w: Any, m_group: Optional[int]):
+    """(values, indices, m_group, logical K) from a storage="nm" weight.
+
+    Accepts a ``core.qtensor.SparseQTensor`` (m_group/k_dim ride along)
+    or a bare ``(values, indices)`` pair plus an explicit ``m_group``.
+    """
+    from repro.core.qtensor import SparseQTensor
+
+    if isinstance(w, SparseQTensor):
+        if w.values.ndim != 3:
+            raise ValueError(
+                "pqs_dot needs an unstacked (out, G, n_keep) SparseQTensor; "
+                f"got values {w.values.shape} (slice the layer axis first)"
+            )
+        return w.values, w.indices, w.m_group, w.k_dim
+    if isinstance(w, (tuple, list)) and len(w) == 2:
+        values, indices = w
+        if m_group is None:
+            raise ValueError(
+                "storage='nm' with a bare (values, indices) pair needs an "
+                "explicit m_group="
+            )
+        if values.ndim != 3 or values.shape != indices.shape:
+            raise ValueError(
+                f"expected matching (N, G, n_keep) slabs, got "
+                f"{values.shape} / {indices.shape}"
+            )
+        return values, indices, m_group, values.shape[1] * m_group
+    raise ValueError(
+        "storage='nm' expects w to be a SparseQTensor or a "
+        f"(values, indices) pair, got {type(w).__name__}"
+    )
+
+
 def _local_dot(
     x2: jax.Array,  # (M, Kp) — K already padded by the shared rule
-    w: jax.Array,  # (N, Kp)
+    w: Any,  # (N, Kp) dense, or (values, indices) compressed slabs
     *,
     acc_bits: int,
     policy: str,
@@ -101,16 +154,49 @@ def _local_dot(
     sort_impl: str,
     batch_chunk: Optional[int],
     with_census: bool,
+    storage: str = "dense",
+    m_group: Optional[int] = None,
 ) -> tuple[jax.Array, Optional[Census]]:
-    """Single-device policy matmul on pre-padded operands (+census)."""
+    """Single-device policy matmul on pre-padded operands (+census).
+
+    storage="nm": ``w`` is the compressed (values, indices) pair. The
+    jnp backend decompresses to the dense reference semantics (padded
+    to the same Kp the dense path would use — zero columns are inert);
+    the pallas backend runs ``ops.nm_policy_matmul`` directly on the
+    compressed slabs. The census is computed from the KEPT-ONLY partial
+    products (``overflow.nm_partial_products``) for both backends —
+    bit-identical counts at n_keep/m of the unrolled memory.
+    """
     m = x2.shape[0]
     chunk = m if (batch_chunk is None or batch_chunk >= m) else batch_chunk
     outs = []
     tot: Optional[Census] = None
+    wd = None
+    if storage == "nm" and backend == "jnp":
+        values, indices = w
+        wd = nm_decompress_jax(values, indices, m_group)  # (N, G*m)
+        kp = ops.padded_k(wd.shape[-1], policy, k_tile)
+        if kp != wd.shape[-1]:
+            wd = jnp.pad(wd, ((0, 0), (0, kp - wd.shape[-1])))
     for i in range(0, m, max(chunk, 1)):
         xc = x2[i : i + chunk]
         prods = None
-        if backend == "jnp":
+        if storage == "nm" and backend == "jnp":
+            xcp = jnp.pad(
+                xc, ((0, 0), (0, wd.shape[-1] - xc.shape[-1]))
+            ) if wd.shape[-1] != xc.shape[-1] else xc
+            prods = partial_products(wd, xcp)  # (c, N, Kp)
+            outs.append(accumulate(prods, acc_bits, policy, k_tile, rounds))
+        elif storage == "nm":
+            outs.append(
+                ops.nm_policy_matmul(
+                    xc, w[0], w[1], m_group=m_group, policy=policy,
+                    acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
+                    bm=block_m, bn=block_n, sort_impl=sort_impl,
+                    interpret=interpret,
+                )
+            )
+        elif backend == "jnp":
             prods = partial_products(w, xc)  # (c, N, Kp)
             outs.append(accumulate(prods, acc_bits, policy, k_tile, rounds))
         else:
@@ -123,7 +209,14 @@ def _local_dot(
             )
         if with_census:
             if prods is None:
-                prods = partial_products(w, xc)
+                # backends that already materialized a cube reuse it
+                # (zero products are census-inert); the nm pallas path,
+                # which never builds one, pays only the kept-only gather
+                prods = (
+                    nm_partial_products(w[0], w[1], xc, m_group)
+                    if storage == "nm"
+                    else partial_products(w, xc)
+                )
             c = census(prods, acc_bits)
             tot = c if tot is None else Census(
                 *(a + b for a, b in zip(tot, c))
@@ -160,14 +253,19 @@ def _sharded_dot(
         m_axes = data_axes(mesh)
     m_axes = tuple(a for a in m_axes if a in mesh.axis_names)
     x_spec = sanitize(mesh, P(m_axes if m_axes else None, None), x2.shape)
-    w_spec = sanitize(
-        mesh, P(n_axis if n_axis in mesh.axis_names else None, None), w.shape
-    )
-    out_spec = P(x_spec[0], w_spec[0])
+    n_entry = n_axis if n_axis in mesh.axis_names else None
+    if isinstance(w, tuple):  # compressed (values, indices): N rows shard
+        vspec = sanitize(mesh, P(n_entry, None, None), w[0].shape)
+        w_spec = (vspec, vspec)
+        w_row = vspec[0]
+    else:
+        w_spec = sanitize(mesh, P(n_entry, None), w.shape)
+        w_row = w_spec[0]
+    out_spec = P(x_spec[0], w_row)
     # census counters must be summed only over axes that actually
     # partition the dots; replicated axes would multiply-count
     used: list[str] = []
-    for entry in (x_spec[0], w_spec[0]):
+    for entry in (x_spec[0], w_row):
         if entry is not None:
             used.extend(entry if isinstance(entry, tuple) else (entry,))
 
@@ -179,8 +277,9 @@ def _sharded_dot(
             )
         return (out, cns) if with_census else out
 
-    out_specs = (out_spec, Census(P(), P(), P(), P())) if with_census \
-        else out_spec
+    out_specs = (
+        (out_spec, Census(P(), P(), P(), P())) if with_census else out_spec
+    )
     return shard_map(
         body, mesh, in_specs=(x_spec, w_spec), out_specs=out_specs,
         check_rep=False,
@@ -189,7 +288,8 @@ def _sharded_dot(
 
 def pqs_dot(
     x: jax.Array,  # (..., K) integer carrier (int8 or int32 holding int8)
-    w: jax.Array,  # (N, K) integer carrier; rows = output channels
+    w: Any,  # (N, K) integer carrier; rows = output channels — or, with
+    # storage="nm", a SparseQTensor / (values, indices) compressed pair
     *,
     acc_bits: int = 16,
     policy: str = "wide",
@@ -205,6 +305,8 @@ def pqs_dot(
     mesh=None,
     m_axes: Optional[tuple[str, ...]] = None,
     n_axis: str = "model",
+    storage: str = "dense",
+    m_group: Optional[int] = None,
 ):
     """Quantized dot products with simulated narrow accumulation.
 
@@ -222,25 +324,59 @@ def pqs_dot(
     ``auto`` (one-pass K-resident up to ``ops.MAX_RESIDENT_K``, two-pass
     streaming above), ``onepass``, or ``twopass``.
 
+    ``storage="nm"`` composes every policy with N:M compressed weight
+    storage: ``w`` is a ``core.qtensor.SparseQTensor`` (or a bare
+    ``(values, indices)`` pair plus ``m_group=``) and the pallas backend
+    runs the policy directly on the compressed slabs
+    (``kernels.ops.nm_policy_matmul`` — G is padded instead of K); the
+    jnp backend decompresses to the dense reference. Results — census
+    included (counted over the KEPT partial products only) — are
+    bit-identical to ``nm_decompress`` followed by this function on the
+    dense matrix.
+
     With ``mesh`` (a ``jax.sharding.Mesh``), the dot executes under
     ``shard_map``: M sharded over ``m_axes`` (default: the mesh's data
     axes), N over ``n_axis`` ("model"), K accumulated whole inside each
-    shard — bit-identical to the single-device result.
+    shard — bit-identical to the single-device result (compressed
+    weights shard their N rows the same way).
     """
-    _validate(policy, backend, acc_bits, k_tile)
+    _validate(policy, backend, acc_bits, k_tile, storage)
     backend = backend or default_backend()
-    if x.shape[-1] != w.shape[-1]:
-        raise ValueError(f"contraction mismatch: {x.shape} vs {w.shape}")
     lead = x.shape[:-1]
-    k, n = x.shape[-1], w.shape[0]
+    k = x.shape[-1]
     x2 = x.reshape(-1, k)
 
-    # one K-padding rule for both backends: order-sensitive policies must
-    # see the same (padded) permutation domain to be bit-identical
-    kp = ops.padded_k(k, policy, k_tile)
-    if kp != k:
-        x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
-        w = jnp.pad(w, ((0, 0), (0, kp - k)))
+    if storage == "nm":
+        values, indices, m_group, k_logical = _unpack_nm(w, m_group)
+        n = values.shape[0]
+        k_dense = values.shape[1] * m_group
+        if k not in (k_logical, k_dense):
+            raise ValueError(
+                f"contraction mismatch: x has K={k} but the compressed "
+                f"weights cover {k_logical} (logical) / {k_dense} (padded)"
+            )
+        if policy in ("sorted_tiled", "sorted_tiled_seq") and (
+            k_tile % m_group != 0
+        ):
+            raise ValueError(
+                f"tiled policies on storage='nm' need k_tile % m_group == "
+                f"0 (tile boundaries must align with the compressed "
+                f"groups); got k_tile={k_tile}, m_group={m_group}"
+            )
+        if k_dense != k:
+            x2 = jnp.pad(x2, ((0, 0), (0, k_dense - k)))
+        kp = ops.padded_k(k_dense, policy, k_tile)
+        w = (values, indices)
+    else:
+        if x.shape[-1] != w.shape[-1]:
+            raise ValueError(f"contraction mismatch: {x.shape} vs {w.shape}")
+        n = w.shape[0]
+        # one K-padding rule for both backends: order-sensitive policies
+        # must see the same (padded) permutation domain to be bit-identical
+        kp = ops.padded_k(k, policy, k_tile)
+        if kp != k:
+            x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
+            w = jnp.pad(w, ((0, 0), (0, kp - k)))
 
     if (batch_chunk is None and backend == "pallas"
             and policy == "sorted_tiled" and sort_impl != "onepass"):
@@ -255,6 +391,7 @@ def pqs_dot(
         acc_bits=acc_bits, policy=policy, k_tile=k_tile, rounds=rounds,
         backend=backend, interpret=interpret, block_m=block_m,
         block_n=block_n, sort_impl=sort_impl, batch_chunk=batch_chunk,
+        storage=storage, m_group=m_group if storage == "nm" else None,
     )
     if mesh is not None:
         res = _sharded_dot(x2, w, mesh, m_axes, n_axis, with_census, **kw)
@@ -356,7 +493,13 @@ def qtensor_dot(x: jax.Array, qt, cfg: IntegerLinConfig) -> jax.Array:
     ``cfg.mesh`` when set); output is rescaled by the activation scale
     and the QTensor's per-channel weight scales.
     """
-    wq = qt.values.T.astype(jnp.int32)  # (out, in)
+    from repro.core.qtensor import SparseQTensor
+
+    sparse = isinstance(qt, SparseQTensor)
+    if sparse:
+        wq, storage = qt, "nm"  # compressed slabs flow straight through
+    else:
+        wq, storage = qt.values.T.astype(jnp.int32), "dense"  # (out, in)
     aq = getattr(qt, "act_qparams", None)
     if cfg.use_static_acts and aq is not None:
         qmin, qmax = qrange(aq.bits)
@@ -375,7 +518,7 @@ def qtensor_dot(x: jax.Array, qt, cfg: IntegerLinConfig) -> jax.Array:
         xq, wq, acc_bits=cfg.acc_bits,
         policy=cfg.policy, k_tile=cfg.k_tile, rounds=cfg.rounds,
         backend=cfg.backend, mesh=cfg.mesh, m_axes=cfg.m_axes,
-        n_axis=cfg.n_axis,
+        n_axis=cfg.n_axis, storage=storage,
     )
     if cfg.use_static_acts and aq is not None and not aq.symmetric:
         # Eq. (3) offset correction — precomputed at freeze time

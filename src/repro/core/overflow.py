@@ -54,6 +54,34 @@ def partial_products(wq: jax.Array, xq: jax.Array) -> jax.Array:
     return wq.astype(jnp.int32)[None, :, :] * xq.astype(jnp.int32)[:, None, :]
 
 
+def nm_partial_products(
+    values: jax.Array,  # (N, G, n_keep) int8 compressed weights
+    indices: jax.Array,  # (N, G, n_keep) int32 in-group positions
+    xq: jax.Array,  # (batch, K) int with K <= G * m_group (tail padded)
+    m_group: int,
+) -> jax.Array:
+    """Kept-only partial products of an N:M-compressed matmul.
+
+    Returns (batch, N, G*n_keep) int32 — the nonzero subsequence of the
+    dense ``partial_products`` in ascending-K order (indices are stored
+    ascending per group). Pruned positions contribute zero products,
+    which are additively inert in every running sum, so a ``census``
+    over the kept-only view is bit-identical to the dense census while
+    the unrolled tensor shrinks by n_keep/m — the memory form of the
+    paper's pruning payoff (§2.2): shorter effective dot products.
+    """
+    n, g, n_keep = values.shape
+    k = g * m_group
+    x = xq.astype(jnp.int32)
+    if x.shape[-1] < k:
+        x = jnp.pad(x, ((0, 0), (0, k - x.shape[-1])))
+    xg = x.reshape(x.shape[0], 1, g, m_group)
+    idx = jnp.broadcast_to(indices[None], (x.shape[0], n, g, n_keep))
+    xk = jnp.take_along_axis(xg, idx, axis=-1)  # (batch, N, G, n_keep)
+    prods = xk * values.astype(jnp.int32)[None]
+    return prods.reshape(x.shape[0], n, g * n_keep)
+
+
 @partial(jax.jit, static_argnames=("acc_bits",))
 def census(prods: jax.Array, acc_bits: int) -> Census:
     """Classify overflows for natural-order accumulation (paper Fig 2a).

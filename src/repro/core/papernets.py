@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,6 @@ from repro.configs.paper import PaperNetConfig
 from repro.core import overflow
 from repro.core.a2q import a2q_fake_quant
 from repro.core.pqs import (
-    Phase,
     PQSConfig,
     apply_prune_phase,
     build_schedule,

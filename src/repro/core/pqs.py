@@ -30,7 +30,6 @@ from repro.core import dispatch, overflow
 from repro.core.pruning import iterative_nm_schedule, nm_prune_mask
 from repro.core.quant import (
     EmaRange,
-    QParams,
     activation_qparams,
     fake_quant,
     quantize,

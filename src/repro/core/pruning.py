@@ -91,18 +91,44 @@ def low_rank_approx(w: jax.Array, rank: int) -> jax.Array:
     return (u[:, :k] * s[:k]) @ vt[:k, :]
 
 
+def _check_nm_args(K: int, n_keep: int, m: int) -> None:
+    if m < 1:
+        raise ValueError(f"m_group must be >= 1, got {m}")
+    if not 1 <= n_keep <= m:
+        raise ValueError(f"n_keep={n_keep} out of range [1, {m}] for M={m}")
+    if K < 1:
+        raise ValueError(f"cannot compress an empty K axis (K={K})")
+
+
 def nm_compress(w: np.ndarray, n_keep: int, m: int):
     """Pack an N:M-pruned matrix into (values, indices) compressed form.
 
-    w: (rows, K) with K % m == 0 and at most n_keep nonzeros per m-group.
-    Returns values (rows, K//m, n_keep) and indices (rows, K//m, n_keep)
-    int8/int32 — the storage format consumed by kernels/nm_spmm.py. Groups
-    with fewer than n_keep nonzeros are padded with (value 0, index 0).
+    w: (rows, K) with at most n_keep nonzeros per m-group along K. A K
+    that is not divisible by m is handled by zero-padding the tail group
+    (the padding never survives ``nm_decompress(..., k=K)``). Returns
+    values (rows, G, n_keep) and indices (rows, G, n_keep) with
+    G = ceil(K / m) — the storage format consumed by kernels/nm_spmm.py.
+    Groups with fewer than n_keep nonzeros are padded with (value 0,
+    index 0); ``n_keep == m`` stores the matrix dense-as-sparse (exact
+    round-trip, no pruning assumption). A group holding MORE than
+    n_keep nonzeros would compress lossily, so it raises instead.
     """
     w = np.asarray(w)
+    if w.ndim != 2:
+        raise ValueError(f"expected a 2-D (rows, K) matrix, got {w.shape}")
     rows, K = w.shape
-    g = K // m
+    _check_nm_args(K, n_keep, m)
+    g = -(-K // m)  # ceil: tail group zero-padded below
+    if g * m != K:
+        w = np.pad(w, ((0, 0), (0, g * m - K)))
     grouped = w.reshape(rows, g, m)
+    nnz = np.count_nonzero(grouped, axis=-1)
+    if (nnz > n_keep).any():
+        raise ValueError(
+            f"matrix is not {n_keep}:{m} sparse — a group holds "
+            f"{int(nnz.max())} nonzeros (> n_keep={n_keep}); compressing "
+            "it would silently drop weights"
+        )
     # Indices of the n_keep largest |values| per group (matching the mask).
     order = np.argsort(-np.abs(grouped), axis=-1, kind="stable")[..., :n_keep]
     order = np.sort(order, axis=-1)  # ascending position for locality
@@ -110,9 +136,73 @@ def nm_compress(w: np.ndarray, n_keep: int, m: int):
     return vals, order.astype(np.int32)
 
 
-def nm_decompress(vals: np.ndarray, idx: np.ndarray, m: int) -> np.ndarray:
-    """Inverse of nm_compress (oracle for kernel tests)."""
+def nm_decompress(
+    vals: np.ndarray, idx: np.ndarray, m: int, k: int | None = None
+) -> np.ndarray:
+    """Inverse of nm_compress (oracle for kernel tests).
+
+    ``k`` trims the zero-padded tail group back to the original K, so
+    a K not divisible by m round-trips exactly.
+    """
     rows, g, n_keep = vals.shape
     out = np.zeros((rows, g, m), dtype=vals.dtype)
     np.put_along_axis(out, idx, vals, axis=-1)
-    return out.reshape(rows, g * m)
+    out = out.reshape(rows, g * m)
+    return out if k is None else out[:, :k]
+
+
+def nm_compress_jax(w: jax.Array, n_keep: int, m: int):
+    """``nm_compress`` on device arrays, with arbitrary leading dims.
+
+    w: (..., rows, K). Returns (values, indices) shaped
+    (..., rows, G, n_keep) with G = ceil(K / m). The lossiness check of
+    the numpy packer runs only on concrete (non-traced) inputs.
+    """
+    K = w.shape[-1]
+    _check_nm_args(K, n_keep, m)
+    g = -(-K // m)
+    if g * m != K:
+        pad = [(0, 0)] * (w.ndim - 1) + [(0, g * m - K)]
+        w = jnp.pad(w, pad)
+    grouped = w.reshape(*w.shape[:-1], g, m)
+    if not isinstance(w, jax.core.Tracer):
+        nnz = int(jnp.max(jnp.sum(grouped != 0, axis=-1)))
+        if nnz > n_keep:
+            raise ValueError(
+                f"matrix is not {n_keep}:{m} sparse — a group holds "
+                f"{nnz} nonzeros (> n_keep={n_keep})"
+            )
+    order = jnp.argsort(-jnp.abs(grouped), axis=-1)[..., :n_keep]
+    order = jnp.sort(order, axis=-1)
+    vals = jnp.take_along_axis(grouped, order, axis=-1)
+    return vals, order.astype(jnp.int32)
+
+
+def nm_onehot_expand(vals: jax.Array, idx: jax.Array, m: int) -> jax.Array:
+    """THE one compressed->dense expansion: (..., G, n_keep) -> (..., G*m).
+
+    dense[..., g*m + p] = sum_j vals[..., g, j] * [idx[..., g, j] == p].
+    Each dense position receives at most one kept value (index-0 padding
+    carries value 0), so the sum never collides and stays exact in any
+    dtype. ``broadcasted_iota`` keeps it Mosaic-lowerable, so this single
+    definition serves both the jnp decompress oracle
+    (``nm_decompress_jax``) and the Pallas kernels' in-VMEM expand
+    (``kernels.nm_spmm.expand_nm_slab``) — the two storage backends
+    cannot desynchronize.
+    """
+    iota = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (m,), idx.ndim)
+    onehot = (idx[..., None] == iota).astype(vals.dtype)
+    dense = jnp.sum(vals[..., None] * onehot, axis=-2)  # (..., G, m)
+    return dense.reshape(*vals.shape[:-2], vals.shape[-2] * m)
+
+
+def nm_decompress_jax(
+    vals: jax.Array, idx: jax.Array, m: int, k: int | None = None
+) -> jax.Array:
+    """``nm_decompress`` on device arrays, with arbitrary leading dims.
+
+    vals/idx: (..., rows, G, n_keep) -> dense (..., rows, G*m) (trimmed
+    to ``k`` when given).
+    """
+    dense = nm_onehot_expand(vals, idx, m)
+    return dense if k is None else dense[..., :k]

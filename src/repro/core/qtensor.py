@@ -20,7 +20,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.pruning import nm_prune_mask
+from repro.core.pruning import nm_compress_jax, nm_decompress_jax, nm_prune_mask
 from repro.core.quant import QParams, qrange
 
 
@@ -68,6 +68,132 @@ class QTensor:
         return cls(*children)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseQTensor:
+    """N:M-compressed int8 weight: the P of PQS as a storage format.
+
+    The compressed leaves are what ``kernels/nm_spmm.py`` streams from
+    HBM (an m_group/n_keep bandwidth saving over the dense int8 matrix):
+
+    values:  (..., out, G, n_keep) int8 — kept weights, G = ceil(in/m)
+    indices: (..., out, G, n_keep) int32 — position of each kept value
+             inside its m-group (padded slots: index 0, value 0)
+    scale:   (..., out) f32 per-output-channel symmetric scales
+    m_group / k_dim: static aux — group size and the LOGICAL contraction
+             length (k_dim <= G*m_group; a tail group is zero-padded)
+    act_qparams / act_corr: calibrated static activation QParams and the
+             Eq. (3) offset correction, exactly as on ``QTensor``.
+
+    Layout note: dense ``QTensor.values`` is (in, out); the compressed
+    form is output-channel-major (out, G, n_keep) because that is the
+    orientation every policy kernel consumes (rows = output channels) —
+    no transpose on the serving path. ``pqs_dot(..., storage="nm")``
+    accepts a SparseQTensor directly, and every accumulation policy runs
+    on the compressed form bit-identically to decompress-then-dense.
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    scale: jax.Array
+    m_group: int
+    k_dim: int
+    act_qparams: Optional[QParams] = None
+    act_corr: Optional[jax.Array] = None
+
+    @property
+    def shape(self):
+        """Logical dense (..., in, out) shape — what the float weight had."""
+        lead = self.values.shape[:-3]
+        return (*lead, self.k_dim, self.values.shape[-3])
+
+    @property
+    def ndim(self):
+        return self.values.ndim - 1
+
+    def dequant(self, dtype=jnp.bfloat16) -> jax.Array:
+        dense = nm_decompress_jax(
+            self.values.astype(jnp.float32), self.indices, self.m_group,
+            self.k_dim,
+        )  # (..., out, in)
+        dense = jnp.swapaxes(dense, -1, -2)  # (..., in, out)
+        return (dense * self.scale[..., None, :]).astype(dtype)
+
+    def tree_flatten(self):
+        return (
+            (self.values, self.indices, self.scale, self.act_qparams,
+             self.act_corr),
+            (self.m_group, self.k_dim),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, indices, scale, aq, corr = children
+        return cls(values, indices, scale, aux[0], aux[1], aq, corr)
+
+
+def qtensor_nm_compress(qt: QTensor, n_keep: int, m_group: int
+                        ) -> SparseQTensor:
+    """Pack an N:M-pruned ``QTensor`` into compressed ``SparseQTensor`` form.
+
+    The dense int8 ``values`` (..., in, out) must carry at most n_keep
+    nonzeros per m-group along the contraction (in) axis — i.e. come
+    from ``quantize_weight(..., n_keep=, m=)`` or an equivalent pruning
+    pass; a denser matrix raises (lossy compression). Calibrated
+    ``act_qparams``/``act_corr`` ride along unchanged — the kept-only
+    sum equals the dense sum, so the Eq. (3) correction is identical.
+    """
+    wt = jnp.swapaxes(qt.values, -1, -2)  # (..., out, in)
+    vals, idx = nm_compress_jax(wt, n_keep, m_group)
+    return SparseQTensor(
+        vals.astype(qt.values.dtype), idx, qt.scale, m_group,
+        qt.values.shape[-2], qt.act_qparams, qt.act_corr,
+    )
+
+
+def nm_compress_tree(params: Any, n_keep: int, m: int = 16) -> Any:
+    """Convert every N:M-sparse QTensor leaf to compressed storage.
+
+    Leaves whose dense values are not actually n_keep:m sparse are left
+    as dense QTensors (a mixed tree is fine — ``models.layers.lin``
+    handles both), so the tree conversion composes with
+    ``quantize_tree``'s own skip rules (ragged in_dims quantize dense).
+    The fallback must never mask a mistake as "tree had no sparse
+    leaves": invalid (n_keep, m) arguments raise up front, and a tree
+    where NO QTensor leaf matched the pattern (e.g. pruned 2:8 but
+    compressed with (2, 16)) raises instead of silently serving dense.
+    """
+    if m < 1:
+        raise ValueError(f"m_group must be >= 1, got {m}")
+    if not 1 <= n_keep <= m:
+        raise ValueError(f"n_keep={n_keep} out of range [1, {m}] for M={m}")
+    counts = {"dense": 0, "converted": 0}
+
+    def conv(leaf):
+        if not isinstance(leaf, QTensor):
+            return leaf
+        counts["dense"] += 1
+        try:
+            out = qtensor_nm_compress(leaf, n_keep, m)
+        except ValueError:
+            return leaf  # not n_keep:m sparse — keep the dense form
+        counts["converted"] += 1
+        return out
+
+    out = jax.tree_util.tree_map(
+        conv, params,
+        is_leaf=lambda l: isinstance(l, (QTensor, SparseQTensor)),
+    )
+    if counts["dense"] and not counts["converted"]:
+        raise ValueError(
+            f"no QTensor leaf ({counts['dense']} seen) is {n_keep}:{m} "
+            "sparse — the tree was pruned with a different (n_keep, m) "
+            "pattern (or not pruned at all); compressing would silently "
+            "serve fully dense"
+        )
+    return out
+
+
 def quantize_weight(
     w: jax.Array,
     bits: int = 8,
@@ -93,12 +219,12 @@ def quantize_weight(
 
 
 def is_qtensor(x: Any) -> bool:
-    return isinstance(x, QTensor)
+    return isinstance(x, (QTensor, SparseQTensor))
 
 
 def asarray(w: Any, dtype) -> jax.Array:
     """Uniform accessor used by every matmul in the zoo."""
-    if isinstance(w, QTensor):
+    if isinstance(w, (QTensor, SparseQTensor)):
         return w.dequant(dtype)
     return w.astype(dtype)
 
@@ -121,7 +247,7 @@ def quantize_tree(
     """
 
     def conv(leaf):
-        if isinstance(leaf, QTensor):
+        if isinstance(leaf, (QTensor, SparseQTensor)):
             return leaf
         if not isinstance(leaf, jax.Array) and not hasattr(leaf, "dtype"):
             return leaf
@@ -142,7 +268,8 @@ def quantize_tree(
         return qfn(leaf)
 
     return jax.tree_util.tree_map(
-        conv, params, is_leaf=lambda l: isinstance(l, QTensor)
+        conv, params,
+        is_leaf=lambda l: isinstance(l, (QTensor, SparseQTensor)),
     )
 
 
@@ -165,12 +292,13 @@ def attach_act_qparams(params: Any, frozen: dict[str, QParams]) -> Any:
         return ""
 
     def conv(path, leaf):
-        if not isinstance(leaf, QTensor):
+        if not isinstance(leaf, (QTensor, SparseQTensor)):
             return leaf
         qp = frozen.get(name_of(path))
         if qp is None:
             return leaf
-        lead = leaf.values.shape[:-2]
+        sparse = isinstance(leaf, SparseQTensor)
+        lead = leaf.values.shape[:-3] if sparse else leaf.values.shape[:-2]
         aq = QParams(
             jnp.broadcast_to(qp.scale, lead).astype(jnp.float32),
             jnp.broadcast_to(qp.offset, lead).astype(jnp.int32),
@@ -180,12 +308,20 @@ def attach_act_qparams(params: Any, frozen: dict[str, QParams]) -> Any:
         corr = None
         if not qp.symmetric:
             # Eq. (3): o_x * sum_k w_k^q — weight-only, frozen here so
-            # decode never re-reduces the weight matrix
-            corr = aq.offset[..., None] * jnp.sum(
-                leaf.values.astype(jnp.int32), axis=-2
+            # decode never re-reduces the weight matrix. For compressed
+            # storage the kept-only sum IS the dense sum (pruned = 0).
+            wsum = (
+                jnp.sum(leaf.values.astype(jnp.int32), axis=(-2, -1))
+                if sparse
+                else jnp.sum(leaf.values.astype(jnp.int32), axis=-2)
             )
+            corr = aq.offset[..., None] * wsum
+        if sparse:
+            return SparseQTensor(leaf.values, leaf.indices, leaf.scale,
+                                 leaf.m_group, leaf.k_dim, aq, corr)
         return QTensor(leaf.values, leaf.scale, aq, corr)
 
     return jax.tree_util.tree_map_with_path(
-        conv, params, is_leaf=lambda l: isinstance(l, QTensor)
+        conv, params,
+        is_leaf=lambda l: isinstance(l, (QTensor, SparseQTensor)),
     )

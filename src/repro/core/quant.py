@@ -12,7 +12,6 @@ width is enforced by the clip bounds, matching the paper's MCU semantics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -30,7 +30,9 @@ class ClassificationDataset:
     y: np.ndarray  # (N,) i32
     num_classes: int
 
-    def split(self, frac: float = 0.9) -> tuple["ClassificationDataset", "ClassificationDataset"]:
+    def split(
+        self, frac: float = 0.9
+    ) -> tuple["ClassificationDataset", "ClassificationDataset"]:
         n = int(len(self.x) * frac)
         return (
             ClassificationDataset(self.x[:n], self.y[:n], self.num_classes),

@@ -54,6 +54,15 @@ CANDIDATES: dict[str, tuple[tuple[int, int, Optional[int]], ...]] = {
     "sorted": ((8, 128, None), (4, 128, None), (8, 256, None)),
     "sorted_tiled": ((8, 128, None), (4, 128, None), (8, 256, None)),
     "sorted_tiled_seq": ((8, 128, None), (16, 128, None), (8, 256, None)),
+    # nm: compressed-storage family — the bk slot is the GROUP depth bg
+    # (k-depth per step = bg * m_group); tiled-seq/global-sort entries
+    # keep it None (k_tile-bound or slab-resident, not tunable)
+    "nm:wide": ((128, 128, 32), (64, 128, 32), (128, 128, 64)),
+    "nm:clip": ((8, 128, 16), (16, 128, 16), (8, 128, 32)),
+    "nm:wrap": ((8, 128, 16), (16, 128, 16), (8, 128, 32)),
+    "nm:sorted": ((8, 128, None), (4, 128, None)),
+    "nm:sorted_tiled": ((8, 128, None), (4, 128, None)),
+    "nm:sorted_tiled_seq": ((8, 128, None), (16, 128, None)),
 }
 
 _MEMO: dict[str, Optional[dict]] = {}  # key -> winning entry (in-process)

@@ -15,8 +15,6 @@ trace, since Pallas kernel bodies may not capture host constants.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

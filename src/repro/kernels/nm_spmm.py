@@ -1,15 +1,23 @@
-"""N:M compressed-weight matmul kernel (gather-expand in VMEM).
+"""N:M compressed-weight matmul kernels (gather-expand in VMEM).
 
 Weights pruned to keep n of every m along K are stored compressed:
     values  (N, K//m, n_keep) int8
     indices (N, K//m, n_keep) int32   (position of each kept value in its
                                        m-group; padded groups use idx 0,
                                        value 0)
-The kernel streams the *compressed* form from HBM — an m/n_keep bandwidth
+The kernels stream the *compressed* form from HBM — an m/n_keep bandwidth
 saving, which is the term that matters for decode (DESIGN.md §2) — and
-expands each (bn, bg, n_keep) slab to a dense (bn, bg*m) block in VMEM via
-an iota-compare one-hot einsum (MXU-friendly, no gathers), then runs the
-dense int8 dot against the activation slab with wide int32 accumulation.
+expand each (bn, bg, n_keep) slab to a dense (bn, bg*m) block in VMEM via
+an iota-compare one-hot einsum (MXU-friendly, no gathers).
+
+``nm_spmm`` is the original wide-int32 form. ``nm_seq_policy_matmul``
+and ``nm_sort_matmul`` extend it to EVERY accumulation policy: the
+expanded slab is bit-identical to the dense weight block (pruned
+positions expand to zero, and zero partial products are sign-neutral
+and additively inert through sort, saturation, and wraparound), so
+feeding it to the exact ``sorted_matmul``-style kernel bodies yields
+results bit-identical to decompress-then-dense — the policy x
+sparse-storage composition of ``kernels.ops.nm_policy_matmul``.
 
 Expansion cost is n_keep*m multiply-adds per weight — negligible next to
 the bm-deep matmul it feeds.
@@ -23,21 +31,34 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.pruning import nm_onehot_expand
+from repro.kernels.sorted_matmul import (
+    SEQ_POLICIES,
+    SORT_POLICIES,
+    _seq_body,
+    _sort_body,
+)
+
+
+def expand_nm_slab(vals: jax.Array, idx: jax.Array, m_group: int
+                   ) -> jax.Array:
+    """(bn, bg, n_keep) compressed slab -> dense (bn, bg*m_group) int32.
+
+    Delegates to ``core.pruning.nm_onehot_expand`` — the single
+    definition of compressed->dense shared with the jnp decompress
+    oracle, so both storage backends realize identical dense blocks.
+    Padded slots (value 0, index 0) and zero-padded groups expand to
+    zeros, equal to the dense weight block exactly.
+    """
+    return nm_onehot_expand(vals.astype(jnp.int32), idx, m_group)
+
 
 def _kernel(x_ref, v_ref, i_ref, o_ref, *, m_group: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    vals = v_ref[...].astype(jnp.int32)  # (bn, bg, n_keep)
-    idx = i_ref[...]  # (bn, bg, n_keep) int32
-    # one-hot expand: dense[b, g, p] = sum_k vals[b,g,k] * [idx[b,g,k] == p]
-    iota = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (m_group,), 3)
-    onehot = (idx[..., None] == iota).astype(jnp.int32)
-    dense = jnp.sum(vals[..., None] * onehot, axis=2)  # (bn, bg, m)
-    bn = dense.shape[0]
-    wb = dense.reshape(bn, -1)  # (bn, bg*m)
-
+    wb = expand_nm_slab(v_ref[...], i_ref[...], m_group)  # (bn, bg*m)
     xb = x_ref[...].astype(jnp.int32)  # (bm, bg*m)
     o_ref[...] += jax.lax.dot_general(
         xb, wb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
@@ -76,6 +97,140 @@ def nm_spmm(
             pl.BlockSpec((bn, bg, n_keep), lambda i, j, kk: (j, kk, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, values, indices)
+
+
+# ---------------------------------------------------------------------------
+# policy x sparse-storage composition kernels
+# ---------------------------------------------------------------------------
+
+
+def _nm_seq_kernel(x_ref, v_ref, i_ref, o_ref, *, policy: str,
+                   acc_bits: int, rounds: int, m_group: int):
+    """``sorted_matmul._seq_body`` fed by the one-hot expand slab."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wb = expand_nm_slab(v_ref[...], i_ref[...], m_group)  # (bn, bg*m)
+    _seq_body(x_ref[...].astype(jnp.int32), wb, o_ref, policy=policy,
+              acc_bits=acc_bits, rounds=rounds)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "acc_bits", "rounds", "m_group", "bm", "bn",
+                     "bg", "interpret"),
+)
+def nm_seq_policy_matmul(
+    x: jax.Array,  # (M, K) int carrier, K = G * m_group
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    *,
+    policy: str = "clip",
+    acc_bits: int = 16,
+    rounds: int = 1,
+    m_group: int = 16,
+    bm: int = 8,
+    bn: int = 128,
+    bg: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    """K-streaming policies on compressed storage: wide|clip|wrap|
+    sorted_tiled_seq. For sorted_tiled_seq, ``bg * m_group`` IS the
+    paper's k_tile (and must be a power of two for the bitonic network),
+    so tile boundaries coincide with the dense kernel's."""
+    m, k = x.shape
+    n, g, n_keep = values.shape
+    assert k == g * m_group, (x.shape, values.shape, m_group)
+    assert policy in SEQ_POLICIES, policy
+    if policy == "sorted_tiled_seq":
+        bk = bg * m_group
+        assert bk & (bk - 1) == 0, f"bg*m_group must be a power of 2: {bk}"
+    assert m % bm == 0 and n % bn == 0 and g % bg == 0, (m, n, g, bm, bn, bg)
+    grid = (m // bm, n // bn, g // bg)
+    kern = functools.partial(_nm_seq_kernel, policy=policy,
+                             acc_bits=acc_bits, rounds=rounds,
+                             m_group=m_group)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bg * m_group), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bg, n_keep), lambda i, j, kk: (j, kk, 0)),
+            pl.BlockSpec((bn, bg, n_keep), lambda i, j, kk: (j, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, values, indices)
+
+
+def _nm_sort_kernel(x_ref, v_ref, i_ref, o_ref, *, policy: str,
+                    acc_bits: int, k_tile: int, rounds: int, m_group: int):
+    """``sorted_matmul._sort_body`` with the w slab expanded in VMEM.
+
+    x arrives pre-padded to the dense padded K (kp); the expanded slab
+    covers G*m <= kp columns and is zero-extended to kp in-kernel (the
+    ``sorted`` power-of-two pad) — zeros sort inertly, so the product
+    cube equals the dense kernel's exactly.
+    """
+    xb = x_ref[...].astype(jnp.int32)  # (bm, kp)
+    wb = expand_nm_slab(v_ref[...], i_ref[...], m_group)  # (bn, G*m)
+    kp = xb.shape[1]
+    if kp > wb.shape[1]:
+        wb = jnp.pad(wb, ((0, 0), (0, kp - wb.shape[1])))
+    _sort_body(xb, wb, o_ref, policy=policy, acc_bits=acc_bits,
+               k_tile=k_tile, rounds=rounds)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "acc_bits", "k_tile", "rounds", "m_group",
+                     "bm", "bn", "interpret"),
+)
+def nm_sort_matmul(
+    x: jax.Array,  # (M, kp) int — pre-padded to the dense padded K
+    values: jax.Array,  # (N, G, n_keep) int8, G*m_group <= kp
+    indices: jax.Array,  # (N, G, n_keep) int32
+    *,
+    policy: str = "sorted",
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    m_group: int = 16,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Global-permutation policies on compressed storage (one-pass,
+    full-K-resident — same contract as ``sorted_matmul.sort_matmul``)."""
+    m, kp = x.shape
+    n, g, n_keep = values.shape
+    assert g * m_group <= kp, (values.shape, m_group, kp)
+    assert policy in SORT_POLICIES, policy
+    if policy == "sorted":
+        assert kp & (kp - 1) == 0, f"K must be a power of 2, got {kp}"
+    else:
+        assert k_tile & (k_tile - 1) == 0 and kp % k_tile == 0, (kp, k_tile)
+        assert g * m_group == kp, "tiled policies pre-pad G to kp/m groups"
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    kern = functools.partial(_nm_sort_kernel, policy=policy,
+                             acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
+                             m_group=m_group)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(x, values, indices)

@@ -30,6 +30,9 @@ from repro.kernels import sorted_matmul as _sm
 from repro.kernels import sorted_stream as _ss
 
 POLICIES = _sm.SEQ_POLICIES + _sm.SORT_POLICIES
+# the N:M compressed-storage kernel family tunes/blocks independently of
+# the dense kernels (different VMEM mix: one-hot expand slab vs dense w)
+NM_POLICIES = tuple(f"nm:{p}" for p in POLICIES)
 
 # Largest K the compiled (non-interpret) LEGACY one-pass sort kernel may
 # keep VMEM-resident: 8 * 128 * 4096 * 4 B = 16 MiB for the product cube.
@@ -59,6 +62,15 @@ _BLOCK_TABLE: dict[str, dict[str, tuple[int, int]]] = {
         "sorted": (8, 128),  # K fully resident: keep bm minimal
         "sorted_tiled": (8, 128),
         "sorted_tiled_seq": (8, 128),
+        # nm: family — compressed slabs are ~n_keep/m of the dense bytes,
+        # so bn can ride larger before the w slab dominates VMEM; the
+        # stepwise policies keep the dense (8, 128) working tile
+        "nm:wide": (128, 128),
+        "nm:clip": (8, 128),
+        "nm:wrap": (8, 128),
+        "nm:sorted": (8, 128),
+        "nm:sorted_tiled": (8, 128),
+        "nm:sorted_tiled_seq": (8, 128),
     },
     # CPU/GPU run interpret mode; block shape only affects grid overhead
     "cpu": {"*": (8, 128)},
@@ -98,10 +110,10 @@ def env_blocks(policy: str) -> tuple[int, int] | None:
                 f"{_BLOCKS_SYNTAX}; bad entry {entry!r} in {env!r}"
             ) from e
         if name:
-            if name not in POLICIES:
+            if name not in POLICIES + NM_POLICIES:
                 raise ValueError(
                     f"{_BLOCKS_SYNTAX}; unknown policy {name!r} in {env!r} "
-                    f"(expected one of {POLICIES})"
+                    f"(expected one of {POLICIES + NM_POLICIES})"
                 )
             per_policy[name] = (bm, bn)
         else:
@@ -305,6 +317,121 @@ def policy_matmul(
         out = _sm.seq_policy_matmul(
             xp, wp, policy=policy, acc_bits=acc_bits, rounds=rounds,
             bm=bm, bn=bn, bk=bk, interpret=interpret,
+        )
+    return out[:m, :n]
+
+
+def nm_policy_matmul(
+    x: jax.Array,  # (M, K) integer carrier, K <= G * m_group
+    values: jax.Array,  # (N, G, n_keep) int8 compressed weights
+    indices: jax.Array,  # (N, G, n_keep) int32 in-group positions
+    *,
+    m_group: int,
+    policy: str = "wide",
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    bm: int | None = None,
+    bn: int | None = None,
+    bg: int | None = None,
+    sort_impl: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Every accumulation policy directly on N:M compressed storage.
+
+    The sparse sibling of ``policy_matmul``: same (M, N) int32 contract,
+    same padding discipline, but the weight operand never exists dense
+    in HBM — the kernels expand (bn, bg, n_keep) slabs in VMEM. Padding
+    happens on the GROUP axis (G) instead of K: groups pad to ``bg``
+    blocks (tiled policies pin ``bg * m_group = k_tile`` so tile
+    boundaries coincide with the dense kernels'), and zero-padded
+    groups expand to zero columns — additively inert through every
+    policy, so results are bit-identical to ``nm_decompress`` followed
+    by dense ``policy_matmul``. Blocks resolve under the ``nm:`` kernel
+    family (``REPRO_PQS_BLOCKS``, autotune, ``_BLOCK_TABLE``).
+    """
+    assert policy in POLICIES, policy
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if values.shape != indices.shape:
+        raise ValueError(
+            f"values/indices shape mismatch: {values.shape} vs "
+            f"{indices.shape}"
+        )
+    if values.ndim != 3:
+        raise ValueError(f"expected (N, G, n_keep) slabs, got {values.shape}")
+    m = x.shape[0]
+    n, g, _ = values.shape
+    k_dense = g * m_group
+    if x.shape[1] > k_dense:
+        raise ValueError(
+            f"contraction mismatch: x has K={x.shape[1]} but the "
+            f"compressed weights cover G*m = {g}*{m_group} = {k_dense}"
+        )
+    if policy in ("sorted_tiled", "sorted_tiled_seq") and (
+        k_tile % m_group != 0
+    ):
+        raise ValueError(
+            f"tiled policies need k_tile % m_group == 0 so tile "
+            f"boundaries align with the compressed groups; got "
+            f"k_tile={k_tile}, m_group={m_group}"
+        )
+    kp = padded_k(k_dense, policy, k_tile)
+    fam = f"nm:{policy}"
+    if bm is None and bn is None:
+
+        def _runner(cbm, cbn, cbg):
+            return nm_policy_matmul(
+                x, values, indices, m_group=m_group, policy=policy,
+                acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
+                bm=cbm, bn=cbn, bg=cbg, sort_impl=sort_impl,
+                interpret=interpret,
+            )
+
+        bm, bn, abg = _blocks_for(fam, m, n, kp, _runner,
+                                  tracing=isinstance(x, jax.core.Tracer))
+        bg = abg if bg is None else bg
+    elif bm is None or bn is None:
+        dbm, dbn = default_blocks(fam)
+        bm = dbm if bm is None else bm
+        bn = dbn if bn is None else bn
+    xp = _pad_to(_pad_to(x, bm, 0), k_dense, 1)  # tail K -> whole groups
+    vp = _pad_to(values, bn, 0)
+    ip = _pad_to(indices, bn, 0)
+    if policy in _sm.SORT_POLICIES:
+        impl = resolve_sort_impl(kp, interpret, sort_impl)
+        if policy == "sorted_tiled":
+            # pad G so the compressed groups cover exactly kp columns —
+            # the tiled kernels then never need an in-kernel column pad
+            gp = kp // m_group
+            if gp > g:
+                vp = jnp.pad(vp, ((0, 0), (0, gp - g), (0, 0)))
+                ip = jnp.pad(ip, ((0, 0), (0, gp - g), (0, 0)))
+        xp = _pad_to(xp, kp, 1)
+        if impl == "onepass":
+            out = _nm.nm_sort_matmul(
+                xp, vp, ip, policy=policy, acc_bits=acc_bits,
+                k_tile=k_tile, rounds=rounds, m_group=m_group,
+                bm=bm, bn=bn, interpret=interpret,
+            )
+        else:
+            out = _ss.nm_stream_sort_matmul(
+                _as_int8(xp), vp, ip, policy=policy, acc_bits=acc_bits,
+                k_tile=k_tile, rounds=rounds, m_group=m_group,
+                bm=bm, bn=bn, interpret=interpret,
+            )
+    else:
+        if policy == "sorted_tiled_seq":
+            bg = k_tile // m_group  # the sort block IS the paper's k_tile
+        elif bg is None:
+            bg = max(1, min(512, next_pow2(k_dense)) // m_group)
+        g_pad = (-g) % bg
+        if g_pad:
+            vp = jnp.pad(vp, ((0, 0), (0, g_pad), (0, 0)))
+            ip = jnp.pad(ip, ((0, 0), (0, g_pad), (0, 0)))
+            xp = _pad_to(xp, (g + g_pad) * m_group, 1)
+        out = _nm.nm_seq_policy_matmul(
+            xp, vp, ip, policy=policy, acc_bits=acc_bits, rounds=rounds,
+            m_group=m_group, bm=bm, bn=bn, bg=bg, interpret=interpret,
         )
     return out[:m, :n]
 

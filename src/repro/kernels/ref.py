@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant import qrange
 from repro.core.sorted_accum import (
     monotone_accumulate,
     sorted_order,

@@ -69,14 +69,12 @@ def _stepwise(ordered: jax.Array, init: jax.Array, acc_bits: int,
     return jax.lax.fori_loop(0, ordered.shape[-1], body, init)
 
 
-def _seq_kernel(x_ref, w_ref, o_ref, *, policy: str, acc_bits: int,
-                rounds: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    xb = x_ref[...].astype(jnp.int32)  # (bm, bk)
-    wb = w_ref[...].astype(jnp.int32)  # (bn, bk)
+def _seq_body(xb, wb, o_ref, *, policy: str, acc_bits: int, rounds: int):
+    """One K-streaming grid step on int32 blocks xb (bm, bk) / wb
+    (bn, bk). THE single definition of the seq-policy semantics — the
+    dense kernel and the N:M compressed kernel (kernels/nm_spmm.py)
+    differ only in how wb reaches VMEM, so a semantics change here
+    cannot desynchronize the two storage forms."""
     if policy == "wide":
         o_ref[...] += jax.lax.dot_general(
             xb, wb, (((1,), (1,)), ((), ())),
@@ -90,10 +88,20 @@ def _seq_kernel(x_ref, w_ref, o_ref, *, policy: str, acc_bits: int,
                            saturate=(policy != "wrap"))
 
 
-def _sort_kernel(x_ref, w_ref, o_ref, *, policy: str, acc_bits: int,
-                 k_tile: int, rounds: int):
-    xb = x_ref[...].astype(jnp.int32)  # (bm, K)
-    wb = w_ref[...].astype(jnp.int32)  # (bn, K)
+def _seq_kernel(x_ref, w_ref, o_ref, *, policy: str, acc_bits: int,
+                rounds: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _seq_body(x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+              o_ref, policy=policy, acc_bits=acc_bits, rounds=rounds)
+
+
+def _sort_body(xb, wb, o_ref, *, policy: str, acc_bits: int, k_tile: int,
+               rounds: int):
+    """Full-K-resident global-sort step on int32 slabs xb (bm, K) / wb
+    (bn, K) — shared by the dense and N:M compressed kernels."""
     prods = xb[:, None, :] * wb[None, :, :]  # (bm, bn, K)
     if policy == "sorted":
         ordered = sorted_order_bitonic(prods, rounds)
@@ -102,6 +110,13 @@ def _sort_kernel(x_ref, w_ref, o_ref, *, policy: str, acc_bits: int,
                                      order_fn=sorted_order_bitonic)
     o_ref[...] = _stepwise(ordered, jnp.zeros_like(o_ref), acc_bits,
                            saturate=True)
+
+
+def _sort_kernel(x_ref, w_ref, o_ref, *, policy: str, acc_bits: int,
+                 k_tile: int, rounds: int):
+    _sort_body(x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+               o_ref, policy=policy, acc_bits=acc_bits, k_tile=k_tile,
+               rounds=rounds)
 
 
 @functools.partial(

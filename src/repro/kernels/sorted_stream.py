@@ -63,6 +63,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.sorted_accum import pair_permutation
 from repro.kernels.bitonic import sorted_order_bitonic
+from repro.kernels.nm_spmm import expand_nm_slab
 from repro.kernels.sorted_matmul import SORT_POLICIES, _stepwise
 
 # Largest (bm, bc, K) int32 product chunk chunked_sort_matmul keeps live
@@ -114,6 +115,61 @@ def tile_sums_matmul(
     )(x, w)
 
 
+def _nm_tile_sums_kernel(x_ref, v_ref, i_ref, o_ref, *, m_group: int):
+    xb = x_ref[...].astype(jnp.int32)  # (bm, k_tile)
+    wb = expand_nm_slab(v_ref[...], i_ref[...], m_group)  # (bn, k_tile)
+    o_ref[:, :, 0] = jax.lax.dot_general(
+        xb, wb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m_group", "k_tile", "bm", "bn", "interpret")
+)
+def nm_tile_sums_matmul(
+    x: jax.Array,  # (M, K) int, K = G * m_group
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    *,
+    m_group: int = 16,
+    k_tile: int = 256,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pass-1 hook for compressed storage: per-k_tile partial sums,
+    (M, N, K/k_tile) int32, streamed from the COMPRESSED slabs.
+
+    Sorting a tile never changes its sum and pruned positions are zero,
+    so the kept-only dot per tile equals the dense tile sum exactly —
+    the pairing permutation downstream is therefore identical to the
+    dense pipeline's while HBM traffic for weights drops by ~n_keep/m
+    (the paper's pruning payoff, measured in `pqs_dot(with_census=True)`
+    overflow counts as shorter effective K per tile).
+    """
+    m, k = x.shape
+    n, g, n_keep = values.shape
+    assert k == g * m_group and k % k_tile == 0, (x.shape, values.shape,
+                                                 m_group, k_tile)
+    assert k_tile % m_group == 0, (k_tile, m_group)
+    bg = k_tile // m_group
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    n_tiles = k // k_tile
+    kern = functools.partial(_nm_tile_sums_kernel, m_group=m_group)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, k_tile), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bn, bg, n_keep), lambda i, j, t: (j, t, 0)),
+            pl.BlockSpec((bn, bg, n_keep), lambda i, j, t: (j, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn, 1), lambda i, j, t: (i, j, t)),
+        out_shape=jax.ShapeDtypeStruct((m, n, n_tiles), jnp.int32),
+        interpret=interpret,
+    )(x, values, indices)
+
+
 def _gather_tile(xb, wb, tile_idx, k_tile):
     """Products of one k_tile per element: (bm, bn) tile indices ->
     (bm, bn, k_tile) int32. xb is (bm, K), wb is (bn, K)."""
@@ -125,11 +181,12 @@ def _gather_tile(xb, wb, tile_idx, k_tile):
     return xg * wg
 
 
-def _paired_kernel(x_ref, w_ref, p_ref, o_ref, *, acc_bits: int,
-                   k_tile: int, rounds: int):
-    xb = x_ref[...].astype(jnp.int32)  # (bm, K) slab
-    wb = w_ref[...].astype(jnp.int32)  # (bn, K) slab
-    pm = p_ref[...]  # (bm, bn, n_tiles) per-element pairing permutation
+def _paired_body(xb, wb, pm, o_ref, acc_bits: int, k_tile: int,
+                 rounds: int):
+    """Shared pass-2 body: accumulate K in per-element paired order.
+
+    xb (bm, K) / wb (bn, K) int32 slabs, pm (bm, bn, n_tiles) pairing —
+    the dense and nm kernels differ only in how wb reaches VMEM."""
     n_tiles = pm.shape[-1]
     bm, bn = xb.shape[0], wb.shape[0]
 
@@ -149,6 +206,26 @@ def _paired_kernel(x_ref, w_ref, p_ref, o_ref, *, acc_bits: int,
         acc = _stepwise(sorted_order_bitonic(tail, rounds), acc, acc_bits,
                         saturate=True)
     o_ref[...] = acc
+
+
+def _paired_kernel(x_ref, w_ref, p_ref, o_ref, *, acc_bits: int,
+                   k_tile: int, rounds: int):
+    xb = x_ref[...].astype(jnp.int32)  # (bm, K) slab
+    wb = w_ref[...].astype(jnp.int32)  # (bn, K) slab
+    pm = p_ref[...]  # (bm, bn, n_tiles) per-element pairing permutation
+    _paired_body(xb, wb, pm, o_ref, acc_bits, k_tile, rounds)
+
+
+def _nm_paired_kernel(x_ref, v_ref, i_ref, p_ref, o_ref, *, acc_bits: int,
+                      k_tile: int, rounds: int, m_group: int):
+    """Pass 2 fed by the compressed slab: HBM streams (bn, G, n_keep)
+    values+indices instead of the (bn, K) dense rows; the one-hot expand
+    rebuilds the dense slab in VMEM (bit-identical — pruned positions
+    expand to zero) and the paired gather proceeds unchanged."""
+    xb = x_ref[...].astype(jnp.int32)  # (bm, K) slab
+    wb = expand_nm_slab(v_ref[...], i_ref[...], m_group)  # (bn, G*m)
+    pm = p_ref[...]
+    _paired_body(xb, wb, pm, o_ref, acc_bits, k_tile, rounds)
 
 
 @functools.partial(
@@ -191,18 +268,69 @@ def paired_accum_matmul(
     )(x, w, perm)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("acc_bits", "k_tile", "rounds", "m_group", "bm", "bn",
+                     "interpret"),
+)
+def nm_paired_accum_matmul(
+    x: jax.Array,  # (M, K) int, K = G * m_group
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    perm: jax.Array,  # (M, N, K/k_tile) int32 pairing permutation
+    *,
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    m_group: int = 16,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pass 2 on compressed storage: per-element paired accumulation."""
+    m, k = x.shape
+    n, g, n_keep = values.shape
+    assert k == g * m_group, (x.shape, values.shape, m_group)
+    assert perm.shape == (m, n, k // k_tile), (perm.shape, (m, n, k, k_tile))
+    assert k_tile & (k_tile - 1) == 0 and k % k_tile == 0, (k, k_tile)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    n_tiles = k // k_tile
+    kern = functools.partial(_nm_paired_kernel, acc_bits=acc_bits,
+                             k_tile=k_tile, rounds=rounds, m_group=m_group)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bm, bn, n_tiles), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, values, indices, perm)
+
+
+def _sort_chunk_body(xb, wb, o_ref, c, bc, acc_bits: int, rounds: int):
+    """Sort-and-accumulate one (bm, bc, K) cube chunk into o_ref's c-th
+    column slice — shared by the dense and N:M compressed kernels (they
+    differ only in how the (bc, K) weight chunk reaches VMEM)."""
+    prods = xb[:, None, :] * wb[None, :, :]  # (bm, bc, K) live chunk
+    ordered = sorted_order_bitonic(prods, rounds)
+    o_ref[:, pl.ds(c * bc, bc)] = _stepwise(
+        ordered, jnp.zeros((xb.shape[0], bc), jnp.int32), acc_bits,
+        saturate=True,
+    )
+
+
 def _chunked_sort_kernel(x_ref, w_ref, o_ref, *, acc_bits: int, bc: int,
                          rounds: int):
     xb = x_ref[...].astype(jnp.int32)  # (bm, K) slab
 
     def chunk(c, _):
         wb = w_ref[pl.ds(c * bc, bc), :].astype(jnp.int32)  # (bc, K)
-        prods = xb[:, None, :] * wb[None, :, :]  # (bm, bc, K) live chunk
-        ordered = sorted_order_bitonic(prods, rounds)
-        o_ref[:, pl.ds(c * bc, bc)] = _stepwise(
-            ordered, jnp.zeros((xb.shape[0], bc), jnp.int32), acc_bits,
-            saturate=True,
-        )
+        _sort_chunk_body(xb, wb, o_ref, c, bc, acc_bits, rounds)
         return 0
 
     n_chunks = o_ref.shape[1] // bc
@@ -249,6 +377,66 @@ def chunked_sort_matmul(
     )(x, w)
 
 
+def _nm_chunked_sort_kernel(x_ref, v_ref, i_ref, o_ref, *, acc_bits: int,
+                            bc: int, rounds: int, m_group: int):
+    """``sorted`` on compressed storage: expand only the bc-row slice of
+    the compressed slab per chunk, so the live int32 working set stays
+    (bm, bc, K) + (bc, K) — the dense kernel's budget."""
+    xb = x_ref[...].astype(jnp.int32)  # (bm, kp) slab (pre-padded)
+    kp = xb.shape[1]
+
+    def chunk(c, _):
+        vc = v_ref[pl.ds(c * bc, bc), :, :]  # (bc, G, n_keep)
+        ic = i_ref[pl.ds(c * bc, bc), :, :]
+        wb = expand_nm_slab(vc, ic, m_group)  # (bc, G*m)
+        if kp > wb.shape[1]:
+            wb = jnp.pad(wb, ((0, 0), (0, kp - wb.shape[1])))
+        _sort_chunk_body(xb, wb, o_ref, c, bc, acc_bits, rounds)
+        return 0
+
+    n_chunks = o_ref.shape[1] // bc
+    jax.lax.fori_loop(0, n_chunks, chunk, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("acc_bits", "rounds", "m_group", "bm", "bn", "bc",
+                     "interpret"),
+)
+def nm_chunked_sort_matmul(
+    x: jax.Array,  # (M, kp) int, kp a power of two >= G * m_group
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    *,
+    acc_bits: int = 16,
+    rounds: int = 1,
+    m_group: int = 16,
+    bm: int = 8,
+    bn: int = 128,
+    bc: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    m, kp = x.shape
+    n, g, n_keep = values.shape
+    assert g * m_group <= kp, (values.shape, m_group, kp)
+    assert kp & (kp - 1) == 0, f"K must be a power of 2, got {kp}"
+    assert m % bm == 0 and n % bn == 0 and bn % bc == 0, (m, n, bm, bn, bc)
+    kern = functools.partial(_nm_chunked_sort_kernel, acc_bits=acc_bits,
+                             bc=bc, rounds=rounds, m_group=m_group)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, values, indices)
+
+
 def _sort_chunk(bm: int, bn: int, k: int) -> int:
     """Largest bc dividing bn with the (bm, bc, K) int32 chunk in budget."""
     for bc in range(bn, 1, -1):
@@ -287,4 +475,43 @@ def stream_sort_matmul(
     return paired_accum_matmul(
         x, w, perm, acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
         bm=bm, bn=bn, interpret=interpret,
+    )
+
+
+def nm_stream_sort_matmul(
+    x: jax.Array,  # (M, kp) int — pre-padded like stream_sort_matmul's x
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    *,
+    policy: str = "sorted",
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    m_group: int = 16,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Streaming global-sort entry point for N:M compressed storage.
+
+    Same contract as ``stream_sort_matmul`` but the weight operand stays
+    compressed end-to-end: pass 1 computes tile sums straight from the
+    compressed slabs (``nm_tile_sums_matmul``), the pairing permutation
+    is the shared ``pair_permutation``, and pass 2 / the chunked cube
+    expand in VMEM only. Bit-identical to decompress-then-dense.
+    """
+    assert policy in SORT_POLICIES, policy
+    if policy == "sorted":
+        return nm_chunked_sort_matmul(
+            x, values, indices, acc_bits=acc_bits, rounds=rounds,
+            m_group=m_group, bm=bm, bn=bn,
+            bc=_sort_chunk(bm, bn, x.shape[1]), interpret=interpret,
+        )
+    sums = nm_tile_sums_matmul(x, values, indices, m_group=m_group,
+                               k_tile=k_tile, bm=bm, bn=bn,
+                               interpret=interpret)
+    perm = jax.jit(pair_permutation)(sums)
+    return nm_paired_accum_matmul(
+        x, values, indices, perm, acc_bits=acc_bits, k_tile=k_tile,
+        rounds=rounds, m_group=m_group, bm=bm, bn=bn, interpret=interpret,
     )

@@ -38,7 +38,6 @@ import traceback
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, cells_for, get_config
 from repro.launch import sharding as shard_lib

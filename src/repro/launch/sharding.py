@@ -16,10 +16,9 @@ makes one rule set hold across all 10 architectures x 4 shapes.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import data_axes
@@ -147,6 +146,43 @@ def qtensor_specs(
     return QTensor(v_spec, s_spec, aq_specs, corr_spec)
 
 
+def sparse_qtensor_specs(
+    mesh: Mesh, path: str, qt: Any,
+    moe_replicate: bool = False, serve_mode: bool = False,
+) -> Any:
+    """PartitionSpec pytree for one N:M-compressed SparseQTensor leaf.
+
+    The rule is derived from the LOGICAL dense (in, out) matrix the leaf
+    replaces: whatever axis entry the dense rule gives the output dim
+    lands on the values' out axis (dim -3), and the dense input-dim
+    entry lands on the GROUP axis (dim -2) — sharding G is sharding K in
+    units of m_group, so a weight shard still holds whole groups and
+    the kernels' expand never crosses devices. indices mirror values;
+    scale and act_corr ride the out entry; n_keep never shards.
+    """
+    from repro.core.qtensor import SparseQTensor
+
+    v_shape = tuple(qt.values.shape)
+    dense_shape = v_shape[:-3] + (qt.k_dim, v_shape[-3])
+    dspec = param_spec(mesh, path, dense_shape, moe_replicate, serve_mode)
+    entries = list(dspec) + [None] * (len(dense_shape) - len(dspec))
+    in_entry, out_entry = entries[-2], entries[-1]
+    v_spec = sanitize(
+        mesh, P(*entries[:-2], out_entry, in_entry, None), v_shape
+    )
+    s_spec = sanitize(
+        mesh, P(*entries[:-2], out_entry), tuple(qt.scale.shape)
+    )
+    aq = getattr(qt, "act_qparams", None)
+    aq_specs = None
+    if aq is not None:
+        lead = sanitize(mesh, P(*entries[:-2]), tuple(aq.scale.shape))
+        aq_specs = type(aq)(lead, lead, aq.bits, aq.symmetric)
+    corr_spec = None if getattr(qt, "act_corr", None) is None else s_spec
+    return SparseQTensor(v_spec, v_spec, s_spec, qt.m_group, qt.k_dim,
+                         aq_specs, corr_spec)
+
+
 def params_shardings(
     mesh: Mesh, params_shapes: Any, moe_replicate: bool = False,
     serve_mode: bool = False,
@@ -154,14 +190,18 @@ def params_shardings(
     """Pytree of NamedShardings matching a (ShapeDtypeStruct) param tree.
 
     QTensor leaves map to QTensor-shaped sharding subtrees: int8 values
-    and their QParams scales shard together (see ``qtensor_specs``).
+    and their QParams scales shard together (see ``qtensor_specs``);
+    N:M-compressed SparseQTensor leaves map the same way with the group
+    axis standing in for the input dim (``sparse_qtensor_specs``).
     """
-    from repro.core.qtensor import QTensor
+    from repro.core.qtensor import QTensor, SparseQTensor
 
     def rule(path, leaf):
-        if isinstance(leaf, QTensor):
-            specs = qtensor_specs(mesh, _path_str(path), leaf,
-                                  moe_replicate, serve_mode)
+        if isinstance(leaf, (QTensor, SparseQTensor)):
+            spec_fn = (sparse_qtensor_specs if isinstance(leaf, SparseQTensor)
+                       else qtensor_specs)
+            specs = spec_fn(mesh, _path_str(path), leaf,
+                            moe_replicate, serve_mode)
             return jax.tree_util.tree_map(
                 lambda s: NamedSharding(mesh, s), specs,
                 is_leaf=lambda s: isinstance(s, P),
@@ -171,7 +211,8 @@ def params_shardings(
         return NamedSharding(mesh, spec)
 
     return jax.tree_util.tree_map_with_path(
-        rule, params_shapes, is_leaf=lambda l: isinstance(l, QTensor)
+        rule, params_shapes,
+        is_leaf=lambda l: isinstance(l, (QTensor, SparseQTensor)),
     )
 
 

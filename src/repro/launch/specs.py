@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.models.model import Model, build_model
+from repro.models.model import Model
 from repro.optim import adamw
 
 SDS = jax.ShapeDtypeStruct

@@ -12,8 +12,7 @@ cross-attention K/V computed once from the encoder output at prefill.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,12 +22,10 @@ from repro.core.qtensor import asarray
 from repro.models.hints import hint_batch, hint_logits
 from repro.models.layers import (
     Params,
-    _expand_kv,
     _sdpa,
     attention,
     attention_decode,
     attn_init,
-    dense_init,
     empty_kv_cache,
     lin,
     mlp,
@@ -259,6 +256,9 @@ def decode_step(
         x = x + mlp(p["mlp"], norm(x, p["ln2"], cfg), cfg)
         return hint_batch(x), new_cache
 
-    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches, cross_kv), unroll=cfg.scan_unroll)
+    x, new_caches = jax.lax.scan(
+        body, x, (params["dec_layers"], caches, cross_kv),
+        unroll=cfg.scan_unroll,
+    )
     x = norm(x, params["dec_ln_f"], cfg)
     return hint_logits(x @ asarray(params["embed"], x.dtype).T), new_caches

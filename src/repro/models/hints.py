@@ -11,7 +11,7 @@ so the same model code runs everywhere.
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -28,11 +28,14 @@ Params = dict[str, Any]
 def lin(x: jax.Array, w: Any, site: Optional[str] = None) -> jax.Array:
     """x @ w with transparent QTensor handling (PQS int8 serving).
 
-    Default: dequantize-on-the-fly float matmul (the bandwidth story).
-    Inside a ``core.dispatch.integer_lin`` context, QTensor projections
-    instead run as true integer dot products with simulated narrow
-    accumulation through the unified ``pqs_dot`` layer (the numerics
-    story) — this is how the serving engine executes quantized
+    ``w`` may be a dense ``QTensor`` or an N:M-compressed
+    ``SparseQTensor`` (pruned weights in values/indices form — the full
+    P+Q+S storage). Default: dequantize-on-the-fly float matmul (the
+    bandwidth story). Inside a ``core.dispatch.integer_lin`` context,
+    quantized projections instead run as true integer dot products with
+    simulated narrow accumulation through the unified ``pqs_dot`` layer
+    (compressed weights stay compressed: ``storage="nm"``) — the
+    numerics story — this is how the serving engine executes quantized
     projections under an accumulation policy; with a serving mesh on
     the config, the dot runs sharded (N on "model", M on data axes).
 
@@ -44,9 +47,9 @@ def lin(x: jax.Array, w: Any, site: Optional[str] = None) -> jax.Array:
     """
     if not isinstance(w, jax.Array):
         from repro.core import dispatch
-        from repro.core.qtensor import QTensor
+        from repro.core.qtensor import QTensor, SparseQTensor
 
-        if isinstance(w, QTensor):
+        if isinstance(w, (QTensor, SparseQTensor)):
             store = dispatch.calibration_store()
             if store is not None and site is not None:
                 jax.debug.callback(
@@ -131,12 +134,11 @@ def apply_rope(
         )  # (hd/2,) -> which stream each freq slot uses
         pos = positions.astype(jnp.float32)  # (3, B, S)
         angles = pos[..., None] * freqs[None, None, None, :]  # (3,B,S,hd/2)
-        angles = jnp.take_along_axis(
-            angles, sec[None, None, None, :].astype(jnp.int32) * 0 + sec[None, None, None, :], axis=0
-        )[0] if False else jnp.moveaxis(angles, 0, -1)  # (B,S,hd/2,3)
-        angles = jnp.take_along_axis(
-            angles, jnp.broadcast_to(sec[None, None, :, None], angles.shape[:-1] + (1,)), axis=-1
-        )[..., 0]  # (B,S,hd/2)
+        angles = jnp.moveaxis(angles, 0, -1)  # (B,S,hd/2,3)
+        sec_idx = jnp.broadcast_to(
+            sec[None, None, :, None], angles.shape[:-1] + (1,)
+        )
+        angles = jnp.take_along_axis(angles, sec_idx, axis=-1)[..., 0]
     else:
         assert positions.ndim == 2
         angles = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,hd/2)
@@ -424,11 +426,13 @@ def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
 
 def mlp(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     if cfg.activation == "gelu_plain":
-        hid = lin(x, params["w_in"], site="w_in") \
-            + params["b_in"].astype(x.dtype)
+        hid = lin(x, params["w_in"], site="w_in") + params["b_in"].astype(
+            x.dtype
+        )
         hid = jax.nn.gelu(hid)
-        return lin(hid, params["w_out"], site="w_out") \
-            + params["b_out"].astype(x.dtype)
+        return lin(hid, params["w_out"], site="w_out") + params[
+            "b_out"
+        ].astype(x.dtype)
     act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
     gate = act(lin(x, params["w_gate"], site="w_gate"))
     up = lin(x, params["w_up"], site="w_up")

@@ -19,7 +19,7 @@ M-RoPE positions for the vlm family ride in "positions" (3,B,S).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -130,7 +130,9 @@ def mamba_lm_decode(params: Params, token: jax.Array, caches, cfg: ModelConfig):
         h, nc = ssm_lib.mamba_step(p["mamba"], norm(x, p["ln"], cfg), cache, cfg)
         return hint_batch(x + h), nc
 
-    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches), unroll=cfg.scan_unroll)
+    x, new_caches = jax.lax.scan(
+        body, x, (params["layers"], caches), unroll=cfg.scan_unroll
+    )
     x = norm(x, params["ln_f"], cfg)
     return hint_logits(x @ asarray(params["embed"], x.dtype).T), new_caches
 

@@ -25,8 +25,6 @@ the load-balancing auxiliary loss of Shazeer et al. for training.
 
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -21,7 +21,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, SSMConfig
+from repro.configs.base import ModelConfig
 from repro.models.layers import Params, dense_init, lin, rms_norm
 
 

@@ -18,8 +18,8 @@ Supported surface (all the repo's tests use):
 from __future__ import annotations
 
 try:  # pragma: no cover - exercised only where hypothesis exists
-    from hypothesis import given, settings
-    from hypothesis import strategies
+    from hypothesis import given, settings  # noqa: F401 — re-exports
+    from hypothesis import strategies  # noqa: F401
 
     HAVE_HYPOTHESIS = True
 except ImportError:

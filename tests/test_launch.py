@@ -20,10 +20,8 @@ from repro.launch.hlo_census import (
 from repro.launch.specs import (
     batch_specs,
     cache_specs,
-    make_serve_step,
     make_train_step,
     params_specs,
-    token_specs,
 )
 from repro.models.model import build_model
 

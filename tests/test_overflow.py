@@ -2,12 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_shim import given, settings
 from _hypothesis_shim import strategies as st
 
 from repro.core.overflow import (
-    Census,
     accumulate,
     census,
     matmul_census,

@@ -1,7 +1,5 @@
 """PQS orchestration tests: schedules, QuantLinear paths, paper nets."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,7 +9,6 @@ from repro.configs.paper import MLP1, MLP2, CONVNET
 from repro.core.papernets import (
     evaluate_fp32,
     evaluate_int,
-    freeze_net,
     init_papernet,
     overflow_profile,
     papernet_fwd,

@@ -21,7 +21,6 @@ op-for-op numerics.
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

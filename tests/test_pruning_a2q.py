@@ -70,6 +70,68 @@ def test_compress_roundtrip(rng):
     np.testing.assert_allclose(nm_decompress(vals, idx, 16), wp)
 
 
+def test_compress_dense_as_sparse_roundtrip(rng):
+    """n_keep == m: no pruning assumption — any matrix round-trips."""
+    w = rng.normal(size=(5, 48)).astype(np.float32)  # fully dense
+    vals, idx = nm_compress(w, 16, 16)
+    assert vals.shape == (5, 3, 16)
+    np.testing.assert_array_equal(nm_decompress(vals, idx, 16), w)
+
+
+def test_compress_tail_group_roundtrip(rng):
+    """K not divisible by m: the tail group zero-pads inside the
+    compressed form and k= trims it back exactly."""
+    w = rng.normal(size=(4, 50)).astype(np.float32)
+    mask = np.asarray(nm_prune_mask(jnp.asarray(w[:, :48]), 4, 16))
+    wp = np.concatenate([w[:, :48] * mask, w[:, 48:50] * 0], axis=1)
+    wp[:, 48] = 1.5  # one kept value in the 2-wide tail group
+    vals, idx = nm_compress(wp, 4, 16)
+    assert vals.shape == (4, 4, 4)  # G = ceil(50/16) = 4
+    np.testing.assert_array_equal(nm_decompress(vals, idx, 16, k=50), wp)
+    # the padded variant covers G*m columns, with an all-zero tail
+    full = nm_decompress(vals, idx, 16)
+    assert full.shape == (4, 64)
+    assert np.abs(full[:, 50:]).sum() == 0
+
+
+def test_compress_validation_errors(rng):
+    w = rng.normal(size=(4, 32)).astype(np.float32)
+    with pytest.raises(ValueError, match="n_keep"):
+        nm_compress(w, 0, 16)
+    with pytest.raises(ValueError, match="n_keep"):
+        nm_compress(w, 17, 16)
+    with pytest.raises(ValueError, match="m_group"):
+        nm_compress(w, 1, 0)
+    with pytest.raises(ValueError, match="2-D"):
+        nm_compress(w.reshape(4, 4, 8), 4, 16)
+    with pytest.raises(ValueError, match="empty"):
+        nm_compress(w[:, :0], 4, 16)
+    # a denser-than-n_keep:m matrix would compress lossily -> loud error
+    with pytest.raises(ValueError, match="not 4:16 sparse"):
+        nm_compress(w, 4, 16)
+
+
+def test_compress_jax_matches_numpy(rng):
+    """The device-side packer (used by qtensor_nm_compress on stacked
+    leaves) agrees with the host packer bit for bit."""
+    from repro.core.pruning import nm_compress_jax, nm_decompress_jax
+
+    w = rng.normal(size=(6, 40)).astype(np.float32)
+    mask = np.asarray(nm_prune_mask(jnp.asarray(np.pad(w, ((0, 0), (0, 8)))),
+                                    2, 8))[:, :40]
+    wp = w * mask
+    vn, idxn = nm_compress(wp, 2, 8)
+    vj, idxj = nm_compress_jax(jnp.asarray(wp), 2, 8)
+    np.testing.assert_array_equal(vn, np.asarray(vj))
+    np.testing.assert_array_equal(idxn, np.asarray(idxj))
+    np.testing.assert_array_equal(
+        nm_decompress(vn, idxn, 8, k=40),
+        np.asarray(nm_decompress_jax(vj, idxj, 8, k=40)),
+    )
+    with pytest.raises(ValueError, match="not 2:8 sparse"):
+        nm_compress_jax(jnp.asarray(w), 2, 8)
+
+
 def test_filter_prune_zeroes_rows(rng):
     w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
     mask = filter_prune_mask(w, keep_frac=0.25)

@@ -11,7 +11,7 @@ import pytest
 from _hypothesis_shim import given, settings
 from _hypothesis_shim import strategies as st
 
-from repro.core.overflow import accumulate, census, transient_survivors
+from repro.core.overflow import transient_survivors
 from repro.core.quant import qrange
 from repro.core.sorted_accum import (
     alg1_sorted_dot,

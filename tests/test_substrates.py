@@ -17,7 +17,7 @@ from repro.checkpoint import (
     save_checkpoint,
 )
 from repro.core.qtensor import QTensor, quantize_tree, quantize_weight
-from repro.data import TokenStream, make_classification, synth_mnist
+from repro.data import TokenStream, synth_mnist
 from repro.optim import adamw, clip_by_global_norm, cosine_schedule, sgd_momentum
 from repro.runtime import (
     FailureInjector,
