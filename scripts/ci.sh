@@ -11,12 +11,16 @@
 #          skipped with a notice when ruff is not installed (the offline
 #          container does not ship it — CI installs it)
 #   unit   full single-device test suite (exactly as the roadmap
-#          specifies); extra args go to pytest
+#          specifies), incl. the property-based K-shard parity suite
+#          (tests/test_property_parity.py, >= 200 drawn cases per run
+#          through the hypothesis shim); extra args go to pytest
 #   shard  forced-multi-device shard: sharded pqs_dot + integer serving
-#          + nm-storage composition on an 8-way host-device mesh (the
-#          selected tests self-skip in the unit stage, so this is the
-#          only place they run; test_nm_policy's single-device tests
-#          already ran in unit and are not repeated here)
+#          + nm-storage composition + the K-sharded (k_axis) sweep
+#          (dense + nm, all six policies, incl. total K = 2x
+#          MAX_STREAM_K) on an 8-way host-device mesh (the selected
+#          tests self-skip in the unit stage, so this is the only place
+#          they run; test_nm_policy's single-device tests already ran
+#          in unit and are not repeated here)
 #   smoke  examples/quickstart.py (the paper's idea end-to-end)
 #   bench  kernel bench smoke -> BENCH_kernels.json, gated against the
 #          committed CPU baseline (see REPRO_BENCH_TOL below)
@@ -85,7 +89,9 @@ unit_stage() {
 }
 
 shard_stage() {
-    REPRO_FORCE_MULTIDEVICE=1 python -m pytest -x -q \
+    # 8 forced host devices: the K-shard sweep needs a 3-axis
+    # ("data", "model", "k") mesh next to the M/N layouts
+    REPRO_FORCE_MULTIDEVICE=8 python -m pytest -x -q \
         tests/test_sharded_dispatch.py \
         "tests/test_nm_policy.py::test_nm_sharded_bit_identical" \
         "tests/test_nm_policy.py::test_nm_sharded_census_counts_once"

@@ -48,6 +48,17 @@ so every output element is produced by exactly the single-device
 routine and results stay bit-identical at any mesh shape. Specs are
 ``sanitize``-degraded (non-dividing axes dropped), so ragged shapes
 lower everywhere.
+
+K-sharded accumulation: ``pqs_dot(..., k_shards=S)`` (and its mesh form
+``mesh= + k_axis=``) partitions the REDUCTION axis instead of keeping
+it whole: each shard accumulates its contiguous, policy-padded K/S
+slice under the configured policy with the unchanged kernel bodies, and
+the per-shard partials merge small-to-large through
+``core.sorted_accum.tree_combine`` with stepwise saturation. The census
+counts every shard's local dot and reports combine-step overflows
+separately (``Census.n_combine``). This is what carries a single dot
+past the compiled sort kernels' per-device ``ops.MAX_STREAM_K`` bound:
+per-device K footprint is K/S.
 """
 
 from __future__ import annotations
@@ -63,11 +74,13 @@ from repro.core.overflow import (
     Census,
     accumulate,
     census,
+    kshard_accumulate,
     nm_partial_products,
     partial_products,
 )
 from repro.core.pruning import nm_decompress_jax
 from repro.core.quant import qrange
+from repro.core.sorted_accum import tree_combine
 from repro.kernels import ops
 
 POLICIES = ops.POLICIES  # derived from the kernel modules — one list
@@ -217,11 +230,103 @@ def _local_dot(
                     if storage == "nm"
                     else partial_products(w, xc)
                 )
-            c = census(prods, acc_bits)
-            tot = c if tot is None else Census(
-                *(a + b for a, b in zip(tot, c))
-            )
+            tot = _merge_census(tot, census(prods, acc_bits))
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return out, tot
+
+
+def _merge_census(tot: Optional[Census], c: Census) -> Census:
+    return c if tot is None else Census(*(a + b for a, b in zip(tot, c)))
+
+
+def _kshard_dot(
+    x2: jax.Array,  # (M, k_shards * k_local) — pre-padded by pqs_dot
+    w: Any,  # (N, k_shards * k_local) dense, or pre-padded nm slabs
+    *,
+    k_shards: int,
+    with_census: bool,
+    acc_bits: int,
+    policy: str,
+    k_tile: int,
+    rounds: int,
+    backend: str,
+    interpret: Optional[bool],
+    block_m: Optional[int],
+    block_n: Optional[int],
+    sort_impl: str,
+    batch_chunk: Optional[int],
+    storage: str = "dense",
+    m_group: Optional[int] = None,
+) -> tuple[jax.Array, Optional[Census]]:
+    """Single-device hierarchical K-sharded dot (and the mesh oracle).
+
+    K (pre-padded into ``k_shards`` equal, policy-padded contiguous
+    slices) is partitioned; every shard accumulates its local slice
+    under the unmodified policy — the jnp backend through
+    ``overflow.kshard_accumulate``, the pallas backend through the
+    per-shard kernel entry points (``ops.partial_policy_matmul`` /
+    ``ops.nm_partial_policy_matmul``) — and the per-shard partials merge
+    small-to-large through ``core.sorted_accum.tree_combine``.
+
+    Census: every shard's local dot is an examined dot (n_dots =
+    k_shards * M * N; per-shard natural-order classification), and
+    combine-step overflows are reported separately in ``n_combine`` —
+    the total census is exactly sum(per-shard) + combine steps.
+    """
+    m = x2.shape[0]
+    kp = x2.shape[1]
+    k_local = kp // k_shards
+    n = (w[0] if storage == "nm" else w).shape[0]
+    chunk = m if (batch_chunk is None or batch_chunk >= m) else batch_chunk
+    wd = None
+    if storage == "nm" and backend == "jnp":
+        # G is pre-padded to a k_shards multiple, so the decompressed
+        # matrix is (N, kp) and shard slices fall on group boundaries
+        wd = nm_decompress_jax(w[0], w[1], m_group)
+    outs = []
+    tot: Optional[Census] = None
+    ncomb = None
+    for i in range(0, m, max(chunk, 1)):
+        xc = x2[i : i + chunk]
+        prods = None
+        if backend == "jnp":
+            prods = partial_products(wd if storage == "nm" else w, xc)
+            out_c, novf = kshard_accumulate(
+                prods, acc_bits, policy, k_shards, k_tile, rounds
+            )
+        else:
+            if storage == "nm":
+                parts = ops.nm_partial_policy_matmul(
+                    xc, w[0], w[1], m_group=m_group, k_shards=k_shards,
+                    policy=policy, acc_bits=acc_bits, k_tile=k_tile,
+                    rounds=rounds, bm=block_m, bn=block_n,
+                    sort_impl=sort_impl, interpret=interpret,
+                )
+            else:
+                parts = ops.partial_policy_matmul(
+                    xc, w, k_shards=k_shards, policy=policy,
+                    acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
+                    bm=block_m, bn=block_n, sort_impl=sort_impl,
+                    interpret=interpret,
+                )
+            out_c, novf = tree_combine(parts, acc_bits, policy)
+        outs.append(out_c)
+        if with_census:
+            if prods is None:
+                prods = (
+                    nm_partial_products(w[0], w[1], xc, m_group)
+                    if storage == "nm"
+                    else partial_products(w, xc)
+                )
+            sh = prods.reshape(
+                xc.shape[0], n, k_shards, prods.shape[-1] // k_shards
+            )
+            tot = _merge_census(tot, census(sh, acc_bits))
+            nc = jnp.sum(novf).astype(jnp.int32)
+            ncomb = nc if ncomb is None else ncomb + nc
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    if with_census:
+        tot = tot._replace(n_combine=tot.n_combine + ncomb)
     return out, tot
 
 
@@ -232,16 +337,27 @@ def _sharded_dot(
     m_axes: Optional[tuple[str, ...]],
     n_axis: str,
     with_census: bool,
+    k_axis: Optional[str] = None,
     **kw,
 ):
-    """shard_map wrapper: M on the data axes, N on the TP axis, K whole.
+    """shard_map wrapper: M on the data axes, N on the TP axis, K whole
+    per shard — or, with ``k_axis``, K partitioned across that mesh axis.
 
-    Every shard runs the unmodified single-device routine over its
-    (M_shard, N_shard) block with the FULL (padded) K axis resident, so
-    the narrow-accumulation order — and therefore the result — is
-    bit-identical to the single-device reference. Specs degrade through
-    ``sanitize`` when a dimension does not divide its axes, so any shape
-    lowers (at worst fully replicated).
+    Without ``k_axis`` every shard runs the unmodified single-device
+    routine over its (M_shard, N_shard) block with the FULL (padded) K
+    axis resident, so the narrow-accumulation order — and therefore the
+    result — is bit-identical to the single-device reference. Specs
+    degrade through ``sanitize`` when a dimension does not divide its
+    axes, so any shape lowers (at worst fully replicated).
+
+    With ``k_axis`` each device accumulates its contiguous K/S slice
+    under the policy (still the unmodified local routine), the per-shard
+    partials are all-gathered along the K axis (S int32 scalars per
+    output element) and merged small-to-large by
+    ``core.sorted_accum.tree_combine`` on every member — bit-identical
+    to the single-device ``k_shards=S`` hierarchy. The census is psummed
+    over the K axis too (every shard's dot is an examined dot) while
+    combine-step counts, identical on all K members, are not.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -251,16 +367,28 @@ def _sharded_dot(
 
     if m_axes is None:
         m_axes = data_axes(mesh)
-    m_axes = tuple(a for a in m_axes if a in mesh.axis_names)
-    x_spec = sanitize(mesh, P(m_axes if m_axes else None, None), x2.shape)
+    m_axes = tuple(
+        a for a in m_axes if a in mesh.axis_names and a != k_axis
+    )
+    x_spec = sanitize(mesh, P(m_axes if m_axes else None, k_axis), x2.shape)
     n_entry = n_axis if n_axis in mesh.axis_names else None
     if isinstance(w, tuple):  # compressed (values, indices): N rows shard
-        vspec = sanitize(mesh, P(n_entry, None, None), w[0].shape)
+        vspec = sanitize(mesh, P(n_entry, k_axis, None), w[0].shape)
         w_spec = (vspec, vspec)
         w_row = vspec[0]
+        w_k = vspec[1]
     else:
-        w_spec = sanitize(mesh, P(n_entry, None), w.shape)
+        w_spec = sanitize(mesh, P(n_entry, k_axis), w.shape)
         w_row = w_spec[0]
+        w_k = w_spec[1]
+    if k_axis is not None and (x_spec[1] != k_axis or w_k != k_axis):
+        # cannot happen: pqs_dot pads K (and G) to k_shards multiples,
+        # so sanitize never drops the K entry — guard the invariant the
+        # combine below depends on rather than silently mis-combining
+        raise AssertionError(
+            f"K axis {k_axis!r} was degraded from the operand specs "
+            f"({x_spec}, {w_spec}) despite pre-padding"
+        )
     out_spec = P(x_spec[0], w_row)
     # census counters must be summed only over axes that actually
     # partition the dots; replicated axes would multiply-count
@@ -271,14 +399,26 @@ def _sharded_dot(
 
     def body(xl, wl):
         out, cns = _local_dot(xl, wl, with_census=with_census, **kw)
-        if with_census and used:
-            cns = jax.tree_util.tree_map(
-                lambda a: jax.lax.psum(a, tuple(used)), cns
-            )
+        novf = None
+        if k_axis is not None:
+            parts = jnp.moveaxis(jax.lax.all_gather(out, k_axis), 0, -1)
+            out, novf = tree_combine(parts, kw["acc_bits"], kw["policy"])
+        if with_census:
+            axes = tuple(used) + ((k_axis,) if k_axis is not None else ())
+            if axes:
+                cns = jax.tree_util.tree_map(
+                    lambda a: jax.lax.psum(a, axes), cns
+                )
+            if novf is not None:
+                nc = jnp.sum(novf).astype(jnp.int32)
+                if used:
+                    nc = jax.lax.psum(nc, tuple(used))
+                cns = cns._replace(n_combine=cns.n_combine + nc)
         return (out, cns) if with_census else out
 
     out_specs = (
-        (out_spec, Census(P(), P(), P(), P())) if with_census else out_spec
+        (out_spec, Census(P(), P(), P(), P(), P()))
+        if with_census else out_spec
     )
     return shard_map(
         body, mesh, in_specs=(x_spec, w_spec), out_specs=out_specs,
@@ -305,6 +445,8 @@ def pqs_dot(
     mesh=None,
     m_axes: Optional[tuple[str, ...]] = None,
     n_axis: str = "model",
+    k_shards: Optional[int] = None,
+    k_axis: Optional[str] = None,
     storage: str = "dense",
     m_group: Optional[int] = None,
 ):
@@ -339,8 +481,46 @@ def pqs_dot(
     axes), N over ``n_axis`` ("model"), K accumulated whole inside each
     shard — bit-identical to the single-device result (compressed
     weights shard their N rows the same way).
+
+    ``k_shards=S`` (without a mesh) partitions K into S contiguous,
+    equal, policy-padded slices accumulated independently under the
+    policy, then merged small-to-large by
+    ``core.sorted_accum.tree_combine`` (stepwise saturation; the census
+    reports combine-step overflows separately in ``Census.n_combine``,
+    and every shard's local dot counts as an examined dot). With
+    ``mesh`` + ``k_axis`` the same hierarchy runs distributed: K is
+    partitioned across that mesh axis, each device accumulates only its
+    K/S slice (per-device K footprint drops by S — past
+    ``ops.MAX_STREAM_K`` total K for the compiled sort kernels), and
+    partials are all-gathered and combined — bit-identical to
+    ``k_shards=S`` on one device. Note the hierarchy intentionally
+    changes the accumulation ORDER vs the full-K dot for the saturating
+    policies (docs/accumulation.md, "K-sharded accumulation");
+    ``wide``/``wrap`` are exactly order-invariant.
     """
     _validate(policy, backend, acc_bits, k_tile, storage)
+    if k_axis is not None:
+        if mesh is None:
+            raise ValueError("k_axis= needs mesh= (the axis lives on it)")
+        if k_axis not in mesh.axis_names:
+            raise ValueError(
+                f"k_axis={k_axis!r} not on the mesh {mesh.axis_names}")
+        if k_axis == n_axis:
+            raise ValueError(
+                f"k_axis and n_axis must differ, both are {k_axis!r}")
+        if k_shards is None:
+            k_shards = mesh.shape[k_axis]
+        elif int(k_shards) != mesh.shape[k_axis]:
+            raise ValueError(
+                f"k_shards={k_shards} != mesh.shape[{k_axis!r}]="
+                f"{mesh.shape[k_axis]}")
+    elif k_shards is not None and mesh is not None:
+        raise ValueError(
+            "k_shards on a mesh needs k_axis= naming the mesh axis the "
+            "K shards live on")
+    k_shards = 1 if k_shards is None else int(k_shards)
+    if k_shards < 1:
+        raise ValueError(f"k_shards must be >= 1, got {k_shards}")
     backend = backend or default_backend()
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -363,9 +543,31 @@ def pqs_dot(
                 f"0 (tile boundaries must align with the compressed "
                 f"groups); got k_tile={k_tile}, m_group={m_group}"
             )
-        if k_dense != k:
-            x2 = jnp.pad(x2, ((0, 0), (0, k_dense - k)))
-        kp = ops.padded_k(k_dense, policy, k_tile)
+        if k_shards > 1:
+            # shard K in units of whole groups: pad G so every shard
+            # holds g_local groups whose span is a policy-padded length
+            # (padded groups expand to zero columns — inert everywhere)
+            g = values.shape[1]
+            k_local = ops.padded_k(
+                -(-g // k_shards) * m_group, policy, k_tile)
+            if k_local % m_group:
+                raise ValueError(
+                    f"k_shards={k_shards} with storage='nm' and policy="
+                    f"{policy!r} needs the per-shard padded K ({k_local}) "
+                    f"divisible by m_group={m_group}"
+                )
+            gp = k_shards * (k_local // m_group)
+            if gp != g:
+                pad3 = ((0, 0), (0, gp - g), (0, 0))
+                values = jnp.pad(values, pad3)
+                indices = jnp.pad(indices, pad3)
+            kp = gp * m_group
+            if x2.shape[-1] != kp:
+                x2 = jnp.pad(x2, ((0, 0), (0, kp - x2.shape[-1])))
+        else:
+            if k_dense != k:
+                x2 = jnp.pad(x2, ((0, 0), (0, k_dense - k)))
+            kp = ops.padded_k(k_dense, policy, k_tile)
         w = (values, indices)
     else:
         if x.shape[-1] != w.shape[-1]:
@@ -373,7 +575,14 @@ def pqs_dot(
         n = w.shape[0]
         # one K-padding rule for both backends: order-sensitive policies
         # must see the same (padded) permutation domain to be bit-identical
-        kp = ops.padded_k(k, policy, k_tile)
+        if k_shards > 1:
+            # every shard sees the same policy-padded local length, so
+            # per-shard kernels and the jnp oracle share one permutation
+            # domain — and the mesh path's equal-block partitioning
+            # slices at exactly these boundaries
+            kp = k_shards * ops.padded_k(-(-k // k_shards), policy, k_tile)
+        else:
+            kp = ops.padded_k(k, policy, k_tile)
         if kp != k:
             x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
             w = jnp.pad(w, ((0, 0), (0, kp - k)))
@@ -384,7 +593,8 @@ def pqs_dot(
         # int32 tile sums (+ a same-shape permutation) in HBM; chunk M so
         # that statistic stays bounded instead of scaling with the full
         # batch. Chunking M is exact — every dot is element-independent.
-        per_row = 2 * 4 * n * max(kp // k_tile, 1)  # sums + perm bytes
+        # (K-sharded: the statistic exists per shard at K_local/k_tile.)
+        per_row = 2 * 4 * n * max(kp // k_shards // k_tile, 1)
         batch_chunk = max(_SORT_STATS_BUDGET // per_row, 1)
 
     kw = dict(
@@ -394,8 +604,14 @@ def pqs_dot(
         storage=storage, m_group=m_group if storage == "nm" else None,
     )
     if mesh is not None:
-        res = _sharded_dot(x2, w, mesh, m_axes, n_axis, with_census, **kw)
+        res = _sharded_dot(
+            x2, w, mesh, m_axes, n_axis, with_census, k_axis=k_axis, **kw
+        )
         out, tot = res if with_census else (res, None)
+    elif k_shards > 1:
+        out, tot = _kshard_dot(
+            x2, w, k_shards=k_shards, with_census=with_census, **kw
+        )
     else:
         out, tot = _local_dot(x2, w, with_census=with_census, **kw)
     out = out.reshape(*lead, n)
@@ -418,6 +634,14 @@ class IntegerLinConfig:
     selects the calibrated static activation QParams a QTensor carries
     (``QTensor.act_qparams``, see ``core.qtensor.attach_act_qparams``)
     over the dynamic per-call absmax reduction whenever present.
+
+    ``k_shards`` opts long-K projections into hierarchical K-sharded
+    accumulation (per-shard policy partials + ``tree_combine``): only
+    layers whose contraction dim is >= ``k_shard_min_k`` take the
+    hierarchy — shorter projections keep the bit-identical full-K path.
+    With a mesh, ``k_axis`` names the mesh axis the K shards live on
+    (K-sharded weight placement: ``launch.sharding.params_shardings``
+    with the same ``k_axis``/``k_shard_min_k``).
     """
 
     policy: str = "sorted_tiled_seq"
@@ -430,6 +654,9 @@ class IntegerLinConfig:
     m_axes: Optional[tuple[str, ...]] = None  # default: mesh data axes
     n_axis: str = "model"
     use_static_acts: bool = True
+    k_shards: Optional[int] = None  # K-sharded accumulation (opt-in)
+    k_axis: Optional[str] = None  # mesh axis carrying the K shards
+    k_shard_min_k: int = 0  # only layers with K >= this take the hierarchy
 
 
 _INT_LIN: list[IntegerLinConfig] = []
@@ -514,11 +741,19 @@ def qtensor_dot(x: jax.Array, qt, cfg: IntegerLinConfig) -> jax.Array:
         xq = jnp.clip(
             jnp.round(x.astype(jnp.float32) / s_x), -qmax - 1, qmax
         ).astype(jnp.int32)
+    ks, ka = cfg.k_shards, cfg.k_axis
+    if (ks is not None or ka is not None) and (
+        x.shape[-1] < cfg.k_shard_min_k
+    ):
+        # short-K layers keep the full-K path — also when the shard
+        # count is implied by the mesh axis (k_axis= with k_shards=None)
+        ks, ka = None, None
     z = pqs_dot(
         xq, wq, acc_bits=cfg.acc_bits,
         policy=cfg.policy, k_tile=cfg.k_tile, rounds=cfg.rounds,
         backend=cfg.backend, mesh=cfg.mesh, m_axes=cfg.m_axes,
-        n_axis=cfg.n_axis, storage=storage,
+        n_axis=cfg.n_axis, k_shards=ks,
+        k_axis=ka if cfg.mesh is not None else None, storage=storage,
     )
     if cfg.use_static_acts and aq is not None and not aq.symmetric:
         # Eq. (3) offset correction — precomputed at freeze time

@@ -30,18 +30,26 @@ from repro.core.sorted_accum import (
     sorted_order,
     tiled_seq_order,
     tiled_sorted_order,
+    tree_combine,
 )
 
 Policy = str  # wide | clip | wrap | sorted | sorted_tiled | sorted_tiled_seq
 
 
 class Census(NamedTuple):
-    """Overflow counts over a batch of dot products."""
+    """Overflow counts over a batch of dot products.
+
+    On the K-sharded path every shard's local dot is an examined dot
+    (``n_dots = k_shards * M * N``) and the cross-shard merge reports
+    its own events in ``n_combine`` — kept separate because a combine
+    step saturates a *partial result*, not a raw partial product.
+    """
 
     n_dots: jax.Array  # total dot products examined
     n_persistent: jax.Array  # final result out of range
     n_transient: jax.Array  # intermediate out of range, final in range
     n_any: jax.Array  # dots with any overflow event
+    n_combine: jax.Array = 0  # K-sharded combine steps out of range
 
 
 def partial_products(wq: jax.Array, xq: jax.Array) -> jax.Array:
@@ -102,6 +110,7 @@ def census(prods: jax.Array, acc_bits: int) -> Census:
         n_persistent=jnp.sum(persistent),
         n_transient=jnp.sum(transient),
         n_any=jnp.sum(any_ovf),
+        n_combine=jnp.asarray(0),
     )
 
 
@@ -144,6 +153,38 @@ def accumulate(
         acc, _ = monotone_accumulate(ordered, acc_bits, saturate=True)
         return acc
     raise ValueError(f"unknown policy {policy!r}")
+
+
+@partial(
+    jax.jit,
+    static_argnames=("acc_bits", "policy", "k_shards", "k_tile", "rounds"),
+)
+def kshard_accumulate(
+    prods: jax.Array,
+    acc_bits: int,
+    policy: Policy = "clip",
+    k_shards: int = 1,
+    k_tile: int = 256,
+    rounds: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """Hierarchical K-sharded accumulation — the jnp oracle of the
+    K-sharded ``pqs_dot`` path.
+
+    ``prods`` is (..., K) with K divisible by ``k_shards``: each
+    contiguous K/k_shards slice accumulates independently under
+    ``policy`` (exactly ``accumulate`` on the slice — the same order a
+    shard's kernel realizes on its local K), and the per-shard partials
+    merge small-to-large through ``sorted_accum.tree_combine``. Returns
+    ``(value, n_combine_overflows)`` where the second output counts, per
+    dot, the combine steps whose exact pairwise sum left the acc_bits
+    range (see ``tree_combine``).
+    """
+    k = prods.shape[-1]
+    if k % k_shards:
+        raise ValueError(f"K={k} not divisible by k_shards={k_shards}")
+    sh = prods.reshape(*prods.shape[:-1], k_shards, k // k_shards)
+    parts = accumulate(sh, acc_bits, policy, k_tile, rounds)
+    return tree_combine(parts, acc_bits, policy)
 
 
 @partial(jax.jit, static_argnames=("acc_bits", "policy", "k_tile", "rounds"))

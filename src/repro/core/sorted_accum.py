@@ -143,6 +143,59 @@ def monotone_accumulate(
     return acc, ovf
 
 
+def tree_combine(
+    partials: jax.Array, acc_bits: int, policy: str = "clip"
+) -> tuple[jax.Array, jax.Array]:
+    """Merge per-K-shard partial sums small-to-large up a combine tree.
+
+    ``partials`` is (..., S): element s is the policy-accumulated partial
+    of K shard s. At every tree level the live values are ranked by
+    magnitude (|value| ascending, stable ties — zeros and small residuals
+    first) and adjacent ranks merge pairwise under the policy's register
+    rule: saturating add for the saturating policies (``clip`` and every
+    sorted variant), two's-complement wraparound for ``wrap``, exact add
+    for ``wide``. Merging small-to-large keeps the running magnitudes as
+    small as the partials allow — the tree-level analogue of the paper's
+    sorted accumulation (A2Q-style per-partial-sum reasoning: each merge
+    is safe iff its own pairwise sum fits the register).
+
+    Returns ``(value, n_overflow_steps)``: the combined (...,) int32
+    results and a per-dot int32 count of combine steps whose *exact*
+    pairwise sum left the acc_bits range (always 0 for ``wide`` — its
+    register is wide by definition; ``wrap`` wraps and still counts). S
+    is padded up to a power of two with zeros, which rank first and add
+    nothing, so any shard count is exact.
+
+    This is THE cross-shard rule of the K-sharded ``pqs_dot`` path: the
+    jnp oracle (``overflow.kshard_accumulate``) and the mesh execution
+    (``pqs_dot(..., k_axis=...)``) both call it, so the combine has a
+    single definition and the two are bit-identical.
+    """
+    qmin, qmax = qrange(acc_bits)
+    s = partials.shape[-1]
+    sp = 1 if s <= 1 else 1 << (s - 1).bit_length()
+    vals = partials.astype(jnp.int32)
+    if sp != s:
+        widths = [(0, 0)] * (vals.ndim - 1) + [(0, sp - s)]
+        vals = jnp.pad(vals, widths)
+    novf = jnp.zeros(vals.shape[:-1], jnp.int32)
+    while vals.shape[-1] > 1:
+        rank = jnp.argsort(jnp.abs(vals), axis=-1)  # stable: ties by shard
+        vals = jnp.take_along_axis(vals, rank, axis=-1)
+        exact = vals[..., 0::2] + vals[..., 1::2]
+        if policy == "wide":
+            vals = exact
+            continue
+        hit = jnp.logical_or(exact > qmax, exact < qmin)
+        novf = novf + jnp.sum(hit, axis=-1).astype(jnp.int32)
+        if policy == "wrap":
+            span = jnp.int32(2**acc_bits)
+            vals = jnp.mod(exact - qmin, span) + qmin
+        else:
+            vals = jnp.clip(exact, qmin, qmax)
+    return vals[..., 0], novf
+
+
 def pair_permutation(sums: jax.Array) -> jax.Array:
     """Rank-and-interleave tile pairing from per-tile net sums.
 

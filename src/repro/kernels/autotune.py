@@ -12,7 +12,13 @@ Env control (``REPRO_PQS_AUTOTUNE``):
 
   off       (default) never measure, never read the cache — the static
             table (and the ``REPRO_PQS_BLOCKS`` override) rules.
-  tune      measure cache misses, persist winners to the cache file.
+  tune      measure cache misses IN A BACKGROUND THREAD and persist
+            winners to the cache file. The triggering call (and every
+            call until the measurement lands) is served by the static
+            table immediately — tune mode never pays candidate
+            compile+timing latency inline on a serving path. ``drain()``
+            blocks until in-flight measurements land (offline tuning
+            scripts call it before exiting).
   readonly  use cached winners, fall back to the static table on a miss;
             never measure (the serving-fleet mode: tune once offline,
             ship the cache file read-only).
@@ -35,6 +41,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import threading
 import time
 from typing import Callable, Optional
 
@@ -67,6 +74,9 @@ CANDIDATES: dict[str, tuple[tuple[int, int, Optional[int]], ...]] = {
 
 _MEMO: dict[str, Optional[dict]] = {}  # key -> winning entry (in-process)
 _DISK: dict[str, dict] = {}  # path -> loaded entries
+_PENDING: dict[str, threading.Thread] = {}  # key -> in-flight measurement
+_LOCK = threading.RLock()  # guards the three dicts above
+_IO_LOCK = threading.Lock()  # serializes cache-file read-merge-write
 
 
 def mode() -> str:
@@ -87,9 +97,37 @@ def cache_path(platform: Optional[str] = None) -> str:
 
 
 def reset() -> None:
-    """Drop in-process memoization (tests; cache files are untouched)."""
-    _MEMO.clear()
-    _DISK.clear()
+    """Drop in-process memoization (tests; cache files are untouched).
+
+    Joins any in-flight background measurement first, so a straggler
+    thread from before the reset cannot repopulate the fresh state (or
+    write into a cache path a test has since redirected). The join is
+    BOUNDED: a wedged candidate run must not hang reset (and every
+    test-fixture teardown) forever — a straggler past the timeout is a
+    daemon thread and dies with the process; at worst it repopulates a
+    memo entry, which the next reset drops again."""
+    drain(timeout=60.0)
+    with _LOCK:
+        _MEMO.clear()
+        _DISK.clear()
+
+
+def drain(timeout: Optional[float] = None) -> None:
+    """Block until every background measurement has landed (tune mode).
+
+    Offline tuning runs (benchmarks, warmup scripts) call this before
+    reading the cache or exiting; with ``timeout`` (seconds, per joined
+    thread) the wait is bounded and stragglers are simply left running.
+    """
+    while True:
+        with _LOCK:
+            threads = [t for t in _PENDING.values() if t.is_alive()]
+        if not threads:
+            return
+        for t in threads:
+            t.join(timeout)
+            if timeout is not None and t.is_alive():
+                return
 
 
 def _bucket(v: int) -> int:
@@ -164,34 +202,72 @@ def best_blocks(
     operands, so the measurement includes its padding). Only consulted
     in tune mode; readonly mode (and tune mode under a jit trace, when
     ``tracing``) answers purely from the cache.
+
+    Tune-mode misses never measure inline: the measurement is scheduled
+    on a background thread and THIS call answers None immediately (the
+    caller's static table serves it), so a serving path that first
+    touches a cold bucket keeps its first-call latency. Calls after the
+    measurement lands get the winner.
     """
     md = mode()
     if md == "off":
         return None
     platform = platform or jax.default_backend()
     key = shape_key(policy, platform, m, n, kp)
-    if key in _MEMO:
-        e = _MEMO[key]
-        return (e["bm"], e["bn"], e["bk"]) if e else None
-    path = cache_path(platform)
-    e = _load(path).get(key)
-    if e is None and md == "tune" and runner is not None and not tracing:
-        e = _measure(policy, key, runner)
+    with _LOCK:
+        if key in _MEMO:
+            e = _MEMO[key]
+            return (e["bm"], e["bn"], e["bk"]) if e else None
+        path = cache_path(platform)
+        e = _load(path).get(key)
+        if e is not None:
+            _MEMO[key] = e
+            return (e["bm"], e["bn"], e["bk"])
+        if (md == "tune" and runner is not None and not tracing
+                and key not in _PENDING):
+            _spawn(policy, key, path, runner)
+    # a miss due to readonly mode, an in-trace call, or an in-flight
+    # background measurement is NOT memoized: a later call must still
+    # see the measurement once it lands
+    return None
+
+
+def _spawn(policy: str, key: str, path: str, runner) -> None:
+    """Measure ``key``'s candidates on a daemon thread and persist the
+    winner; ``_PENDING`` dedupes so a bucket is measured once. Callers
+    hold ``_LOCK``."""
+
+    def work():
+        try:
+            e = _measure(policy, key, runner)
+        except Exception:  # never let a tuner failure leak anywhere
+            e = None
+        entries = None
         if e is not None:
             # merge into a FRESH read so concurrent tuners sharing the
-            # file don't clobber each other's buckets, then swap the
-            # in-process view to the merged state
-            entries = _read(path)
-            entries[key] = e
-            _persist(path, entries)
-            _DISK[path] = entries
-        _MEMO[key] = e  # a completed measurement (even a failed one,
-        # e=None when every candidate errored) is this process's answer
-    elif e is not None:
-        _MEMO[key] = e
-    # a miss due to readonly mode or an in-trace call is NOT memoized:
-    # a later eager tune-mode call must still be able to measure
-    return (e["bm"], e["bn"], e["bk"]) if e else None
+            # file don't clobber each other's buckets. The disk I/O
+            # happens OUTSIDE _LOCK — holding it there would stall every
+            # serving-path best_blocks lookup on file I/O, the exact
+            # inline latency this thread exists to avoid — but UNDER the
+            # dedicated _IO_LOCK: two background threads interleaving
+            # read-merge-write would each replace the file with only its
+            # own key merged, dropping the other's winner from disk.
+            with _IO_LOCK:
+                entries = _read(path)
+                entries[key] = e
+                _persist(path, entries)
+        with _LOCK:
+            if entries is not None:
+                _DISK[path] = entries  # swap in the merged view
+            _MEMO[key] = e  # a completed measurement (even a failed one,
+            # e=None when every candidate errored) is this process's answer
+            _PENDING.pop(key, None)
+
+    t = threading.Thread(
+        target=work, name=f"pqs-autotune:{key}", daemon=True
+    )
+    _PENDING[key] = t
+    t.start()
 
 
 def _measure(policy: str, key: str, runner) -> Optional[dict]:

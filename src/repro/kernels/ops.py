@@ -321,6 +321,96 @@ def policy_matmul(
     return out[:m, :n]
 
 
+def partial_policy_matmul(
+    x: jax.Array,  # (M, k_shards * k_local) integer carrier
+    w: jax.Array,  # (N, k_shards * k_local) integer carrier
+    *,
+    k_shards: int,
+    policy: str = "wide",
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    bm: int | None = None,
+    bn: int | None = None,
+    sort_impl: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-K-shard partials of a K-sharded policy matmul: (M, N, k_shards).
+
+    The caller (``core.dispatch``) pre-pads K so it splits into
+    ``k_shards`` equal, policy-padded slices; shard s's slice is then
+    accumulated by the UNCHANGED local kernel body (``policy_matmul``)
+    over its k_local columns only. The partials are "unsaturated"
+    *across* shards — no cross-shard combine or re-clamp happens here;
+    merging them (in magnitude order, with stepwise saturation, counting
+    combine-step overflows) is ``core.sorted_accum.tree_combine``'s job
+    in the dispatch layer. Each shard's K footprint is K/k_shards, which
+    is what carries the compiled sort kernels past ``MAX_STREAM_K``
+    total K.
+    """
+    if k_shards < 1 or x.shape[1] % k_shards:
+        raise ValueError(
+            f"K={x.shape[1]} does not split into k_shards={k_shards} "
+            "equal slices (dispatch pads K before sharding)"
+        )
+    k_local = x.shape[1] // k_shards
+    parts = [
+        policy_matmul(
+            x[:, s * k_local : (s + 1) * k_local],
+            w[:, s * k_local : (s + 1) * k_local],
+            policy=policy, acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
+            bm=bm, bn=bn, sort_impl=sort_impl, interpret=interpret,
+        )
+        for s in range(k_shards)
+    ]
+    return jnp.stack(parts, axis=-1)
+
+
+def nm_partial_policy_matmul(
+    x: jax.Array,  # (M, k_shards * g_local * m_group) integer carrier
+    values: jax.Array,  # (N, k_shards * g_local, n_keep) int8
+    indices: jax.Array,  # (N, k_shards * g_local, n_keep) int32
+    *,
+    m_group: int,
+    k_shards: int,
+    policy: str = "wide",
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    bm: int | None = None,
+    bn: int | None = None,
+    sort_impl: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``partial_policy_matmul`` on N:M compressed storage.
+
+    K shards in units of whole groups (the caller pads G to a k_shards
+    multiple with g_local * m_group a policy-padded length), so a
+    shard's slab expand never crosses a shard boundary and each slice
+    runs the unchanged ``nm_policy_matmul`` body.
+    """
+    g = values.shape[1]
+    if k_shards < 1 or g % k_shards:
+        raise ValueError(
+            f"G={g} does not split into k_shards={k_shards} whole-group "
+            "slices (dispatch pads G before sharding)"
+        )
+    g_local = g // k_shards
+    k_local = g_local * m_group
+    parts = [
+        nm_policy_matmul(
+            x[:, s * k_local : (s + 1) * k_local],
+            values[:, s * g_local : (s + 1) * g_local],
+            indices[:, s * g_local : (s + 1) * g_local],
+            m_group=m_group, policy=policy, acc_bits=acc_bits,
+            k_tile=k_tile, rounds=rounds, bm=bm, bn=bn,
+            sort_impl=sort_impl, interpret=interpret,
+        )
+        for s in range(k_shards)
+    ]
+    return jnp.stack(parts, axis=-1)
+
+
 def nm_policy_matmul(
     x: jax.Array,  # (M, K) integer carrier, K <= G * m_group
     values: jax.Array,  # (N, G, n_keep) int8 compressed weights

@@ -116,6 +116,7 @@ def param_spec(
 def qtensor_specs(
     mesh: Mesh, path: str, qt: Any,
     moe_replicate: bool = False, serve_mode: bool = False,
+    k_axis: str | None = None, k_shard_min_k: int = 0,
 ) -> Any:
     """PartitionSpec pytree for one QTensor leaf (specs ride the QTensor).
 
@@ -125,12 +126,23 @@ def qtensor_specs(
     the axis entries of the dims they index into ``values``, so weight
     shards and their scales land on the same devices — no gather before
     the integer dot.
+
+    ``k_axis`` places long-K leaves for the K-sharded ``pqs_dot`` path:
+    leaves whose input (contraction) dim is >= ``k_shard_min_k`` get
+    that mesh axis on the input dim, matching the in_specs of
+    ``pqs_dot(..., k_axis=...)`` so the per-shard K slices are already
+    resident — no resharding before the distributed dot.
     """
     from repro.core.qtensor import QTensor
 
     v_shape = tuple(qt.values.shape)
     v_spec = param_spec(mesh, path, v_shape, moe_replicate, serve_mode)
     entries = list(v_spec) + [None] * (len(v_shape) - len(v_spec))
+    if (k_axis is not None and k_axis in mesh.axis_names
+            and len(v_shape) >= 2 and v_shape[-2] >= k_shard_min_k):
+        entries[-2] = k_axis  # (…, in, out): K shards over k_axis
+        v_spec = sanitize(mesh, P(*entries), v_shape)
+        entries = list(v_spec) + [None] * (len(v_shape) - len(v_spec))
     # scale: (..., out) — leading dims + the values' last (out) dim
     s_spec = sanitize(
         mesh, P(*entries[:-2], entries[-1]), tuple(qt.scale.shape)
@@ -149,6 +161,7 @@ def qtensor_specs(
 def sparse_qtensor_specs(
     mesh: Mesh, path: str, qt: Any,
     moe_replicate: bool = False, serve_mode: bool = False,
+    k_axis: str | None = None, k_shard_min_k: int = 0,
 ) -> Any:
     """PartitionSpec pytree for one N:M-compressed SparseQTensor leaf.
 
@@ -159,6 +172,10 @@ def sparse_qtensor_specs(
     units of m_group, so a weight shard still holds whole groups and
     the kernels' expand never crosses devices. indices mirror values;
     scale and act_corr ride the out entry; n_keep never shards.
+
+    ``k_axis``/``k_shard_min_k`` mirror ``qtensor_specs``: long-K leaves
+    put that axis on the group dim (K shards in units of whole groups,
+    matching the compressed in_specs of ``pqs_dot(..., k_axis=...)``).
     """
     from repro.core.qtensor import SparseQTensor
 
@@ -167,6 +184,9 @@ def sparse_qtensor_specs(
     dspec = param_spec(mesh, path, dense_shape, moe_replicate, serve_mode)
     entries = list(dspec) + [None] * (len(dense_shape) - len(dspec))
     in_entry, out_entry = entries[-2], entries[-1]
+    if (k_axis is not None and k_axis in mesh.axis_names
+            and qt.k_dim >= k_shard_min_k):
+        in_entry = k_axis  # group axis: K shards in whole groups
     v_spec = sanitize(
         mesh, P(*entries[:-2], out_entry, in_entry, None), v_shape
     )
@@ -186,6 +206,7 @@ def sparse_qtensor_specs(
 def params_shardings(
     mesh: Mesh, params_shapes: Any, moe_replicate: bool = False,
     serve_mode: bool = False,
+    k_axis: str | None = None, k_shard_min_k: int = 0,
 ) -> Any:
     """Pytree of NamedShardings matching a (ShapeDtypeStruct) param tree.
 
@@ -193,6 +214,8 @@ def params_shardings(
     and their QParams scales shard together (see ``qtensor_specs``);
     N:M-compressed SparseQTensor leaves map the same way with the group
     axis standing in for the input dim (``sparse_qtensor_specs``).
+    ``k_axis``/``k_shard_min_k`` place long-K quantized leaves for the
+    K-sharded serving path (input/group dim on ``k_axis``).
     """
     from repro.core.qtensor import QTensor, SparseQTensor
 
@@ -201,7 +224,8 @@ def params_shardings(
             spec_fn = (sparse_qtensor_specs if isinstance(leaf, SparseQTensor)
                        else qtensor_specs)
             specs = spec_fn(mesh, _path_str(path), leaf,
-                            moe_replicate, serve_mode)
+                            moe_replicate, serve_mode,
+                            k_axis=k_axis, k_shard_min_k=k_shard_min_k)
             return jax.tree_util.tree_map(
                 lambda s: NamedSharding(mesh, s), specs,
                 is_leaf=lambda s: isinstance(s, P),

@@ -24,6 +24,15 @@ other requests happen to share the batch — greedy decode of a prompt is
 reproducible under any slot occupancy.
 
 Sampling: greedy or temperature; per-slot RNG for reproducibility.
+
+Long-K layers can opt into hierarchical K-sharded accumulation:
+``int_lin=IntegerLinConfig(k_shards=S, k_shard_min_k=...)`` routes every
+QTensor projection whose contraction dim reaches the threshold through
+the per-shard-partials + tree-combine ``pqs_dot`` path (shorter
+projections keep the bit-identical full-K path); with a serving mesh,
+``k_axis=`` names the mesh axis the K shards live on — pair it with
+``launch.sharding.params_shardings(..., k_axis=, k_shard_min_k=)`` so
+the weight shards are already resident where the dot needs them.
 """
 
 from __future__ import annotations
@@ -67,6 +76,27 @@ class ServingEngine:
     ):
         if prefill_mode not in ("batched", "steps"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if int_lin is not None:
+            # K-sharded integer projections need a coherent (k_shards,
+            # k_axis, mesh) triple before any step traces — fail at
+            # construction, not on the first decode
+            if int_lin.k_axis is not None:
+                if mesh is None:
+                    raise ValueError(
+                        f"int_lin.k_axis={int_lin.k_axis!r} needs a "
+                        "serving mesh (ServingEngine(..., mesh=...))"
+                    )
+                if int_lin.k_axis not in mesh.axis_names:
+                    raise ValueError(
+                        f"int_lin.k_axis={int_lin.k_axis!r} is not an "
+                        f"axis of the serving mesh {mesh.axis_names}"
+                    )
+            elif int_lin.k_shards is not None and mesh is not None:
+                raise ValueError(
+                    "int_lin.k_shards on a meshed engine needs "
+                    "int_lin.k_axis= naming the mesh axis the K shards "
+                    "live on"
+                )
         if mesh is not None and int_lin is not None:
             # distribute the integer projections over the serving mesh
             int_lin = dataclasses.replace(int_lin, mesh=mesh)

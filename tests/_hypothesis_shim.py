@@ -81,6 +81,14 @@ except ImportError:
 
     def given(*strats):
         def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            remaining = params[: len(params) - len(strats)]
+            # strategies fill the TRAILING parameters; drawn values are
+            # passed by name so leading params may arrive positionally
+            # or as keywords (pytest.mark.parametrize passes keywords)
+            drawn_names = [p.name for p in params[len(remaining):]]
+
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 n = min(
@@ -90,14 +98,14 @@ except ImportError:
                 )
                 for i in range(n):
                     rng = np.random.default_rng(0xC0FFEE + 7919 * i)
-                    drawn = [s.example(rng) for s in strats]
-                    fn(*args, *drawn, **kwargs)
+                    drawn = {
+                        name: s.example(rng)
+                        for name, s in zip(drawn_names, strats)
+                    }
+                    fn(*args, **drawn, **kwargs)
 
             # Hide the drawn parameters from pytest so it does not try to
-            # resolve them as fixtures (strategies fill trailing params).
-            sig = inspect.signature(fn)
-            params = list(sig.parameters.values())
-            remaining = params[: len(params) - len(strats)]
+            # resolve them as fixtures.
             wrapper.__signature__ = sig.replace(parameters=remaining)
             return wrapper
 

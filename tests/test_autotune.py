@@ -58,8 +58,9 @@ def test_tune_persist_readonly_roundtrip(tuner, monkeypatch):
     monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
     x, w = _xw()
     ref = ops.policy_matmul(x, w, policy="clip", acc_bits=16, bm=2, bn=2)
-    out = ops.policy_matmul(x, w, policy="clip", acc_bits=16)  # tunes
+    out = ops.policy_matmul(x, w, policy="clip", acc_bits=16)  # schedules
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    autotune.drain()  # background measurement lands
 
     data = json.load(open(tuner))
     assert data["version"] == 1
@@ -77,6 +78,42 @@ def test_tune_persist_readonly_roundtrip(tuner, monkeypatch):
     # readonly never measures: a miss answers None (static fallback)
     assert autotune.best_blocks("clip", 2048, 2048, 2048) is None
     assert json.load(open(tuner)) == data  # file untouched
+
+
+def test_tune_measures_in_background(tuner, monkeypatch):
+    """Tune mode must not pay measurement latency inline: the first call
+    is served by the static table while a background thread measures
+    (regression for the serving-path first-call stall — simulated here
+    with a fake timer that stays slow until the test releases it)."""
+    import threading
+
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
+    release = threading.Event()
+    timed = []
+
+    def slow_measure(run, reps=None):
+        # a candidate measurement held hostage: inline tuning would
+        # block the serving call on this wait
+        release.wait(timeout=30)
+        timed.append(run)
+        return float(len(timed))
+
+    monkeypatch.setattr(autotune, "measure_us", slow_measure)
+    x, w = _xw(seed=7)
+    out = ops.policy_matmul(x, w, policy="clip", acc_bits=16)
+    # the call came back while the measurement is still blocked: nothing
+    # persisted yet, the result produced by the static-table blocks
+    assert not os.path.exists(tuner)
+    ref = ops.policy_matmul(x, w, policy="clip", acc_bits=16, bm=2, bn=2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    release.set()
+    autotune.drain()
+    data = json.load(open(tuner))
+    assert autotune.shape_key("clip", "cpu", 8, 8, 64) in data["entries"]
+    # the landed winner now answers without re-measuring
+    n_timed = len(timed)
+    assert autotune.best_blocks("clip", 8, 8, 64) is not None
+    assert len(timed) == n_timed
 
 
 def test_readonly_without_cache_falls_back(tuner, monkeypatch):
@@ -99,6 +136,7 @@ def test_tune_covers_sort_policies(tuner, monkeypatch):
     out = ops.policy_matmul(x, w, policy="sorted_tiled", acc_bits=16,
                             k_tile=32)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    autotune.drain()
     (key, e), = json.load(open(tuner))["entries"].items()
     assert key.startswith("sorted_tiled|") and e["bk"] is None
 
@@ -147,8 +185,10 @@ def test_traced_first_call_does_not_poison_bucket(tuner, monkeypatch):
         return ops.policy_matmul(x, w, policy="clip", acc_bits=16)
 
     jax.block_until_ready(traced(x, w))  # first touch happens in-trace
+    autotune.drain()
     assert not os.path.exists(tuner)  # nothing measured under the trace
     out = ops.policy_matmul(x, w, policy="clip", acc_bits=16)  # eager
+    autotune.drain()
     assert os.path.exists(tuner)  # ...and the eager call did tune
     ref = ops.policy_matmul(x, w, policy="clip", acc_bits=16, bm=2, bn=2)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
@@ -160,6 +200,7 @@ def test_concurrent_tuner_entries_merge(tuner, monkeypatch):
     monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
     x, w = _xw()
     ops.policy_matmul(x, w, policy="clip", acc_bits=16)  # tune bucket 1
+    autotune.drain()
     # another process lands its own bucket in the shared file
     data = json.load(open(tuner))
     foreign = {"bm": 64, "bn": 64, "bk": 512, "us": 1.0}
@@ -168,6 +209,7 @@ def test_concurrent_tuner_entries_merge(tuner, monkeypatch):
         json.dump(data, f)
     x2, w2 = _xw(m=16, k=128, n=16, seed=4)  # different bucket
     ops.policy_matmul(x2, w2, policy="clip", acc_bits=16)  # tune bucket 2
+    autotune.drain()
     entries = json.load(open(tuner))["entries"]
     assert entries["wide|cpu|512x512x512"] == foreign  # survived
     assert len(entries) == 3

@@ -6,8 +6,10 @@ from _hypothesis_shim import given, settings
 from _hypothesis_shim import strategies as st
 
 from repro.core.overflow import (
+    Census,
     accumulate,
     census,
+    kshard_accumulate,
     matmul_census,
     partial_products,
     quantized_matmul_sim,
@@ -84,6 +86,70 @@ def test_matmul_census_counts_all_dots(rng):
     c = matmul_census(wq, xq, acc_bits=12, batch_chunk=7)
     assert int(c.n_dots) == 16 * 20
     assert int(c.n_any) >= int(c.n_transient)
+
+
+def test_census_monotone_in_acc_bits(rng):
+    """More accumulator bits never create overflow events: n_any and
+    n_persistent are monotone non-increasing in the bitwidth (a running
+    sum inside the wider range is inside every wider one too)."""
+    prods = jnp.asarray(rng.integers(-200, 200, (64, 48)), jnp.int32)
+    prev_any, prev_pers = None, None
+    for bits in (8, 10, 12, 16, 20, 30):
+        c = census(prods, bits)
+        if prev_any is not None:
+            assert int(c.n_any) <= prev_any, bits
+            assert int(c.n_persistent) <= prev_pers, bits
+        prev_any, prev_pers = int(c.n_any), int(c.n_persistent)
+    # wide enough for any 48-term int8-squared sum: no events at all
+    assert int(census(prods, 30).n_any) == 0
+
+
+def test_kshard_combine_census_zero_for_wide(rng):
+    """A wide register never overflows: the K-sharded combine census is
+    exactly zero under policy='wide' for any data, and the combined
+    value is the exact sum."""
+    prods = jnp.asarray(rng.integers(-(2**20), 2**20, (8, 6, 32)), jnp.int32)
+    out, novf = kshard_accumulate(prods, 8, "wide", k_shards=4)
+    assert int(jnp.sum(novf)) == 0
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(prods.sum(-1)))
+
+
+def test_kshard_census_decomposes(rng):
+    """K-sharded total census == sum(per-shard censuses) + combine-step
+    census, straight from the pqs_dot dispatch path."""
+    from repro.core.dispatch import pqs_dot
+
+    m, k, n, s, acc = 6, 128, 5, 4, 12
+    x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 127, (n, k)), jnp.int8)
+    for policy in ("wide", "clip", "wrap", "sorted_tiled_seq"):
+        _, tot = pqs_dot(x, w, acc_bits=acc, policy=policy, k_tile=16,
+                         k_shards=s, backend="jnp", with_census=True)
+        prods = partial_products(w, x)  # K=128 splits exactly: no padding
+        k_local = k // s
+        fields = ("n_dots", "n_persistent", "n_transient", "n_any")
+        want = dict.fromkeys(fields, 0)
+        for i in range(s):
+            c = census(prods[..., i * k_local:(i + 1) * k_local], acc)
+            for f in fields:
+                want[f] += int(getattr(c, f))
+        for f in fields:
+            assert int(getattr(tot, f)) == want[f], (policy, f)
+        assert int(tot.n_dots) == m * n * s
+        _, novf = kshard_accumulate(prods, acc, policy, s, 16, 1)
+        assert int(tot.n_combine) == int(jnp.sum(novf)), policy
+        if policy == "wide":
+            assert int(tot.n_combine) == 0
+        # the non-sharded census never reports combine events
+        _, flat = pqs_dot(x, w, acc_bits=acc, policy=policy, k_tile=16,
+                          backend="jnp", with_census=True)
+        assert int(flat.n_combine) == 0
+
+
+def test_census_has_combine_field_default_zero():
+    c = Census(1, 2, 3, 4)
+    assert c.n_combine == 0 and len(c) == 5
 
 
 def test_partial_products_shape(rng):

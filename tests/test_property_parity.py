@@ -1,0 +1,235 @@
+"""Property-based parity for the (K-sharded) ``pqs_dot`` hierarchy.
+
+Hypothesis (through ``tests/_hypothesis_shim.py`` — real hypothesis when
+installed, a deterministic seeded sweep of 25 examples per test offline)
+draws shapes (including ragged M/N/K and K=1), accumulator widths, shard
+counts, backends and storage forms, and asserts
+
+  - bit-identity of every drawn configuration against the single-device
+    hierarchical jnp oracle (``overflow.kshard_accumulate`` over the
+    dispatch layer's exact padding), and
+  - census equality — including the decomposition
+    total == sum(per-shard censuses) + combine-step census.
+
+Drawn-case budget (the CI unit stage runs this file): the oracle test
+alone contributes 6 policies x 25 examples = 150 cases, the pallas
+parity test 6 x 8 = 48, the nm-storage test 2 x 25 = 50 — ≥ 200 drawn
+cases per run even on the offline shim. Dims come from small fixed
+menus so jit caches stay warm across examples.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings
+from _hypothesis_shim import strategies as st
+
+from repro.core import overflow
+from repro.core.dispatch import pqs_dot
+from repro.core.pruning import nm_compress, nm_decompress, nm_prune_mask
+from repro.core.sorted_accum import tree_combine
+from repro.kernels import ops
+
+POLICIES = ("wide", "clip", "wrap", "sorted", "sorted_tiled",
+            "sorted_tiled_seq")
+# menus, not open ranges: examples revisit shapes so accumulate/census
+# jit caches are reused across the sweep (the shim draws 25 per test)
+MS = (1, 2, 3, 5)
+KS = (1, 2, 7, 16, 33, 64)
+NS = (1, 2, 4, 7)
+SHARDS = (1, 2, 3, 4)
+ACCS = (10, 14, 18)
+K_TILE = 16
+
+
+def _xw(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 127, (n, k)), jnp.int8)
+    return x, w
+
+
+def _oracle(x, w, acc_bits, policy, k_shards):
+    """The hierarchical jnp oracle on dispatch's exact padding: pad K to
+    k_shards equal policy-padded slices, per-shard ``accumulate``, merge
+    through ``tree_combine`` (via ``overflow.kshard_accumulate``)."""
+    k = x.shape[-1]
+    k_local = ops.padded_k(-(-k // k_shards), policy, K_TILE)
+    kp = k_shards * k_local
+    xp = jnp.pad(x, ((0, 0), (0, kp - k)))
+    wp = jnp.pad(w, ((0, 0), (0, kp - k)))
+    prods = overflow.partial_products(wp, xp)  # (M, N, kp)
+    out, novf = overflow.kshard_accumulate(
+        prods, acc_bits, policy, k_shards, K_TILE, 1)
+    return out, novf, prods, k_local
+
+
+def _draws():
+    return (
+        st.integers(0, len(MS) - 1), st.integers(0, len(KS) - 1),
+        st.integers(0, len(NS) - 1), st.integers(0, len(SHARDS) - 1),
+        st.integers(0, len(ACCS) - 1), st.integers(0, 10**6),
+    )
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@settings(max_examples=25, deadline=None)
+@given(*_draws())
+def test_property_kshard_matches_oracle(policy, mi, ki, ni, si, ai, seed):
+    """jnp-backend K-sharded pqs_dot == the hierarchical oracle, and the
+    census decomposes as sum(per-shard) + combine steps."""
+    m, k, n = MS[mi], KS[ki], NS[ni]
+    s, acc = SHARDS[si], ACCS[ai]
+    x, w = _xw(m, k, n, seed)
+    out, cns = pqs_dot(x, w, acc_bits=acc, policy=policy, k_tile=K_TILE,
+                       k_shards=s, backend="jnp", with_census=True)
+    ref, novf, prods, k_local = _oracle(x, w, acc, policy, s)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref),
+        err_msg=f"{policy} s={s} shape={(m, k, n)} acc={acc}",
+    )
+    # census decomposition: every shard's local dot is an examined dot
+    per_shard = [
+        overflow.census(prods[..., i * k_local:(i + 1) * k_local], acc)
+        for i in range(s)
+    ]
+    for field in ("n_dots", "n_persistent", "n_transient", "n_any"):
+        want = sum(int(getattr(c, field)) for c in per_shard)
+        assert int(getattr(cns, field)) == want, (policy, s, field)
+    assert int(cns.n_dots) == m * n * s
+    assert int(cns.n_combine) == int(jnp.sum(novf))
+    if policy == "wide":
+        assert int(cns.n_combine) == 0  # a wide register never overflows
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@settings(max_examples=8, deadline=None)
+@given(*_draws())
+def test_property_pallas_parity(policy, mi, ki, ni, si, ai, seed):
+    """The pallas backend (per-shard kernel partials) is bit-identical
+    to the jnp oracle path, census included."""
+    m, k, n = MS[mi], KS[ki], NS[ni]
+    s, acc = SHARDS[si], ACCS[ai]
+    x, w = _xw(m, k, n, seed + 1)
+    a, ca = pqs_dot(x, w, acc_bits=acc, policy=policy, k_tile=K_TILE,
+                    k_shards=s, backend="jnp", with_census=True)
+    b, cb = pqs_dot(x, w, acc_bits=acc, policy=policy, k_tile=K_TILE,
+                    k_shards=s, backend="pallas", block_m=2, block_n=4,
+                    with_census=True)
+    np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b),
+        err_msg=f"{policy} s={s} shape={(m, k, n)} acc={acc}",
+    )
+    for field in overflow.Census._fields:
+        assert int(getattr(ca, field)) == int(getattr(cb, field)), (
+            policy, s, field)
+
+
+NM_MENU = ((2, 4), (4, 16))  # (n_keep, m_group)
+
+
+@pytest.mark.parametrize("policy", ("sorted_tiled", "sorted_tiled_seq"))
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, len(MS) - 1), st.integers(1, len(KS) - 1),
+       st.integers(0, len(NS) - 1), st.integers(0, len(SHARDS) - 1),
+       st.integers(0, len(NM_MENU) - 1), st.integers(0, 3),
+       st.integers(0, 10**6))
+def test_property_nm_storage_parity(policy, mi, ki, ni, si, nmi, bi, seed):
+    """storage="nm" under K-sharding == decompress-then-dense at the
+    same shard count, on a drawn backend, census included.
+
+    The tiled policies are the ones whose dense per-shard padded length
+    is guaranteed group-aligned (k_tile % m_group == 0), so the nm
+    whole-group shard boundaries coincide with the dense ones for EVERY
+    drawn (K, k_shards) — the strongest form of the equivalence. The
+    other policies' nm/dense boundaries only coincide when ceil(K/S)
+    lands on a group multiple (see test_kshard_nm_backend_parity)."""
+    m, k, n = MS[mi], KS[ki], NS[ni]
+    s = SHARDS[si]
+    n_keep, mg = NM_MENU[nmi]
+    backend = "pallas" if bi == 0 else "jnp"  # pallas ~1 in 4 draws
+    g = -(-k // mg)
+    kd = g * mg  # bare (values, indices) pairs cover whole groups
+    rng = np.random.default_rng(seed + 2)
+    wd = np.zeros((n, kd), np.int8)
+    wd[:, :k] = rng.integers(-127, 127, (n, k))
+    mask = np.asarray(nm_prune_mask(jnp.asarray(wd, jnp.float32), n_keep, mg))
+    wd = (wd * mask).astype(np.int8)
+    vals, idx = nm_compress(wd, n_keep, mg)
+    dense = jnp.asarray(nm_decompress(vals, idx, mg, k=kd))
+    x = jnp.zeros((m, kd), jnp.int8)
+    x = x.at[:, :k].set(
+        jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8))
+    kw = dict(acc_bits=14, policy=policy, k_tile=K_TILE, k_shards=s,
+              backend=backend, with_census=True)
+    if backend == "pallas":
+        kw.update(block_m=2, block_n=4)
+    ref, cr = pqs_dot(x, dense, **kw)
+    out, co = pqs_dot(
+        x, (jnp.asarray(vals, jnp.int8), jnp.asarray(idx, jnp.int32)),
+        storage="nm", m_group=mg, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(ref), np.asarray(out),
+        err_msg=f"{policy} s={s} nm={n_keep}:{mg} {backend}",
+    )
+    for field in overflow.Census._fields:
+        assert int(getattr(cr, field)) == int(getattr(co, field)), (
+            policy, s, field)
+
+
+def test_kshard_nm_backend_parity():
+    """All six policies on nm storage: the per-shard kernel path equals
+    the nm jnp oracle (both slice K in whole groups), bit-identical with
+    census, at shard counts where whole groups are the only legal cut."""
+    n_keep, mg = 4, 16
+    m, k, n = 3, 96, 5
+    rng = np.random.default_rng(11)
+    wd = rng.integers(-127, 127, (n, k)).astype(np.int8)
+    mask = np.asarray(nm_prune_mask(jnp.asarray(wd, jnp.float32), n_keep, mg))
+    wd = (wd * mask).astype(np.int8)
+    vals, idx = nm_compress(wd, n_keep, mg)
+    vals, idx = jnp.asarray(vals, jnp.int8), jnp.asarray(idx, jnp.int32)
+    x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
+    for policy in POLICIES:
+        for s in (2, 3):
+            kw = dict(storage="nm", m_group=mg, acc_bits=14, policy=policy,
+                      k_tile=K_TILE, k_shards=s, with_census=True)
+            a, ca = pqs_dot(x, (vals, idx), backend="jnp", **kw)
+            b, cb = pqs_dot(x, (vals, idx), backend="pallas", block_m=2,
+                            block_n=4, **kw)
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"{policy} s={s}")
+            for field in overflow.Census._fields:
+                assert int(getattr(ca, field)) == int(getattr(cb, field)), (
+                    policy, s, field)
+
+
+def test_kshard_edges():
+    """Deterministic edge sweep: K=1, k_shards > K, validation errors."""
+    x, w = _xw(2, 1, 3, seed=0)
+    exact = np.asarray(
+        x.astype(jnp.int32) @ w.astype(jnp.int32).T)
+    for policy in POLICIES:
+        for s in (1, 2, 4):
+            out = pqs_dot(x, w, acc_bits=18, policy=policy, k_tile=K_TILE,
+                          k_shards=s, backend="jnp")
+            # one real product, every padded shard contributes zero: all
+            # policies reduce to the exact sum at a wide-enough register
+            np.testing.assert_array_equal(
+                np.asarray(out), exact, err_msg=f"{policy} s={s}")
+    with pytest.raises(ValueError):
+        pqs_dot(x, w, k_shards=0)
+    with pytest.raises(ValueError):
+        pqs_dot(x, w, k_axis="k")  # k_axis without a mesh
+
+
+def test_tree_combine_is_exact_when_wide_enough():
+    """tree_combine == plain sum whenever no step can overflow, for any
+    policy; and wrap/wide are order-invariant under any sharding."""
+    rng = np.random.default_rng(3)
+    parts = jnp.asarray(rng.integers(-50, 50, (4, 5, 6)), jnp.int32)
+    want = np.asarray(parts.sum(-1))
+    for policy in POLICIES:
+        got, novf = tree_combine(parts, 30, policy)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=policy)
+        assert int(jnp.sum(novf)) == 0
