@@ -36,3 +36,41 @@ class Timer:
 
     def __exit__(self, *a):
         print(f"[{self.label}] {time.perf_counter() - self.t0:.1f}s")
+
+
+def gen_requests(
+    vocab: int,
+    n: int,
+    *,
+    seed: int = 0,
+    len_lo: int = 4,
+    len_hi: int = 12,
+    max_new: int = 8,
+    temperature: float = 0.0,
+    uid_base: int = 0,
+):
+    """Shared serving-bench request generation (one path for all benches)."""
+    import numpy as np
+
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            uid=uid_base + i,
+            prompt=rng.integers(
+                1, vocab, size=int(rng.integers(len_lo, len_hi + 1))
+            ).astype(np.int32),
+            max_new_tokens=max_new,
+            temperature=temperature,
+        )
+        for i in range(n)
+    ]
+
+
+def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0):
+    """Cumulative Poisson-process arrival offsets (seconds), length n."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_per_s, size=n))

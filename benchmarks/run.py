@@ -23,6 +23,11 @@ def main() -> None:
                     help="bench regression guard: after the kbench suite, "
                          "fail if any kernel's *_us time exceeds "
                          "--tolerance x the committed baseline row")
+    ap.add_argument("--check-serving-against", default=None,
+                    metavar="BASELINE.json",
+                    help="serving regression guard: after the serve suite, "
+                         "fail if any mode's tokens_per_s drops below "
+                         "baseline / --tolerance")
     ap.add_argument("--tolerance", type=float, default=1.5,
                     help="allowed slowdown factor vs the baseline "
                          "(default 1.5)")
@@ -31,6 +36,9 @@ def main() -> None:
     if args.check_against and only is not None and "kbench" not in only:
         ap.error("--check-against needs the kbench suite in the run "
                  "(drop --only or include kbench in it)")
+    if args.check_serving_against and only is not None and "serve" not in only:
+        ap.error("--check-serving-against needs the serve suite in the run "
+                 "(drop --only or include serve in it)")
 
     from benchmarks import (
         kernel_bench,
@@ -39,7 +47,7 @@ def main() -> None:
         pq_vs_qp_lowrank,
         pq_vs_qp_nets,
         roofline,
-        serving_latency,
+        serving_throughput,
         tiled_sort,
     )
 
@@ -53,8 +61,7 @@ def main() -> None:
         ("kernels", kernel_bench.run),
         ("kbench", lambda: kernel_bench.bench_kernels(quick=args.quick)),
         ("roofline", roofline.run),
-        ("serve", lambda: serving_latency.run(
-            steps=8 if args.quick else 20)),
+        ("serve", lambda: serving_throughput.run(quick=args.quick)),
     ]
 
     t0 = time.time()
@@ -84,6 +91,21 @@ def main() -> None:
         else:
             print(f"\n[bench-guard] ok — all kernel times within "
                   f"{args.tolerance}x of {args.check_against}")
+    if args.check_serving_against and "serve" in results:
+        regs = serving_throughput.check_against(
+            results["serve"], args.check_serving_against, args.tolerance)
+        if regs:
+            print(f"\n[serve-guard] {len(regs)} regression(s) vs "
+                  f"{args.check_serving_against} "
+                  f"(tolerance {args.tolerance}x):")
+            for mode, field, base, now in regs:
+                ratio = (f"{now / base:.2f}x" if isinstance(now, (int, float))
+                         else "no longer runs")
+                print(f"  {mode} {field}: {base} -> {now} tok/s ({ratio})")
+            failures.append(("serve-guard", f"{len(regs)} regressions"))
+        else:
+            print(f"\n[serve-guard] ok — all modes within "
+                  f"{args.tolerance}x of {args.check_serving_against}")
     print(f"\n[benchmarks] total {time.time() - t0:.0f}s; "
           f"{len(failures)} failures: {failures}")
     if failures:

@@ -24,6 +24,9 @@
 #   smoke  examples/quickstart.py (the paper's idea end-to-end)
 #   bench  kernel bench smoke -> BENCH_kernels.json, gated against the
 #          committed CPU baseline (see REPRO_BENCH_TOL below)
+#   serve  serving throughput smoke (dense / paged / int8-paged under
+#          Poisson load) -> BENCH_serving.json, tokens/s gated against
+#          the committed CPU baseline (same REPRO_BENCH_TOL)
 #   all    every stage above, in order (the default)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -39,8 +42,9 @@ if [[ "${1:-}" == "--stage" ]]; then
     shift 2
 fi
 case "$STAGE" in
-    lint|unit|shard|smoke|bench|all) ;;
-    *) echo "unknown stage '$STAGE' (lint|unit|shard|smoke|bench|all)" >&2
+    lint|unit|shard|smoke|bench|serve|all) ;;
+    *) echo "unknown stage '$STAGE'" \
+            "(lint|unit|shard|smoke|bench|serve|all)" >&2
        exit 2 ;;
 esac
 
@@ -107,17 +111,25 @@ bench_stage() {
         --tolerance "$REPRO_BENCH_TOL"
 }
 
+serve_stage() {
+    python -m benchmarks.run --only serve --quick \
+        --check-serving-against benchmarks/baselines/BENCH_serving_cpu.json \
+        --tolerance "$REPRO_BENCH_TOL"
+}
+
 case "$STAGE" in
     lint)  run_stage lint lint_stage ;;
     unit)  run_stage unit unit_stage "$@" ;;
     shard) run_stage shard shard_stage ;;
     smoke) run_stage smoke smoke_stage ;;
     bench) run_stage bench bench_stage ;;
+    serve) run_stage serve serve_stage ;;
     all)
         run_stage lint lint_stage
         run_stage unit unit_stage "$@"
         run_stage shard shard_stage
         run_stage smoke smoke_stage
         run_stage bench bench_stage
+        run_stage serve serve_stage
         ;;
 esac

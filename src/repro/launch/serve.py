@@ -34,6 +34,18 @@ def main() -> None:
                     choices=["batched", "steps"],
                     help="batched: one jitted prefill step per admission "
                          "cohort; steps: legacy token-by-token")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="enable the paged KV/SSM cache with this many "
+                         "tokens per page (default: dense per-slot lanes)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV page-pool size (default: worst case, "
+                         "slots x ceil(max_len / page_size))")
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=["int8"],
+                    help="int8: quantize KV pages (needs --page-size)")
+    ap.add_argument("--prefill-decode-ratio", type=int, default=0,
+                    help="interleave: decode steps between prefill "
+                         "micro-steps (0 = prefill immediately on admit)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -45,7 +57,15 @@ def main() -> None:
     engine = ServingEngine(
         model, params, num_slots=args.slots, max_len=args.max_len,
         prefill_mode=args.prefill_mode,
+        page_size=args.page_size, num_pages=args.num_pages,
+        cache_dtype=args.cache_dtype or "float32",
+        prefill_decode_ratio=args.prefill_decode_ratio,
     )
+    if args.page_size:
+        print(f"[serve] paged cache: page_size={args.page_size} "
+              f"pages={engine.paging.num_pages} "
+              f"dtype={args.cache_dtype or 'float32'} "
+              f"footprint={engine.cache_nbytes() / 1e6:.3f} MB")
     rng = np.random.default_rng(0)
     reqs = [
         Request(
@@ -71,6 +91,10 @@ def main() -> None:
     print(f"[serve] device steps: {st['prefill_steps']} prefill for "
           f"{st['cohorts']} admission cohorts ({args.prefill_mode}), "
           f"{st['decode_steps']} decode")
+    if args.page_size:
+        print(f"[serve] pages: peak {st['pages_peak']} in use, "
+              f"queue_wait_steps={st['queue_wait_steps']}, "
+              f"hol_skips={st['hol_skips']}")
 
 
 if __name__ == "__main__":

@@ -262,7 +262,7 @@ def batch_shardings(mesh: Mesh, batch_shapes: dict[str, Any]) -> dict[str, Any]:
     return jax.tree_util.tree_map_with_path(rule, batch_shapes)
 
 
-def cache_shardings(mesh: Mesh, cache_shapes: Any) -> Any:
+def cache_shardings(mesh: Mesh, cache_shapes: Any, serve_mode: bool = False) -> Any:
     """Decode-cache rule.
 
     KV tensors (..., B, S, G, hd): batch on the data axes when it divides;
@@ -271,16 +271,43 @@ def cache_shardings(mesh: Mesh, cache_shapes: Any) -> Any:
     across all archs, unlike G which can be < tp degree).
     SSM state (..., B, H, P, N): heads on "model".
     Conv state (..., B, K, D): channels on "model".
+
+    Paged serving pools (``serving.paged_cache`` leaves) have no batch
+    axis — the page/state-page axis stands in for it. ``serve_mode=True``
+    shards that pool axis over the data axes (each data-parallel member
+    owns a page shard of the serving pool, mirroring
+    ``params_shardings(serve_mode=True)``); the default replicates pools
+    so training-side dry runs stay conservative. Page tables, state
+    indices and positions always replicate (every member resolves the
+    same indirection).
     """
     dp = data_axes(mesh)
+    pool_dp = dp if serve_mode else None
 
     def rule(path, leaf):
         shape = tuple(leaf.shape)
         name = _path_str(path)
         nd = len(shape)
-        if name.endswith("pos") or nd <= 1:
+        last = name.split("/")[-1]
+        if last in ("pos", "table", "sidx") or nd <= 1:
             return NamedSharding(mesh, P())
-        if name.split("/")[-1] in ("k", "v") and nd >= 4:
+        if last in ("kp", "vp") and nd >= 4:  # (..., Np, pg, G, hd)
+            lead = [None] * (nd - 4)
+            spec = P(*lead, pool_dp, None, None, "model")
+            return NamedSharding(mesh, sanitize(mesh, spec, shape))
+        if last in ("ks", "vs") and nd >= 3:  # (..., Np, pg, G) scales
+            lead = [None] * (nd - 3)
+            spec = P(*lead, pool_dp, None, None)
+            return NamedSharding(mesh, sanitize(mesh, spec, shape))
+        if last == "ssdp" and nd >= 4:  # (..., Ns, H, Phd, N)
+            lead = [None] * (nd - 4)
+            spec = P(*lead, pool_dp, "model", None, None)
+            return NamedSharding(mesh, sanitize(mesh, spec, shape))
+        if last == "convp" and nd >= 3:  # (..., Ns, K, D)
+            lead = [None] * (nd - 3)
+            spec = P(*lead, pool_dp, None, "model")
+            return NamedSharding(mesh, sanitize(mesh, spec, shape))
+        if last in ("k", "v") and nd >= 4:
             b, s = shape[nd - 4], shape[nd - 3]
             lead = [None] * (nd - 4)
             if b % _axis_div(mesh, dp) == 0:

@@ -173,9 +173,21 @@ def precompute_cross_kv(
 
 
 def init_decode_caches(
-    params: Params, cfg: ModelConfig, batch: int, max_len: int, dtype
+    params: Params, cfg: ModelConfig, batch: int, max_len: int, dtype,
+    paging=None,
 ) -> Any:
-    one = empty_kv_cache(cfg, batch, max_len, None, dtype)
+    """Decoder self-attention KV, layer-stacked; optionally paged.
+
+    Cross-attention K/V (``precompute_cross_kv``) stays dense: it is
+    written once per request from the encoder output and never grows.
+    """
+    if paging is not None:
+        from repro.serving import paged_cache as pc
+
+        one = pc.empty_paged_kv(batch, paging, cfg.num_kv_heads,
+                                cfg.resolved_head_dim, dtype)
+    else:
+        one = empty_kv_cache(cfg, batch, max_len, None, dtype)
     return jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one
     )

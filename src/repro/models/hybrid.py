@@ -140,6 +140,13 @@ def prefill_step(
             h, (k, v) = attention(p["attn"], h, positions, cfg, causal=True,
                                   use_rope=False, return_kv=True)
             new_caches.append(write_prefill_kv(caches[i], k, v, lengths))
+        elif "ssdp" in caches[i]:  # pooled SSM state (paged serving)
+            from repro.serving import paged_cache as pc
+
+            dense, put = pc.ssm_gather(caches[i])
+            h, nc = mamba_forward(p["mamba"], h, cfg, h0=dense["ssd"],
+                                  lengths=lengths)
+            new_caches.append(put(nc))
         else:
             h, nc = mamba_forward(p["mamba"], h, cfg, h0=caches[i]["ssd"],
                                   lengths=lengths)
@@ -159,8 +166,29 @@ def prefill_step(
 
 
 def init_decode_caches(
-    params: Params, cfg: ModelConfig, batch: int, max_len: int, dtype
+    params: Params, cfg: ModelConfig, batch: int, max_len: int, dtype,
+    paging=None,
 ) -> list[Any]:
+    """Per-layer cache list; with ``paging`` both cache kinds pool:
+    attention layers share the KV page pool, Mamba layers take one
+    state page per active slot (``sidx``-indexed)."""
+    if paging is not None:
+        from repro.models.ssm import ssm_dims
+        from repro.serving import paged_cache as pc
+
+        dims = ssm_dims(cfg)
+        s = cfg.ssm
+        caches = []
+        for i in range(cfg.num_layers):
+            if is_attn_layer(i, cfg):
+                caches.append(pc.empty_paged_kv(
+                    batch, paging, cfg.num_kv_heads, cfg.resolved_head_dim,
+                    dtype))
+            else:
+                caches.append(pc.empty_paged_ssm(
+                    batch, paging, dims["nheads"], s.head_dim, s.d_state,
+                    s.d_conv, dims["d_xbc"], dtype))
+        return caches
     caches = []
     for i in range(cfg.num_layers):
         if is_attn_layer(i, cfg):
@@ -184,6 +212,12 @@ def decode_step(
         if "attn" in p:
             h, nc = attention_decode(p["attn"], h, caches[i], cfg,
                                      use_rope=False)
+        elif "ssdp" in caches[i]:  # pooled SSM state (paged serving)
+            from repro.serving import paged_cache as pc
+
+            dense, put = pc.ssm_gather(caches[i])
+            h, nc = mamba_step(p["mamba"], h, dense, cfg)
+            nc = put(nc)
         else:
             h, nc = mamba_step(p["mamba"], h, caches[i], cfg)
         new_caches.append(nc)

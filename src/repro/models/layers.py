@@ -340,14 +340,26 @@ def attention_decode(
     one batched cache without leaking into each other. Sliding-window
     layers use a ring buffer of size window (positions wrap), so
     local-layer caches stay O(window) — the gemma3 long_500k memory story.
+
+    Paged caches (``serving.paged_cache`` nodes, detected by their "kp"
+    key) take a pool-scatter write and a page-table gather read instead
+    of the dense lane scatter; scores/softmax are shared with the dense
+    path, so the f32 paged decode is bit-identical to it. Only global
+    layers page — sliding-window rings are already O(window).
     """
     b, one, d = x.shape
     assert one == 1
     h, g, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    paged = "kp" in cache
+    if paged and window is not None:
+        raise ValueError(
+            "paged KV caches cover global-attention layers only; "
+            "sliding-window layers keep dense rings"
+        )
     pos = cache["pos"]  # (B,) int32 — next write index (tokens so far)
     if pos.ndim == 0:  # legacy scalar caches: all sequences in lockstep
         pos = jnp.broadcast_to(pos, (b,))
-    s_max = cache["k"].shape[1]
+    s_max = None if paged else cache["k"].shape[1]
 
     q = lin(x, params["wq"], site="wq")
     k = lin(x, params["wk"], site="wk")
@@ -369,35 +381,46 @@ def attention_decode(
         q = apply_rope(q, pvec, hd, cfg.rope_theta, cfg.mrope_sections)
         k = apply_rope(k, pvec, hd, cfg.rope_theta, cfg.mrope_sections)
 
-    write_idx = jnp.mod(pos, s_max) if window is not None else pos  # (B,)
-    rows = jnp.arange(b)
-    new_k = cache["k"].at[rows, write_idx].set(
-        k[:, 0].astype(cache["k"].dtype)
-    )
-    new_v = cache["v"].at[rows, write_idx].set(
-        v[:, 0].astype(cache["v"].dtype)
-    )
+    if paged:
+        from repro.serving import paged_cache as pc
+
+        new_cache = pc.paged_kv_write_token(cache, k[:, 0], v[:, 0])
+        kk, vv = pc.paged_kv_read(new_cache, x.dtype)  # (B, P*pg, G, hd)
+        slot = jnp.arange(kk.shape[1])
+        valid = slot[None, :] <= pos[:, None]  # (B, P*pg)
+    else:
+        write_idx = (
+            jnp.mod(pos, s_max) if window is not None else pos
+        )  # (B,)
+        rows = jnp.arange(b)
+        new_k = cache["k"].at[rows, write_idx].set(
+            k[:, 0].astype(cache["k"].dtype)
+        )
+        new_v = cache["v"].at[rows, write_idx].set(
+            v[:, 0].astype(cache["v"].dtype)
+        )
+        new_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+        kk = new_k.astype(x.dtype)  # (B, S_max, G, hd) — never expanded
+        vv = new_v.astype(x.dtype)
+        slot = jnp.arange(s_max)
+        if window is not None:
+            # ring buffer: valid slots = the last min(pos+1, window) writes
+            age = jnp.mod(write_idx[:, None] - slot[None, :], s_max)
+            valid = age < jnp.minimum(pos + 1, window)[:, None]  # (B, S_max)
+        else:
+            valid = slot[None, :] <= pos[:, None]  # (B, S_max)
 
     rep = h // g
-    kk = new_k.astype(x.dtype)  # (B, S_max, G, hd) — never expanded
-    vv = new_v.astype(x.dtype)
     qg = q.reshape(b, 1, g, rep, hd)
     scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kk).astype(jnp.float32)
     scores = scores / (hd**0.5)
     if cfg.attn_logit_softcap is not None:
         scores = jnp.tanh(scores / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
-    slot = jnp.arange(s_max)
-    if window is not None:
-        # ring buffer: valid slots are the last min(pos+1, window) writes
-        age = jnp.mod(write_idx[:, None] - slot[None, :], s_max)  # 0 = newest
-        valid = age < jnp.minimum(pos + 1, window)[:, None]  # (B, S_max)
-    else:
-        valid = slot[None, :] <= pos[:, None]  # (B, S_max)
     scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     o = jnp.einsum("bgrqk,bkgd->bqgrd", probs, vv)
     out = lin(o.reshape(b, 1, h * hd), params["wo"], site="wo")
-    return out, {"k": new_k, "v": new_v, "pos": pos + 1}
+    return out, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -455,7 +478,14 @@ def write_prefill_kv(
     ring) positions scatter to an out-of-bounds sentinel and are
     dropped. ``pos`` becomes ``lengths``: exactly the state the
     token-by-token decode path would have reached.
+
+    Paged caches scatter through the page table instead (the engine has
+    already allocated the prompt's pages at admission).
     """
+    if "kp" in cache:
+        from repro.serving import paged_cache as pc
+
+        return pc.paged_kv_write_prefill(cache, k, v, lengths)
     size = cache["k"].shape[1]
     b, s = k.shape[0], k.shape[1]
     t = jnp.arange(s)

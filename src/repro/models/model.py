@@ -92,8 +92,17 @@ def mamba_lm_forward(params: Params, tokens: jax.Array, cfg: ModelConfig):
     return hint_logits(x @ asarray(params["embed"], x.dtype).T)
 
 
-def mamba_lm_init_caches(params, cfg: ModelConfig, batch: int, dtype):
-    one = ssm_lib.empty_ssm_cache(cfg, batch, dtype)
+def mamba_lm_init_caches(params, cfg: ModelConfig, batch: int, dtype,
+                         paging=None):
+    if paging is not None:
+        from repro.serving import paged_cache as pc
+
+        dims = ssm_lib.ssm_dims(cfg)
+        s = cfg.ssm
+        one = pc.empty_paged_ssm(batch, paging, dims["nheads"], s.head_dim,
+                                 s.d_state, s.d_conv, dims["d_xbc"], dtype)
+    else:
+        one = ssm_lib.empty_ssm_cache(cfg, batch, dtype)
     return jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one
     )
@@ -103,7 +112,16 @@ def mamba_lm_prefill(params: Params, tokens: jax.Array, caches,
                      lengths: jax.Array, cfg: ModelConfig):
     """One-shot batched prefill: full-sequence SSD per layer with dt
     zeroed past each lane's length (identity recurrence), returning
-    layer-stacked {"ssd", "conv"} caches at exactly ``lengths`` tokens."""
+    layer-stacked {"ssd", "conv"} caches at exactly ``lengths`` tokens.
+
+    Pooled state (paged serving) gathers each slot's state page into the
+    dense per-slot view first and scatters the result back after — the
+    recurrence itself is unchanged."""
+    paged = isinstance(caches, dict) and "ssdp" in caches
+    if paged:
+        from repro.serving import paged_cache as pc
+
+        caches, put_back = pc.ssm_gather(caches)
     dt = jnp.dtype(cfg.compute_dtype)
     x = asarray(params["embed"], dt)[tokens]
 
@@ -117,11 +135,18 @@ def mamba_lm_prefill(params: Params, tokens: jax.Array, caches,
 
     x, new_caches = jax.lax.scan(body, x, (params["layers"], caches),
                                  unroll=cfg.scan_unroll)
+    if paged:
+        new_caches = put_back(new_caches)
     x = norm(x, params["ln_f"], cfg)
     return hint_logits(x @ asarray(params["embed"], x.dtype).T), new_caches
 
 
 def mamba_lm_decode(params: Params, token: jax.Array, caches, cfg: ModelConfig):
+    paged = isinstance(caches, dict) and "ssdp" in caches
+    if paged:
+        from repro.serving import paged_cache as pc
+
+        caches, put_back = pc.ssm_gather(caches)
     dt = jnp.dtype(cfg.compute_dtype)
     x = asarray(params["embed"], dt)[token]
 
@@ -133,6 +158,8 @@ def mamba_lm_decode(params: Params, token: jax.Array, caches, cfg: ModelConfig):
     x, new_caches = jax.lax.scan(
         body, x, (params["layers"], caches), unroll=cfg.scan_unroll
     )
+    if paged:
+        new_caches = put_back(new_caches)
     x = norm(x, params["ln_f"], cfg)
     return hint_logits(x @ asarray(params["embed"], x.dtype).T), new_caches
 
@@ -150,15 +177,22 @@ def merge_caches_on_axis(axis: int) -> Callable[[Any, Any, jax.Array], Any]:
     decoded cache, inactive lanes keep their previous state untouched.
     ``axis`` is where the batch dim lives in every cache leaf (1 for
     layer-stacked caches, 0 for per-layer cache lists).
+
+    Paged cache nodes (page pools, no per-slot batch axis) merge per
+    page via ``paged_cache.paged_merge`` — same invariant, pool layout.
     """
 
     def merge(old: Any, new: Any, active: jax.Array) -> Any:
+        from repro.serving import paged_cache as pc
+
         def sel(o, n):
+            if pc.is_paged(o):
+                return pc.paged_merge(o, n, active)
             shape = [1] * o.ndim
             shape[axis] = active.shape[0]
             return jnp.where(active.reshape(shape), n, o)
 
-        return jax.tree_util.tree_map(sel, old, new)
+        return jax.tree_util.tree_map(sel, old, new, is_leaf=pc.is_paged)
 
     return merge
 
@@ -214,8 +248,9 @@ def build_model(cfg: ModelConfig) -> Model:
             init=lambda key: transformer.init_params(key, cfg),
             forward=fwd,
             loss=loss,
-            init_caches=lambda params, b, L, dt=jnp.bfloat16:
-                transformer.init_decode_caches(params, cfg, b, L, dt),
+            init_caches=lambda params, b, L, dt=jnp.bfloat16, paging=None:
+                transformer.init_decode_caches(params, cfg, b, L, dt,
+                                               paging=paging),
             decode=lambda params, tok, caches: transformer.decode_step(
                 cast_for_compute(params, cfg), tok, caches, cfg),
             merge_caches=merge_caches_on_axis(1 if stacked else 0),
@@ -234,8 +269,10 @@ def build_model(cfg: ModelConfig) -> Model:
             logits = fwd(params, batch)
             return lm_loss(logits, batch["labels"])
 
-        def init_caches(params, b, L, dt=jnp.bfloat16, enc_out=None):
-            kv = encdec.init_decode_caches(params, cfg, b, L, dt)
+        def init_caches(params, b, L, dt=jnp.bfloat16, enc_out=None,
+                        paging=None):
+            kv = encdec.init_decode_caches(params, cfg, b, L, dt,
+                                           paging=paging)
             if enc_out is None:  # shape-only path for the dry-run
                 enc_out = jnp.zeros((b, 1500, cfg.d_model), dt)
             cross = encdec.precompute_cross_kv(params, enc_out, cfg)
@@ -273,8 +310,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 cast_for_compute(params, cfg), batch["tokens"], None,
                 cfg)[0],
             loss=loss,
-            init_caches=lambda params, b, L, dt=jnp.bfloat16:
-                hybrid.init_decode_caches(params, cfg, b, L, dt),
+            init_caches=lambda params, b, L, dt=jnp.bfloat16, paging=None:
+                hybrid.init_decode_caches(params, cfg, b, L, dt,
+                                          paging=paging),
             decode=lambda params, tok, caches: hybrid.decode_step(
                 cast_for_compute(params, cfg), tok, caches, cfg),
             merge_caches=merge_caches_on_axis(0),  # per-layer list: (B,...)
@@ -295,8 +333,8 @@ def build_model(cfg: ModelConfig) -> Model:
             forward=lambda params, batch: mamba_lm_forward(
                 cast_for_compute(params, cfg), batch["tokens"], cfg),
             loss=loss,
-            init_caches=lambda params, b, L, dt=jnp.float32:
-                mamba_lm_init_caches(params, cfg, b, dt),
+            init_caches=lambda params, b, L, dt=jnp.float32, paging=None:
+                mamba_lm_init_caches(params, cfg, b, dt, paging=paging),
             decode=lambda params, tok, caches: mamba_lm_decode(
                 cast_for_compute(params, cfg), tok, caches, cfg),
             merge_caches=merge_caches_on_axis(1),  # layer-stacked: (L,B,...)

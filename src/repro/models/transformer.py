@@ -249,16 +249,31 @@ def prefill_step(
 
 
 def init_decode_caches(
-    params: Params, cfg: ModelConfig, batch: int, max_len: int, dtype
+    params: Params, cfg: ModelConfig, batch: int, max_len: int, dtype,
+    paging=None,
 ) -> Any:
-    """Stacked (homogeneous) or per-layer-list (mixed-window) caches."""
+    """Stacked (homogeneous) or per-layer-list (mixed-window) caches.
+
+    With ``paging`` (a ``serving.paged_cache.PagedSpec``) global layers
+    get pool-backed paged KV; sliding-window layers keep dense rings —
+    they are already O(window) per slot, so paging buys them nothing.
+    """
     wins = layer_windows(cfg)
+
+    def one(win):
+        if paging is not None and win is None:
+            from repro.serving import paged_cache as pc
+
+            return pc.empty_paged_kv(batch, paging, cfg.num_kv_heads,
+                                     cfg.resolved_head_dim, dtype)
+        return empty_kv_cache(cfg, batch, max_len, win, dtype)
+
     if all(w == wins[0] for w in wins):
-        one = empty_kv_cache(cfg, batch, max_len, wins[0], dtype)
         return jax.tree_util.tree_map(
-            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape),
+            one(wins[0]),
         )
-    return [empty_kv_cache(cfg, batch, max_len, w, dtype) for w in wins]
+    return [one(w) for w in wins]
 
 
 def decode_step(

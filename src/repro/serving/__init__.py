@@ -1,1 +1,5 @@
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.paged_cache import (  # noqa: F401
+    PageAllocator,
+    PagedSpec,
+)

@@ -7,6 +7,20 @@ decode step per token — the slot axis stays fully batched no matter how
 requests arrive/finish (continuous batching). Finished slots are freed and
 refilled from the queue.
 
+Cache layouts:
+  dense (default)           one (B, max_len, ...) lane per slot
+  paged (``page_size=``)    KV/SSM state in shared page pools with
+                            per-slot page tables (serving/paged_cache.py):
+                            pages allocate lazily as sequences grow, free
+                            on completion, and admission applies
+                            *backpressure* (request waits in queue) when
+                            the pool cannot cover a request's worst case —
+                            never a mid-decode allocation failure, because
+                            admission reserves the worst-case page count
+                            up front. ``cache_dtype="int8"`` (paged only)
+                            stores KV pages as int8 with per-position,
+                            per-kv-head scales; SSM/conv state stays float.
+
 Prefill is ONE jitted batched step per admission cohort
 (``Model.prefill``): every admitted slot's whole prompt (minus the
 held-back final token) is consumed in a single full-sequence pass that
@@ -16,14 +30,26 @@ SSM state, hybrid, cross-attn). Prompt lengths are padded to power-of-
 two buckets so recompiles stay bounded. ``prefill_mode="steps"`` keeps
 the legacy token-by-token path (the parity oracle in tests).
 
+Admission interleaving: by default (``prefill_decode_ratio=0``) admitted
+requests prefill immediately, as before. With ratio N > 0, admitted
+slots wait in a pending list and one batched prefill micro-step runs per
+N decode steps, so a long prompt arriving mid-stream does not stall
+every in-flight decode. ``_admit`` also skip-scans the queue (bounded by
+``admit_lookahead``) past requests too long for the *remaining* page
+budget, so one long request cannot head-of-line-block shorter ones;
+skips and queue wait are counted in ``stats``.
+
 Slot isolation: every jitted step takes an ``active`` (B,) mask and
 merges caches through ``model.merge_caches``, so inactive slots' cache
-lanes (KV, SSM state, per-sequence positions) are bit-identical before
-and after the step. Decode results therefore do not depend on which
-other requests happen to share the batch — greedy decode of a prompt is
-reproducible under any slot occupancy.
+lanes — and, on the paged path, the pool pages their tables own — are
+bit-identical before and after the step. Decode results therefore do not
+depend on which other requests happen to share the batch — greedy decode
+of a prompt is reproducible under any slot occupancy.
 
-Sampling: greedy or temperature; per-slot RNG for reproducibility.
+Sampling: greedy or temperature; the temperature path draws from a
+per-request generator seeded by ``(engine seed, request uid)``, so a
+request's sampled continuation is reproducible regardless of batch
+composition or admission order.
 
 Long-K layers can opt into hierarchical K-sharded accumulation:
 ``int_lin=IntegerLinConfig(k_shards=S, k_shard_min_k=...)`` routes every
@@ -39,6 +65,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -47,6 +74,7 @@ import numpy as np
 
 from repro.core import dispatch
 from repro.models.model import Model
+from repro.serving import paged_cache
 
 
 @dataclasses.dataclass
@@ -59,6 +87,8 @@ class Request:
     # filled by the engine
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0  # wall clock at submit()
+    t_done: float = 0.0  # wall clock when the request finished
 
 
 class ServingEngine:
@@ -73,6 +103,10 @@ class ServingEngine:
         int_lin: Optional["dispatch.IntegerLinConfig"] = None,
         mesh=None,
         prefill_mode: str = "batched",
+        page_size: Optional[int] = None,
+        num_pages: Optional[int] = None,
+        prefill_decode_ratio: int = 0,
+        admit_lookahead: int = 8,
     ):
         if prefill_mode not in ("batched", "steps"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
@@ -100,6 +134,20 @@ class ServingEngine:
         if mesh is not None and int_lin is not None:
             # distribute the integer projections over the serving mesh
             int_lin = dataclasses.replace(int_lin, mesh=mesh)
+        quantized = (
+            cache_dtype == "int8"
+            if isinstance(cache_dtype, str)
+            else jnp.dtype(cache_dtype) == jnp.int8
+        )
+        if quantized:
+            if page_size is None:
+                raise ValueError(
+                    'cache_dtype="int8" quantizes KV *pages* — it '
+                    "requires the paged cache (page_size=...)"
+                )
+            # non-KV float leaves (SSM state, conv rings, window rings)
+            # stay f32 — only the KV page pools store int8
+            cache_dtype = jnp.float32
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -107,16 +155,57 @@ class ServingEngine:
         self.int_lin = int_lin
         self.mesh = mesh
         self.prefill_mode = prefill_mode
-        self.caches = model.init_caches(params, num_slots, max_len, cache_dtype)
+        self.page_size = page_size
+        self.prefill_decode_ratio = prefill_decode_ratio
+        self.admit_lookahead = admit_lookahead
+        self._seed = seed
+        if page_size is not None:
+            pages_per_slot = -(-max_len // page_size)
+            if num_pages is None:
+                num_pages = num_slots * pages_per_slot
+            self.paging = paged_cache.PagedSpec(
+                page_size=page_size,
+                num_pages=num_pages,
+                pages_per_slot=pages_per_slot,
+                num_state_pages=num_slots,
+                quantized=quantized,
+            )
+            self.caches = model.init_caches(
+                params, num_slots, max_len, cache_dtype, paging=self.paging
+            )
+            self._alloc = paged_cache.PageAllocator(num_pages)
+            self._table = np.full((num_slots, pages_per_slot), -1, np.int32)
+            self._sidx = np.full((num_slots,), -1, np.int32)
+            self._free_sidx = list(range(num_slots - 1, -1, -1))
+        else:
+            self.paging = None
+            self.caches = model.init_caches(
+                params, num_slots, max_len, cache_dtype
+            )
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.queue: list[Request] = []
+        # admitted but not yet prefilled (interleaved admission)
+        self._pending: list[tuple[int, Request]] = []
+        self._ready = np.zeros(num_slots, bool)  # prefilled, decoding
+        self._pos = np.zeros(num_slots, np.int64)  # tokens written so far
         self._next_token = np.zeros((num_slots, 1), np.int32)
         self._budget = np.zeros(num_slots, np.int64)
-        self._rng = np.random.default_rng(seed)
+        self._since_prefill = 0
+        self._step_idx = 0
         # device-step accounting: admission latency is prefill_steps per
         # cohort (1 on the batched path, max prompt length - 1 on the
-        # token-by-token path)
-        self.stats = {"prefill_steps": 0, "decode_steps": 0, "cohorts": 0}
+        # token-by-token path); queue_wait_steps sums engine steps each
+        # request spent queued before admission, hol_skips counts
+        # requests skip-scanned past for page-budget backpressure
+        self.stats = {
+            "prefill_steps": 0,
+            "decode_steps": 0,
+            "cohorts": 0,
+            "hol_skips": 0,
+            "queue_wait_steps": 0,
+            "pages_in_use": 0,
+            "pages_peak": 0,
+        }
 
         def _int_ctx():
             # trace-time context: QTensor projections lower to true
@@ -187,6 +276,12 @@ class ServingEngine:
 
     # -- request lifecycle ---------------------------------------------------
 
+    def _pages_needed(self, req: Request) -> int:
+        """Worst-case pages for a request: its prompt (minus the held-
+        back final token) plus every token its budget may decode."""
+        tokens = max(len(req.prompt) + req.max_new_tokens - 1, 1)
+        return -(-tokens // self.page_size)
+
     def submit(self, req: Request) -> None:
         total = len(req.prompt) + req.max_new_tokens
         if total > self.max_len:
@@ -197,24 +292,99 @@ class ServingEngine:
                 f"max_new_tokens ({req.max_new_tokens}) = {total} exceeds "
                 f"max_len={self.max_len}"
             )
+        if self.paging is not None:
+            need = self._pages_needed(req)
+            if need > self.paging.num_pages:
+                # could never be admitted — backpressure would deadlock
+                raise ValueError(
+                    f"request {req.uid}: needs {need} pages, pool has "
+                    f"{self.paging.num_pages} (page_size={self.page_size})"
+                )
+        req.t_submit = time.perf_counter()
+        req._submit_step = self._step_idx
+        # per-request sampling stream: reproducible under any batch
+        # composition / admission order
+        req._rng = np.random.default_rng((self._seed, req.uid))
         self.queue.append(req)
 
     def _admit(self) -> None:
+        """Claim free slots from the queue; reserve + allocate pages.
+
+        Paged backpressure: a request only leaves the queue once its
+        worst-case page count is reservable, so the lazy per-step
+        ``alloc`` calls during decode can never fail. A blocked request
+        does not block shorter ones behind it — the scan skips past it
+        (up to ``admit_lookahead`` skips) and counts ``hol_skips``.
+        """
+        free = [i for i in range(self.num_slots) if self.slots[i] is None]
         admitted: list[tuple[int, Request]] = []
-        for slot in range(self.num_slots):
-            if self.slots[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[slot] = req
-                admitted.append((slot, req))
+        qi = 0
+        skipped = 0
+        while free and qi < len(self.queue):
+            req = self.queue[qi]
+            if self.paging is not None:
+                need = self._pages_needed(req)
+                if not self._alloc.can_reserve(need):
+                    self.stats["hol_skips"] += 1
+                    skipped += 1
+                    if skipped >= self.admit_lookahead:
+                        break
+                    qi += 1
+                    continue
+            slot = free.pop(0)
+            self.queue.pop(qi)
+            if self.paging is not None:
+                self._alloc.reserve(slot, need)
+                # prompt pages up front (prefill scatters the whole
+                # prompt at once); decode pages allocate lazily
+                n_prefill = max(len(req.prompt) - 1, 0)
+                for j in range(-(-n_prefill // self.page_size)):
+                    self._table[slot, j] = self._alloc.alloc(slot)
+                self._sidx[slot] = self._free_sidx.pop()
+            self.slots[slot] = req
+            self._ready[slot] = False
+            self._pos[slot] = 0
+            self.stats["queue_wait_steps"] += self._step_idx - getattr(
+                req, "_submit_step", self._step_idx
+            )
+            admitted.append((slot, req))
         if not admitted:
             return
-        # clear stale cache lanes (KV, SSM state, positions) of the
-        # re-used slots, then prefill all admissions together
+        # clear stale cache lanes (KV pages, SSM state, positions) of
+        # the re-used slots; on the paged path the new page tables go
+        # live first so the reset zeroes the freshly claimed pages
         mask = np.zeros(self.num_slots, bool)
         for slot, _ in admitted:
             mask[slot] = True
+        if self.paging is not None:
+            self.caches = paged_cache.set_tables(
+                self.caches, self._table, self._sidx
+            )
         self.caches = self._reset(self.caches, jnp.asarray(mask))
-        self._prefill(admitted)
+        self._pending.extend(admitted)
+        self._maybe_prefill()
+
+    def _maybe_prefill(self) -> None:
+        """Prefill the pending cohort, subject to the interleave budget.
+
+        ``prefill_decode_ratio=0`` (default): immediately. Ratio N > 0:
+        only after N decode steps since the last prefill — unless
+        nothing is mid-decode, in which case waiting helps no one.
+        """
+        if not self._pending:
+            return
+        have_ready = any(
+            self.slots[i] is not None and self._ready[i]
+            for i in range(self.num_slots)
+        )
+        if have_ready and self._since_prefill < self.prefill_decode_ratio:
+            return
+        cohort, self._pending = self._pending, []
+        self._prefill(cohort)
+        self._since_prefill = 0
+        for slot, req in cohort:
+            self._pos[slot] = len(req.prompt) - 1
+            self._ready[slot] = True
 
     def _prefill(self, admitted: list[tuple[int, Request]]) -> None:
         """Consume the admitted prompts into their slots' cache lanes.
@@ -264,7 +434,8 @@ class ServingEngine:
         At step t every admitted slot with a t-th prompt token is
         active; all other slots (both mid-generation and idle) are
         masked out, so their caches do not advance. Kept as the parity
-        oracle for the batched path (tests/test_prefill_parity.py).
+        oracle for the batched path (tests/test_prefill_parity.py and
+        the paged suite).
         """
         longest = max(len(req.prompt) for _, req in admitted)
         for t in range(longest - 1):
@@ -283,6 +454,35 @@ class ServingEngine:
 
     # -- decode loop ----------------------------------------------------------
 
+    def _ensure_decode_pages(self, active: list[int]) -> None:
+        """Lazily claim the page each active slot's next write lands in.
+
+        Guaranteed to succeed: admission reserved the worst case. Only
+        pushes the table to the device when something actually changed.
+        """
+        dirty = False
+        for slot in active:
+            lp = int(self._pos[slot]) // self.page_size
+            if self._table[slot, lp] < 0:
+                self._table[slot, lp] = self._alloc.alloc(slot)
+                dirty = True
+        if dirty:
+            self.caches = paged_cache.set_tables(
+                self.caches, self._table, self._sidx
+            )
+
+    def _free_slot(self, slot: int) -> None:
+        self.slots[slot] = None
+        self._ready[slot] = False
+        if self.paging is not None:
+            self._alloc.free_slot(slot)
+            self._table[slot, :] = -1
+            self._free_sidx.append(int(self._sidx[slot]))
+            self._sidx[slot] = -1
+            # the stale device-side table row is harmless (the slot is
+            # inactive, so merges revert anything it could touch); the
+            # next admission's set_tables overwrites it
+
     def _sample(self, logits: np.ndarray, slot: int) -> int:
         req = self.slots[slot]
         row = logits[slot, -1]
@@ -291,14 +491,28 @@ class ServingEngine:
         z = row / req.temperature
         z = z - z.max()
         p = np.exp(z) / np.exp(z).sum()
-        return int(self._rng.choice(len(p), p=p))
+        rng = getattr(req, "_rng", None)
+        if rng is None:  # request bypassed submit(); still per-request
+            rng = req._rng = np.random.default_rng((self._seed, req.uid))
+        return int(rng.choice(len(p), p=p))
 
     def step(self) -> int:
-        """One batched decode step. Returns number of active slots."""
+        """One batched decode step (plus admission/prefill bookkeeping).
+
+        Returns the number of slots that decoded plus the number of
+        admitted-but-pending prefills — 0 means the engine is idle.
+        """
+        self._step_idx += 1
         self._admit()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
+        self._maybe_prefill()
+        active = [
+            i for i, r in enumerate(self.slots)
+            if r is not None and self._ready[i]
+        ]
         if not active:
-            return 0
+            return len(self._pending)
+        if self.paging is not None:
+            self._ensure_decode_pages(active)
         mask = np.zeros(self.num_slots, bool)
         mask[active] = True
         logits, self.caches = self._step(
@@ -306,19 +520,25 @@ class ServingEngine:
             jnp.asarray(mask),
         )
         self.stats["decode_steps"] += 1
+        self._since_prefill += 1
         logits = np.asarray(logits.astype(jnp.float32))
         for slot in active:
             req = self.slots[slot]
             nxt = self._sample(logits, slot)
             req.output.append(nxt)
             self._next_token[slot, 0] = nxt
+            self._pos[slot] += 1
             self._budget[slot] -= 1
             if self._budget[slot] <= 0 or (
                 req.eos_id is not None and nxt == req.eos_id
             ):
                 req.done = True
-                self.slots[slot] = None
-        return len(active)
+                req.t_done = time.perf_counter()
+                self._free_slot(slot)
+        if self.paging is not None:
+            self.stats["pages_in_use"] = self._alloc.in_use
+            self.stats["pages_peak"] = self._alloc.peak_in_use
+        return len(active) + len(self._pending)
 
     def drain(self, requests: list[Request], max_steps: int = 100_000) -> None:
         for r in requests:
@@ -326,3 +546,7 @@ class ServingEngine:
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 break
+
+    def cache_nbytes(self) -> int:
+        """Current cache footprint in bytes (pools + tables + state)."""
+        return paged_cache.cache_nbytes(self.caches)

@@ -1,0 +1,412 @@
+"""Paged KV/SSM cache: fixed-size page pools + per-slot page tables.
+
+JetStream/vLLM-style cache layout for the serving engine. Instead of one
+dense ``(B, max_len, G, hd)`` lane per slot, K/V live in a shared pool of
+``num_pages`` pages of ``page_size`` tokens each; a per-slot page table
+``(B, pages_per_slot)`` maps logical page index -> physical page (-1 =
+not allocated). Slots claim pages lazily as their sequence grows and
+return them on completion, so pool memory tracks *live tokens*, not
+``num_slots x max_len`` worst case — and admission can apply backpressure
+(request stays queued) instead of crashing when the pool is full.
+
+Two cache node kinds, detected structurally by key (``is_paged``):
+
+  paged KV   {"kp","vp": (Np, pg, G, hd), ["ks","vs": (Np, pg, G) f32],
+              "table": (B, P) int32, "pos": (B,) int32}
+  paged SSM  {"ssdp": (Ns, H, Phd, N) f32, "convp": (Ns, K-1, D),
+              "sidx": (B,) int32}
+
+Layer-stacked variants carry a leading L axis on every leaf (the page
+table is identical across layers — ``set_tables`` broadcasts it).
+
+Quantized KV (``PagedSpec.quantized``): pools store int8 with per-token-
+position, per-kv-head f32 scales (``ks``/``vs``) — scale = absmax over
+head_dim / 127, computed at write, applied at gather. Finer than
+per-page scaling, and single-token decode writes never requantize
+previously written positions. SSM state and conv rings stay float
+(recurrent state error compounds; KV read error does not).
+
+Bit-exactness of the f32/bf16 paged path vs the dense cache: the gather
+materializes the same ``(B, S_view, G, hd)`` K/V view attention already
+consumed, positions past ``pos`` (stale/unallocated pages, clamped -1
+table entries) are masked to -1e30 before softmax exactly as dense
+masking is, and pool contents are always finite — so masked lanes
+contribute exact 0.0 and greedy decode is bit-identical (locked by
+tests/test_paged_cache.py).
+
+Host-side ``PageAllocator`` is reservation-based: admission reserves the
+worst-case page count up front (``can_reserve``/``reserve``), so the
+lazy per-step ``alloc`` calls during decode are guaranteed to succeed —
+backpressure happens only at admission, never mid-generation.
+
+Device helpers here import only jax (models import this lazily, the
+engine directly — no import cycles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Static description of a paged cache pool.
+
+    ``pages_per_slot`` bounds one request's logical pages (ceil(max_len /
+    page_size)); ``num_pages`` is the physical pool (< num_slots *
+    pages_per_slot oversubscribes — admission backpressure keeps it
+    safe). ``num_state_pages`` sizes the SSM/conv state pool (one page
+    per concurrently active slot).
+    """
+
+    page_size: int
+    num_pages: int
+    pages_per_slot: int
+    num_state_pages: int
+    quantized: bool = False
+
+
+def is_paged(node: Any) -> bool:
+    """True for paged cache dict nodes (KV or SSM state)."""
+    return isinstance(node, dict) and ("kp" in node or "ssdp" in node)
+
+
+# ---------------------------------------------------------------------------
+# host-side page accounting
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list page allocator with per-slot worst-case reservations.
+
+    ``reserve(slot, n)`` commits n pages to a slot before any are
+    handed out; ``alloc(slot)`` draws one of them. Because admission
+    only proceeds when ``can_reserve`` holds, ``alloc`` cannot run dry
+    mid-decode — the no-crash half of the backpressure contract.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))
+        self._owned: dict[int, list[int]] = {}
+        self._pending: dict[int, int] = {}  # slot -> reserved-not-yet-drawn
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def pending_reserved(self) -> int:
+        return sum(self._pending.values())
+
+    def can_reserve(self, n: int) -> bool:
+        return n <= len(self._free) - self.pending_reserved
+
+    def reserve(self, slot: int, n: int) -> None:
+        if not self.can_reserve(n):
+            raise RuntimeError(
+                f"reserve({slot}, {n}): only "
+                f"{len(self._free) - self.pending_reserved} unreserved pages"
+            )
+        self._pending[slot] = self._pending.get(slot, 0) + n
+
+    def alloc(self, slot: int) -> int:
+        if self._pending.get(slot, 0) <= 0:
+            raise RuntimeError(f"slot {slot} allocates past its reservation")
+        self._pending[slot] -= 1
+        page = self._free.pop()
+        self._owned.setdefault(slot, []).append(page)
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return page
+
+    def free_slot(self, slot: int) -> None:
+        """Return a finished slot's pages (and unused reservation)."""
+        self._free.extend(reversed(self._owned.pop(slot, [])))
+        self._pending.pop(slot, None)
+
+
+# ---------------------------------------------------------------------------
+# empty pools
+# ---------------------------------------------------------------------------
+
+
+def empty_paged_kv(
+    batch: int, spec: PagedSpec, g: int, hd: int, dtype
+) -> dict[str, jax.Array]:
+    pool_dt = jnp.int8 if spec.quantized else dtype
+    out = {
+        "kp": jnp.zeros((spec.num_pages, spec.page_size, g, hd), pool_dt),
+        "vp": jnp.zeros((spec.num_pages, spec.page_size, g, hd), pool_dt),
+        "table": jnp.full((batch, spec.pages_per_slot), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if spec.quantized:
+        out["ks"] = jnp.zeros((spec.num_pages, spec.page_size, g), jnp.float32)
+        out["vs"] = jnp.zeros((spec.num_pages, spec.page_size, g), jnp.float32)
+    return out
+
+
+def empty_paged_ssm(
+    batch: int, spec: PagedSpec, nheads: int, head_dim: int, d_state: int,
+    d_conv: int, d_xbc: int, dtype
+) -> dict[str, jax.Array]:
+    ns = spec.num_state_pages
+    return {
+        "ssdp": jnp.zeros((ns, nheads, head_dim, d_state), jnp.float32),
+        "convp": jnp.zeros((ns, d_conv - 1, d_xbc), dtype),
+        "sidx": jnp.full((batch,), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# KV pool read/write
+# ---------------------------------------------------------------------------
+
+
+def kv_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., hd) float -> (int8 values, per-(...,) f32 scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def paged_kv_read(
+    cache: dict[str, jax.Array], dtype
+) -> tuple[jax.Array, jax.Array]:
+    """Gather the page table into dense (B, P*pg, G, hd) K/V views.
+
+    Unallocated entries (-1) clamp to page 0; every logical position a
+    clamped entry can contribute lies past ``pos`` and is masked out of
+    attention, so the clamp never leaks data (and pool contents are
+    finite, so masked positions contribute exact 0.0 after softmax).
+    """
+    table = cache["table"]  # (B, P)
+    b, p = table.shape
+    phys = jnp.maximum(table, 0)
+
+    def rd(pool, spool):
+        pages = pool[phys]  # (B, P, pg, G, hd)
+        if spool is not None:
+            pages = pages.astype(jnp.float32) * spool[phys][..., None]
+        return pages.reshape(b, -1, pool.shape[-2], pool.shape[-1]).astype(
+            dtype
+        )
+
+    return (rd(cache["kp"], cache.get("ks")),
+            rd(cache["vp"], cache.get("vs")))
+
+
+def paged_kv_write_token(
+    cache: dict[str, jax.Array],
+    k: jax.Array,  # (B, G, hd) post-RoPE
+    v: jax.Array,
+) -> dict[str, jax.Array]:
+    """Scatter one decode token per slot at its ``pos``; advance ``pos``.
+
+    Slots whose current page is unallocated (table -1: inactive lanes)
+    scatter to an out-of-bounds sentinel and are dropped — the engine
+    guarantees active slots always have their write page allocated.
+    """
+    kp = cache["kp"]
+    n_pages, pg = kp.shape[0], kp.shape[1]
+    pos = cache["pos"]
+    lp = pos // pg
+    phys = jnp.take_along_axis(cache["table"], lp[:, None], axis=1)[:, 0]
+    phys = jnp.where(phys >= 0, phys, n_pages)  # OOB -> dropped
+    off = pos % pg
+    out = dict(cache)
+    if "ks" in cache:
+        qk, sk = kv_quantize(k)
+        qv, sv = kv_quantize(v)
+        out["kp"] = kp.at[phys, off].set(qk, mode="drop")
+        out["vp"] = cache["vp"].at[phys, off].set(qv, mode="drop")
+        out["ks"] = cache["ks"].at[phys, off].set(sk, mode="drop")
+        out["vs"] = cache["vs"].at[phys, off].set(sv, mode="drop")
+    else:
+        out["kp"] = kp.at[phys, off].set(k.astype(kp.dtype), mode="drop")
+        out["vp"] = cache["vp"].at[phys, off].set(
+            v.astype(kp.dtype), mode="drop"
+        )
+    out["pos"] = pos + 1
+    return out
+
+
+def paged_kv_write_prefill(
+    cache: dict[str, jax.Array],
+    k: jax.Array,  # (B, S, G, hd) post-RoPE, from attention(return_kv=True)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) int32 — tokens consumed per slot (0 = skip)
+) -> dict[str, jax.Array]:
+    """One-shot prefill scatter through the page table; ``pos``=lengths."""
+    kp = cache["kp"]
+    n_pages, pg = kp.shape[0], kp.shape[1]
+    b, s = k.shape[0], k.shape[1]
+    p = cache["table"].shape[1]
+    t = jnp.arange(s)
+    keep = t[None, :] < lengths[:, None]  # (B, S)
+    # clamp logical pages of masked tail positions (pow2 bucket can pad
+    # past pages_per_slot); kept positions are < max_len, so in range
+    lp = jnp.broadcast_to(jnp.minimum(t // pg, p - 1)[None, :], (b, s))
+    phys = jnp.take_along_axis(cache["table"], lp, axis=1)  # (B, S)
+    phys = jnp.where(keep & (phys >= 0), phys, n_pages)  # OOB -> dropped
+    off = jnp.broadcast_to((t % pg)[None, :], (b, s))
+    out = dict(cache)
+    if "ks" in cache:
+        qk, sk = kv_quantize(k)
+        qv, sv = kv_quantize(v)
+        out["kp"] = kp.at[phys, off].set(qk, mode="drop")
+        out["vp"] = cache["vp"].at[phys, off].set(qv, mode="drop")
+        out["ks"] = cache["ks"].at[phys, off].set(sk, mode="drop")
+        out["vs"] = cache["vs"].at[phys, off].set(sv, mode="drop")
+    else:
+        out["kp"] = kp.at[phys, off].set(k.astype(kp.dtype), mode="drop")
+        out["vp"] = cache["vp"].at[phys, off].set(
+            v.astype(kp.dtype), mode="drop"
+        )
+    out["pos"] = jnp.broadcast_to(
+        lengths.astype(jnp.int32), cache["pos"].shape
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SSM state pool gather/scatter
+# ---------------------------------------------------------------------------
+
+
+def ssm_gather(cache: dict[str, jax.Array]):
+    """Pool -> per-slot dense {"ssd","conv"} view + a scatter-back closure.
+
+    Works on unstacked (hybrid per-layer) and layer-stacked (pure-SSM
+    scan) pools; the state-page index ``sidx`` is identical across
+    layers, so the stacked form reads layer 0's copy. Slots without a
+    state page (-1) read page 0 — their lanes are inactive and the
+    engine's merge discards whatever they compute — and scatter to an
+    out-of-bounds sentinel (dropped).
+    """
+    stacked = cache["sidx"].ndim == 2
+    sidx = cache["sidx"][0] if stacked else cache["sidx"]
+    ns = cache["ssdp"].shape[1 if stacked else 0]
+    gi = jnp.maximum(sidx, 0)
+    if stacked:
+        dense = {"ssd": cache["ssdp"][:, gi], "conv": cache["convp"][:, gi]}
+    else:
+        dense = {"ssd": cache["ssdp"][gi], "conv": cache["convp"][gi]}
+    tgt = jnp.where(sidx >= 0, sidx, ns)  # OOB -> dropped
+
+    def put(new: dict[str, jax.Array]) -> dict[str, jax.Array]:
+        ssd = new["ssd"].astype(cache["ssdp"].dtype)
+        conv = new["conv"].astype(cache["convp"].dtype)
+        if stacked:
+            return {
+                "ssdp": cache["ssdp"].at[:, tgt].set(ssd, mode="drop"),
+                "convp": cache["convp"].at[:, tgt].set(conv, mode="drop"),
+                "sidx": cache["sidx"],
+            }
+        return {
+            "ssdp": cache["ssdp"].at[tgt].set(ssd, mode="drop"),
+            "convp": cache["convp"].at[tgt].set(conv, mode="drop"),
+            "sidx": cache["sidx"],
+        }
+
+    return dense, put
+
+
+# ---------------------------------------------------------------------------
+# merge / table plumbing (slot isolation on the pool layout)
+# ---------------------------------------------------------------------------
+
+
+def paged_merge(
+    old: dict[str, jax.Array], new: dict[str, jax.Array], active: jax.Array
+) -> dict[str, jax.Array]:
+    """Slot-isolation merge for one paged cache node.
+
+    Dense caches merge per batch lane; pools merge per *page*: a pool
+    page takes the freshly computed state iff an active slot owns it in
+    the OLD table (the table is engine-owned — ``set_tables`` is its
+    only writer, so old and new agree and old is authoritative). Pages
+    owned by inactive slots — and free pages — are reverted, which is
+    exactly the bit-identical-lane invariant the dense merge provides.
+    ``pos`` merges per lane; ``table``/``sidx`` pass through from old.
+    """
+    out = dict(old)
+    if "kp" in old:
+        stacked = old["table"].ndim == 3
+        table = old["table"][0] if stacked else old["table"]
+        n_pages = old["kp"].shape[1 if stacked else 0]
+        owned = jnp.where(active[:, None], table, -1).reshape(-1)
+        mask = jnp.zeros((n_pages,), bool).at[
+            jnp.where(owned >= 0, owned, n_pages)
+        ].set(True, mode="drop")
+        ax = 1 if stacked else 0
+        for key in ("kp", "vp", "ks", "vs"):
+            if key in old:
+                o = old[key]
+                m = mask.reshape(
+                    (1,) * ax + (n_pages,) + (1,) * (o.ndim - ax - 1)
+                )
+                out[key] = jnp.where(m, new[key], o)
+        amask = active[None, :] if stacked else active
+        out["pos"] = jnp.where(amask, new["pos"], old["pos"])
+        out["table"] = old["table"]
+        return out
+    stacked = old["sidx"].ndim == 2
+    sidx = old["sidx"][0] if stacked else old["sidx"]
+    ns = old["ssdp"].shape[1 if stacked else 0]
+    owned = jnp.where(active, sidx, -1)
+    mask = jnp.zeros((ns,), bool).at[
+        jnp.where(owned >= 0, owned, ns)
+    ].set(True, mode="drop")
+    ax = 1 if stacked else 0
+    for key in ("ssdp", "convp"):
+        o = old[key]
+        m = mask.reshape((1,) * ax + (ns,) + (1,) * (o.ndim - ax - 1))
+        out[key] = jnp.where(m, new[key], o)
+    out["sidx"] = old["sidx"]
+    return out
+
+
+def set_tables(
+    caches: Any, table, sidx: Optional[Any] = None
+) -> Any:
+    """Install the host-side page table / state-page index device-wide.
+
+    Walks the cache pytree and swaps the ``table`` (and ``sidx``) leaf of
+    every paged node, broadcasting to stacked (L, ...) shapes. Called by
+    the engine at admission (after allocation) and before lazy per-step
+    page allocation takes effect.
+    """
+    tab = jnp.asarray(table, jnp.int32)
+    sx = None if sidx is None else jnp.asarray(sidx, jnp.int32)
+
+    def fix(node):
+        if not is_paged(node):
+            return node
+        node = dict(node)
+        if "table" in node:
+            node["table"] = jnp.broadcast_to(tab, node["table"].shape)
+        if "sidx" in node and sx is not None:
+            node["sidx"] = jnp.broadcast_to(sx, node["sidx"].shape)
+        return node
+
+    return jax.tree_util.tree_map(fix, caches, is_leaf=is_paged)
+
+
+def cache_nbytes(caches: Any) -> int:
+    """Total cache footprint in bytes (the benchmark's memory metric)."""
+    return sum(
+        int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree_util.tree_leaves(caches)
+        if hasattr(leaf, "size")
+    )
