@@ -138,11 +138,19 @@ def bench_kernels(quick: bool = False) -> list[dict]:
                 row["onepass_us"] = "refused"
             rows.append(row)
 
-    # policy x sparse-storage composition: the nm: kernel family vs the
-    # dense kernels on the same (decompressed) weights — parity asserted,
-    # both timed, plus the compressed-weight HBM ratio (the structural
-    # platform truth; interpret-mode wall-times seed the trajectory only)
-    for policy, n_keep, mg in (("clip", 4, 16), ("sorted_tiled", 4, 16)):
+    # policy x sparse-storage composition: both nm kernel families — the
+    # one-hot expand oracle and the fused activation-gather — against the
+    # dense kernels on the same (decompressed) weights. Three-way parity
+    # asserted, all three timed, plus the compressed-weight HBM ratio
+    # (the structural platform truth; interpret-mode wall-times seed the
+    # trajectory only, but gather's n_keep/m work reduction shows up even
+    # there: the contraction narrows from K to G*n_keep elements)
+    # 2:4 rides on sorted_tiled: the gather win there is structural (the
+    # resident sort cube shrinks by m/n_keep), so it shows even in
+    # interpret mode, where clip's thinner 2x stepwise saving drowns in
+    # per-element gather overhead
+    for policy, n_keep, mg in (("clip", 4, 16), ("sorted_tiled", 4, 16),
+                               ("sorted_tiled", 2, 4)):
         m, n, k = (16, 16, 1024)
         wd = rng.integers(-127, 127, (n, k)).astype(np.int8)
         mask = np.asarray(
@@ -152,19 +160,26 @@ def bench_kernels(quick: bool = False) -> list[dict]:
         x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
         w = jnp.asarray(wd)
         base = dict(policy=policy, acc_bits=16, k_tile=k_tile, bm=bm, bn=bn)
+        nm_base = dict(m_group=mg, policy=policy, acc_bits=16,
+                       k_tile=k_tile, bm=bm, bn=bn)
         dense_us = _time_us(lambda: ops.policy_matmul(x, w, **base), reps)
-        nm_us = _time_us(lambda: ops.nm_policy_matmul(
-            x, vals, idx, m_group=mg, policy=policy, acc_bits=16,
-            k_tile=k_tile, bm=bm, bn=bn), reps)
+        expand_us = _time_us(lambda: ops.nm_policy_matmul(
+            x, vals, idx, nm_impl="expand", **nm_base), reps)
+        gather_us = _time_us(lambda: ops.nm_policy_matmul(
+            x, vals, idx, nm_impl="gather", **nm_base), reps)
         out_d = ops.policy_matmul(x, w, **base)
-        out_s = ops.nm_policy_matmul(x, vals, idx, m_group=mg,
-                                     policy=policy, acc_bits=16,
-                                     k_tile=k_tile, bm=bm, bn=bn)
-        assert (np.asarray(out_d) == np.asarray(out_s)).all(), policy
+        for impl in ("expand", "gather"):
+            out_s = ops.nm_policy_matmul(x, vals, idx, nm_impl=impl,
+                                         **nm_base)
+            assert (np.asarray(out_d) == np.asarray(out_s)).all(), (
+                policy, impl)
         rows.append({
-            "policy": f"nm:{policy}", "m": m, "n": n, "k": k,
+            # sparsity pattern in the label: the same policy benched at
+            # two (n_keep, m) patterns must not collide on the row key
+            "policy": f"nm:{policy}:{n_keep}:{mg}", "m": m, "n": n, "k": k,
             "blocks": f"{bm}x{bn}x{k_tile}",
-            "nm_us": round(nm_us),
+            "nm_expand_us": round(expand_us),
+            "nm_gather_us": round(gather_us),
             "dense_us": round(dense_us),
             "weight_bytes_vs_dense": round(2 * n_keep / mg, 3),
         })
@@ -237,11 +252,19 @@ def bench_kernels(quick: bool = False) -> list[dict]:
         autotune.reset()
 
     keys = ["policy", "m", "n", "k", "blocks", "k_shards", "onepass_us",
-            "twopass_us", "onepass_vmem_kib", "twopass_vmem_kib", "nm_us",
-            "dense_us", "weight_bytes_vs_dense", "kshard_us", "full_us",
+            "twopass_us", "onepass_vmem_kib", "twopass_vmem_kib",
+            "nm_expand_us", "nm_gather_us", "dense_us",
+            "weight_bytes_vs_dense", "kshard_us", "full_us",
             "static_us", "tuned_us", "tuned_blocks"]
     emit("BENCH_kernels", rows, keys)
     return rows
+
+
+# In-run cross-column guard: the fused gather kernel must not lose to
+# the expand oracle it replaces at the shapes we bench. Both columns come
+# from the SAME run on the same machine, so the slack only has to absorb
+# timer jitter, not machine drift — much tighter than ``tolerance``.
+GATHER_SLACK = 1.25
 
 
 def check_against(
@@ -255,8 +278,11 @@ def check_against(
     stopped being benched is itself a regression, not a skip. Rows and
     fields absent from the baseline are ignored (new kernels don't fail
     the guard — regenerate the baseline to start tracking them).
-    Returns the list of regressions: (key, field, baseline_us, now_us)
-    where now_us may be a non-numeric marker.
+    Additionally every fresh nm row timing both implementations must
+    show ``nm_gather_us <= GATHER_SLACK * nm_expand_us`` (reported as
+    field ``nm_gather_vs_expand``) — sparsity has to pay in wall time,
+    not only in bytes. Returns the list of regressions: (key, field,
+    baseline_us, now_us) where now_us may be a non-numeric marker.
     """
     import json
 
@@ -287,6 +313,11 @@ def check_against(
                                     "missing" if val is None else val))
             elif val > tolerance * bv:
                 regressions.append((key(b), field, bv, val))
+    for r in rows:
+        ge, ex = r.get("nm_gather_us"), r.get("nm_expand_us")
+        if (isinstance(ge, (int, float)) and isinstance(ex, (int, float))
+                and ex > 0 and ge > GATHER_SLACK * ex):
+            regressions.append((key(r), "nm_gather_vs_expand", ex, ge))
     return regressions
 
 

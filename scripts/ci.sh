@@ -98,7 +98,8 @@ shard_stage() {
     REPRO_FORCE_MULTIDEVICE=8 python -m pytest -x -q \
         tests/test_sharded_dispatch.py \
         "tests/test_nm_policy.py::test_nm_sharded_bit_identical" \
-        "tests/test_nm_policy.py::test_nm_sharded_census_counts_once"
+        "tests/test_nm_policy.py::test_nm_sharded_census_counts_once" \
+        "tests/test_nm_policy.py::test_nm_gather_sharded_k_axis"
 }
 
 smoke_stage() {

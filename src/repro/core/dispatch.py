@@ -169,6 +169,7 @@ def _local_dot(
     with_census: bool,
     storage: str = "dense",
     m_group: Optional[int] = None,
+    nm_impl: Optional[str] = None,
 ) -> tuple[jax.Array, Optional[Census]]:
     """Single-device policy matmul on pre-padded operands (+census).
 
@@ -176,9 +177,11 @@ def _local_dot(
     jnp backend decompresses to the dense reference semantics (padded
     to the same Kp the dense path would use — zero columns are inert);
     the pallas backend runs ``ops.nm_policy_matmul`` directly on the
-    compressed slabs. The census is computed from the KEPT-ONLY partial
-    products (``overflow.nm_partial_products``) for both backends —
-    bit-identical counts at n_keep/m of the unrolled memory.
+    compressed slabs (``nm_impl`` selecting expand vs fused gather —
+    bit-identical either way). The census is computed from the
+    KEPT-ONLY partial products (``overflow.nm_partial_products``) for
+    both backends and both impls — bit-identical counts at n_keep/m of
+    the unrolled memory.
     """
     m = x2.shape[0]
     chunk = m if (batch_chunk is None or batch_chunk >= m) else batch_chunk
@@ -206,7 +209,7 @@ def _local_dot(
                     xc, w[0], w[1], m_group=m_group, policy=policy,
                     acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
                     bm=block_m, bn=block_n, sort_impl=sort_impl,
-                    interpret=interpret,
+                    nm_impl=nm_impl, interpret=interpret,
                 )
             )
         elif backend == "jnp":
@@ -257,6 +260,7 @@ def _kshard_dot(
     batch_chunk: Optional[int],
     storage: str = "dense",
     m_group: Optional[int] = None,
+    nm_impl: Optional[str] = None,
 ) -> tuple[jax.Array, Optional[Census]]:
     """Single-device hierarchical K-sharded dot (and the mesh oracle).
 
@@ -300,7 +304,8 @@ def _kshard_dot(
                     xc, w[0], w[1], m_group=m_group, k_shards=k_shards,
                     policy=policy, acc_bits=acc_bits, k_tile=k_tile,
                     rounds=rounds, bm=block_m, bn=block_n,
-                    sort_impl=sort_impl, interpret=interpret,
+                    sort_impl=sort_impl, nm_impl=nm_impl,
+                    interpret=interpret,
                 )
             else:
                 parts = ops.partial_policy_matmul(
@@ -449,6 +454,7 @@ def pqs_dot(
     k_axis: Optional[str] = None,
     storage: str = "dense",
     m_group: Optional[int] = None,
+    nm_impl: Optional[str] = None,
 ):
     """Quantized dot products with simulated narrow accumulation.
 
@@ -471,10 +477,14 @@ def pqs_dot(
     ``(values, indices)`` pair plus ``m_group=``) and the pallas backend
     runs the policy directly on the compressed slabs
     (``kernels.ops.nm_policy_matmul`` — G is padded instead of K); the
-    jnp backend decompresses to the dense reference. Results — census
-    included (counted over the KEPT partial products only) — are
-    bit-identical to ``nm_decompress`` followed by this function on the
-    dense matrix.
+    jnp backend decompresses to the dense reference. ``nm_impl``
+    (default ``REPRO_PQS_NM_IMPL``, then ``auto``) selects the Pallas
+    implementation: ``expand`` (one-hot expand to dense in VMEM, the
+    oracle) or ``gather`` (contract only the kept products — n_keep/m
+    of the FLOPs); ``auto`` picks gather wherever it saves work.
+    Results — census included (counted over the KEPT partial products
+    only) — are bit-identical to ``nm_decompress`` followed by this
+    function on the dense matrix, for either implementation.
 
     With ``mesh`` (a ``jax.sharding.Mesh``), the dot executes under
     ``shard_map``: M sharded over ``m_axes`` (default: the mesh's data
@@ -499,6 +509,12 @@ def pqs_dot(
     ``wide``/``wrap`` are exactly order-invariant.
     """
     _validate(policy, backend, acc_bits, k_tile, storage)
+    if nm_impl is not None:
+        if storage != "nm":
+            raise ValueError("nm_impl= is only meaningful with storage='nm'")
+        if nm_impl not in ops.NM_IMPLS:
+            raise ValueError(
+                f"nm_impl must be one of {ops.NM_IMPLS}, got {nm_impl!r}")
     if k_axis is not None:
         if mesh is None:
             raise ValueError("k_axis= needs mesh= (the axis lives on it)")
@@ -602,6 +618,7 @@ def pqs_dot(
         backend=backend, interpret=interpret, block_m=block_m,
         block_n=block_n, sort_impl=sort_impl, batch_chunk=batch_chunk,
         storage=storage, m_group=m_group if storage == "nm" else None,
+        nm_impl=nm_impl if storage == "nm" else None,
     )
     if mesh is not None:
         res = _sharded_dot(
@@ -657,6 +674,7 @@ class IntegerLinConfig:
     k_shards: Optional[int] = None  # K-sharded accumulation (opt-in)
     k_axis: Optional[str] = None  # mesh axis carrying the K shards
     k_shard_min_k: int = 0  # only layers with K >= this take the hierarchy
+    nm_impl: Optional[str] = None  # sparse kernel impl: expand|gather|auto
 
 
 _INT_LIN: list[IntegerLinConfig] = []
@@ -754,6 +772,7 @@ def qtensor_dot(x: jax.Array, qt, cfg: IntegerLinConfig) -> jax.Array:
         backend=cfg.backend, mesh=cfg.mesh, m_axes=cfg.m_axes,
         n_axis=cfg.n_axis, k_shards=ks,
         k_axis=ka if cfg.mesh is not None else None, storage=storage,
+        nm_impl=cfg.nm_impl if sparse else None,
     )
     if cfg.use_static_acts and aq is not None and not aq.symmetric:
         # Eq. (3) offset correction — precomputed at freeze time

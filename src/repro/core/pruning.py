@@ -112,6 +112,18 @@ def nm_compress(w: np.ndarray, n_keep: int, m: int):
     index 0); ``n_keep == m`` stores the matrix dense-as-sparse (exact
     round-trip, no pruning assumption). A group holding MORE than
     n_keep nonzeros would compress lossily, so it raises instead.
+
+    Canonical-form invariant (established HERE, once, at compress time —
+    never re-validated per kernel call): every index lies in [0, m) and
+    indices ascend within each group; every slot whose dense position
+    holds no kept weight — group padding beyond the group's nonzeros AND
+    every tail-group position past the original K — carries value 0.
+    The fused gather kernels (``kernels.nm_spmm.gather_nm_products``)
+    depend on this to skip tail/pad masking entirely: a gathered pad
+    slot multiplies to a zero product, inert through every accumulation
+    policy, whether ``K % m == 0`` (no tail group) or not.
+    ``nm_assert_canonical`` re-checks the invariant on demand (tests,
+    debugging slabs from foreign packers).
     """
     w = np.asarray(w)
     if w.ndim != 2:
@@ -134,6 +146,55 @@ def nm_compress(w: np.ndarray, n_keep: int, m: int):
     order = np.sort(order, axis=-1)  # ascending position for locality
     vals = np.take_along_axis(grouped, order, axis=-1)
     return vals, order.astype(np.int32)
+
+
+def nm_assert_canonical(
+    vals: np.ndarray, idx: np.ndarray, m: int, k: int | None = None
+) -> None:
+    """Assert the compress-time canonical-form invariant of an N:M slab.
+
+    The gather kernels trust — without per-call masks — that a slab
+    satisfies: indices in [0, m), ascending within each group, and value
+    0 in every slot addressing a dense position that holds no kept
+    weight (including, with ``k``, all tail-group positions >= k). This
+    helper is the one place that re-checks it; it is meant for tests and
+    for validating slabs produced outside ``nm_compress`` /
+    ``nm_compress_jax``, NOT for per-call use on hot paths (the packers
+    establish the invariant by construction).
+    """
+    vals = np.asarray(vals)
+    idx = np.asarray(idx)
+    if vals.shape != idx.shape or vals.ndim < 2:
+        raise ValueError(
+            f"expected matching (..., G, n_keep) slabs, got {vals.shape} "
+            f"vs {idx.shape}"
+        )
+    g = vals.shape[-2]
+    if idx.size and (idx.min() < 0 or idx.max() >= m):
+        raise AssertionError(
+            f"indices out of range [0, {m}): [{idx.min()}, {idx.max()}]")
+    if idx.shape[-1] > 1:
+        d = np.diff(idx, axis=-1)
+        dup = d == 0
+        # padded (value 0, index 0) slots legitimately repeat index 0;
+        # a duplicated index is only canonical if its value slot is 0
+        if (d < 0).any() or (dup & (np.take(vals, range(1, idx.shape[-1]),
+                                            axis=-1) != 0)).any():
+            raise AssertionError(
+                "indices must ascend within each group (padded slots "
+                "carry value 0)")
+    if k is not None:
+        k_dense = g * m
+        if not 0 < k <= k_dense:
+            raise ValueError(f"k={k} out of range (0, {k_dense}]")
+        base = (np.arange(g, dtype=np.int64) * m).reshape(
+            (1,) * (idx.ndim - 2) + (g, 1))
+        dense_pos = idx.astype(np.int64) + base
+        beyond = dense_pos >= k
+        if (np.asarray(vals)[beyond] != 0).any():
+            raise AssertionError(
+                f"tail positions >= k={k} must carry value 0 (the "
+                "ragged-tail zero-pad invariant)")
 
 
 def nm_decompress(

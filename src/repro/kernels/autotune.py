@@ -28,7 +28,15 @@ Cache file: ``REPRO_PQS_AUTOTUNE_CACHE`` or
 ``{"version": 1, "entries": {"<policy>|<platform>|MxNxK": {"bm", "bn",
 "bk", "us"}}}`` — ``bk`` is null for policies whose K depth is semantic
 (``sorted_tiled_seq``, where bk IS the paper's k_tile) or slab-resident
-(the global-sort policies).
+(the global-sort policies). The compressed-storage families (``nm:``
+expand, ``nmg:`` gather) key their shape part on the COMPRESSED
+geometry instead of dense K: ``MxNxgGmMGkNK`` (bucketed group count G,
+literal m_group and n_keep), because their grids and VMEM footprints
+are sized by (G, n_keep) — two layers with equal dense K but different
+sparsity do not share a winner. Migration: entries for nm families
+written under the old dense-K key shape are silently invalid; ``_read``
+drops them (with a one-time warning) so they re-tune under the new key
+and vanish from disk on the next persist.
 
 Tuning is skipped (readonly behavior) under a jit trace — timing a
 tracer is meaningless — and measured times are wall-clock with
@@ -43,6 +51,7 @@ import os
 import tempfile
 import threading
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -70,7 +79,18 @@ CANDIDATES: dict[str, tuple[tuple[int, int, Optional[int]], ...]] = {
     "nm:sorted": ((8, 128, None), (4, 128, None)),
     "nm:sorted_tiled": ((8, 128, None), (4, 128, None)),
     "nm:sorted_tiled_seq": ((8, 128, None), (16, 128, None)),
+    # nmg: fused-gather family — products per step shrink to bg*n_keep,
+    # so deeper group blocks amortize the gather's index arithmetic
+    "nmg:wide": ((128, 128, 32), (64, 128, 32), (128, 128, 64)),
+    "nmg:clip": ((8, 128, 16), (16, 128, 16), (8, 128, 32)),
+    "nmg:wrap": ((8, 128, 16), (16, 128, 16), (8, 128, 32)),
+    "nmg:sorted": ((8, 128, None), (4, 128, None)),
+    "nmg:sorted_tiled": ((8, 128, None), (4, 128, None)),
+    "nmg:sorted_tiled_seq": ((8, 128, None), (16, 128, None)),
 }
+
+# kernel families whose autotune keys carry compressed geometry
+_NM_FAMILY_PREFIXES = ("nm:", "nmg:")
 
 _MEMO: dict[str, Optional[dict]] = {}  # key -> winning entry (in-process)
 _DISK: dict[str, dict] = {}  # path -> loaded entries
@@ -134,17 +154,58 @@ def _bucket(v: int) -> int:
     return 1 if v <= 1 else 1 << (v - 1).bit_length()
 
 
-def shape_key(policy: str, platform: str, m: int, n: int, kp: int) -> str:
+def shape_key(policy: str, platform: str, m: int, n: int, kp: int,
+              nm: Optional[tuple[int, int, int]] = None) -> str:
+    """Cache key for one (policy, platform, shape-bucket).
+
+    Dense families bucket on (M, N, padded K). The compressed families
+    MUST pass ``nm=(m_group, n_keep, G)``: their grids are sized by the
+    group count and slab width, so the key carries ``gGmMGkNK``
+    (bucketed G, literal m_group/n_keep) in place of the dense-K slot —
+    equal dense K with different sparsity must not share a winner.
+    """
+    if nm is not None:
+        m_group, n_keep, g = nm
+        return (f"{policy}|{platform}|{_bucket(m)}x{_bucket(n)}x"
+                f"g{_bucket(g)}m{m_group}k{n_keep}")
     return (f"{policy}|{platform}|"
             f"{_bucket(m)}x{_bucket(n)}x{_bucket(kp)}")
 
 
+_WARNED_STALE = False
+
+
+def _is_stale(key: str) -> bool:
+    """True for nm-family entries written under the pre-gather dense-K
+    key shape (no ``xg`` marker) — their blocks were tuned against a
+    grid the kernel no longer launches."""
+    if not key.startswith(_NM_FAMILY_PREFIXES):
+        return False
+    return "xg" not in key.rsplit("|", 1)[-1]
+
+
 def _read(path: str) -> dict:
+    global _WARNED_STALE
     try:
         with open(path) as f:
-            return json.load(f).get("entries", {})
+            entries = json.load(f).get("entries", {})
     except (OSError, ValueError):
         return {}
+    stale = [k for k in entries if _is_stale(k)]
+    if stale:
+        for k in stale:
+            del entries[k]
+        if not _WARNED_STALE:
+            _WARNED_STALE = True
+            warnings.warn(
+                f"autotune cache {path}: dropped {len(stale)} stale "
+                "nm-family entr(ies) keyed on dense K; compressed "
+                "kernels now key on (m_group, n_keep, G) and will "
+                "re-tune (the stale keys disappear from disk on the "
+                "next persist)",
+                stacklevel=3,
+            )
+    return entries
 
 
 def _load(path: str) -> dict:
@@ -194,6 +255,7 @@ def best_blocks(
     platform: Optional[str] = None,
     runner: Optional[Callable[[int, int, Optional[int]], jax.Array]] = None,
     tracing: bool = False,
+    nm: Optional[tuple[int, int, int]] = None,
 ) -> Optional[tuple[int, int, Optional[int]]]:
     """(bm, bn, bk) for this shape bucket, or None (caller falls back).
 
@@ -201,7 +263,9 @@ def best_blocks(
     blocks (``ops.policy_matmul`` passes a closure over its actual
     operands, so the measurement includes its padding). Only consulted
     in tune mode; readonly mode (and tune mode under a jit trace, when
-    ``tracing``) answers purely from the cache.
+    ``tracing``) answers purely from the cache. Compressed-family
+    callers pass ``nm=(m_group, n_keep, G)`` so the key reflects the
+    launched grid (see ``shape_key``).
 
     Tune-mode misses never measure inline: the measurement is scheduled
     on a background thread and THIS call answers None immediately (the
@@ -213,7 +277,7 @@ def best_blocks(
     if md == "off":
         return None
     platform = platform or jax.default_backend()
-    key = shape_key(policy, platform, m, n, kp)
+    key = shape_key(policy, platform, m, n, kp, nm=nm)
     with _LOCK:
         if key in _MEMO:
             e = _MEMO[key]

@@ -33,6 +33,22 @@ POLICIES = _sm.SEQ_POLICIES + _sm.SORT_POLICIES
 # the N:M compressed-storage kernel family tunes/blocks independently of
 # the dense kernels (different VMEM mix: one-hot expand slab vs dense w)
 NM_POLICIES = tuple(f"nm:{p}" for p in POLICIES)
+# the fused activation-gather implementation is its own family again:
+# its working set scales with G*n_keep (compressed), not G*m (dense),
+# so the blocks that win differ from both the dense and expand kernels
+NM_GATHER_POLICIES = tuple(f"nmg:{p}" for p in POLICIES)
+
+# N:M kernel implementation selection (see resolve_nm_impl):
+#   expand — one-hot expand the compressed slab to dense in VMEM and run
+#            the dense kernel bodies (the bit-exactness oracle; full
+#            dense-K MXU work, saves HBM bytes only)
+#   gather — gather the kept activation entries per m-group and contract
+#            only n_keep/m of the products (saves FLOPs; VPU-flavored)
+#   auto   — gather wherever it can win, expand where it cannot
+NM_IMPLS = ("auto", "expand", "gather")
+# below this many groups the whole contraction is a handful of columns;
+# expand's single dense dot beats gather's index arithmetic
+GATHER_MIN_G = 8
 
 # Largest K the compiled (non-interpret) LEGACY one-pass sort kernel may
 # keep VMEM-resident: 8 * 128 * 4096 * 4 B = 16 MiB for the product cube.
@@ -71,6 +87,16 @@ _BLOCK_TABLE: dict[str, dict[str, tuple[int, int]]] = {
         "nm:sorted": (8, 128),
         "nm:sorted_tiled": (8, 128),
         "nm:sorted_tiled_seq": (8, 128),
+        # nmg: family — gather kernels are VPU gather-multiply bound with
+        # an n_keep/m-sized product set; wide still wants the big tile
+        # (its reduce is one lane-sum), the stepwise policies keep the
+        # minimal f32 tile
+        "nmg:wide": (128, 128),
+        "nmg:clip": (8, 128),
+        "nmg:wrap": (8, 128),
+        "nmg:sorted": (8, 128),
+        "nmg:sorted_tiled": (8, 128),
+        "nmg:sorted_tiled_seq": (8, 128),
     },
     # CPU/GPU run interpret mode; block shape only affects grid overhead
     "cpu": {"*": (8, 128)},
@@ -110,10 +136,11 @@ def env_blocks(policy: str) -> tuple[int, int] | None:
                 f"{_BLOCKS_SYNTAX}; bad entry {entry!r} in {env!r}"
             ) from e
         if name:
-            if name not in POLICIES + NM_POLICIES:
+            known = POLICIES + NM_POLICIES + NM_GATHER_POLICIES
+            if name not in known:
                 raise ValueError(
                     f"{_BLOCKS_SYNTAX}; unknown policy {name!r} in {env!r} "
-                    f"(expected one of {POLICIES + NM_POLICIES})"
+                    f"(expected one of {known})"
                 )
             per_policy[name] = (bm, bn)
         else:
@@ -226,15 +253,54 @@ def resolve_sort_impl(kp: int, interpret: bool,
     return sort_impl
 
 
-def _blocks_for(policy, m, n, kp, runner, tracing):
+def resolve_nm_impl(policy: str, g: int, n_keep: int, m_group: int,
+                    nm_impl: str | None = None) -> str:
+    """Which N:M kernel implementation serves a compressed matmul.
+
+    Explicit ``nm_impl`` (or ``REPRO_PQS_NM_IMPL``) wins; ``auto`` picks
+    ``gather`` wherever the kept-product contraction can actually save
+    work and falls back to ``expand`` when it cannot:
+
+    * ``n_keep >= m_group`` — dense-as-sparse storage: every product is
+      kept, gathering reorders full-dense work for no gain;
+    * ``policy == "wide"`` — the exact wide sum is a single dense MXU
+      dot under expand; a VPU gather-multiply-reduce over n_keep/m of
+      the products does not beat the systolic array until sparsity is
+      far higher than N:M configurations provide;
+    * ``g < GATHER_MIN_G`` — a handful of groups: gather's index
+      arithmetic costs more than the few columns it skips.
+    """
+    impl = nm_impl
+    if impl is None:
+        impl = os.environ.get("REPRO_PQS_NM_IMPL", "auto").strip().lower()
+        impl = impl or "auto"
+    if impl not in NM_IMPLS:
+        raise ValueError(
+            f"nm_impl (REPRO_PQS_NM_IMPL) must be one of {NM_IMPLS}, "
+            f"got {impl!r}"
+        )
+    if impl != "auto":
+        return impl
+    if n_keep >= m_group:
+        return "expand"
+    if policy == "wide":
+        return "expand"
+    if g < GATHER_MIN_G:
+        return "expand"
+    return "gather"
+
+
+def _blocks_for(policy, m, n, kp, runner, tracing, nm=None):
     """bm, bn, bk resolution: env override > autotune (when enabled) >
-    static table. bk is only tunable for the free-depth seq policies."""
+    static table. bk is only tunable for the free-depth seq policies.
+    ``nm`` carries (m_group, n_keep, G) for the compressed families so
+    the autotune cache keys on the work actually launched."""
     env = env_blocks(policy)
     if env:
         return env[0], env[1], None
     if autotune.mode() != "off":
         tuned = autotune.best_blocks(policy, m, n, kp, runner=runner,
-                                     tracing=tracing)
+                                     tracing=tracing, nm=nm)
         if tuned:
             return tuned
     dbm, dbn = default_blocks(policy)
@@ -380,14 +446,18 @@ def nm_partial_policy_matmul(
     bm: int | None = None,
     bn: int | None = None,
     sort_impl: str = "auto",
+    nm_impl: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """``partial_policy_matmul`` on N:M compressed storage.
 
     K shards in units of whole groups (the caller pads G to a k_shards
     multiple with g_local * m_group a policy-padded length), so a
-    shard's slab expand never crosses a shard boundary and each slice
-    runs the unchanged ``nm_policy_matmul`` body.
+    shard's slab expand/gather never crosses a shard boundary and each
+    slice runs the unchanged ``nm_policy_matmul`` body. ``nm_impl``
+    selects expand vs gather per slice (``auto`` resolves against the
+    LOCAL G, so very small shards may individually fall back to expand
+    — bit-identical either way).
     """
     g = values.shape[1]
     if k_shards < 1 or g % k_shards:
@@ -404,7 +474,7 @@ def nm_partial_policy_matmul(
             indices[:, s * g_local : (s + 1) * g_local],
             m_group=m_group, policy=policy, acc_bits=acc_bits,
             k_tile=k_tile, rounds=rounds, bm=bm, bn=bn,
-            sort_impl=sort_impl, interpret=interpret,
+            sort_impl=sort_impl, nm_impl=nm_impl, interpret=interpret,
         )
         for s in range(k_shards)
     ]
@@ -425,20 +495,33 @@ def nm_policy_matmul(
     bn: int | None = None,
     bg: int | None = None,
     sort_impl: str = "auto",
+    nm_impl: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Every accumulation policy directly on N:M compressed storage.
 
     The sparse sibling of ``policy_matmul``: same (M, N) int32 contract,
     same padding discipline, but the weight operand never exists dense
-    in HBM — the kernels expand (bn, bg, n_keep) slabs in VMEM. Padding
-    happens on the GROUP axis (G) instead of K: groups pad to ``bg``
-    blocks (tiled policies pin ``bg * m_group = k_tile`` so tile
+    in HBM. Two implementations serve it (``nm_impl`` /
+    ``REPRO_PQS_NM_IMPL``, resolved by ``resolve_nm_impl``):
+
+    * ``expand`` one-hot expands (bn, bg, n_keep) slabs to dense blocks
+      in VMEM and runs the unchanged dense kernel bodies — the
+      bit-exactness oracle, full dense-K work;
+    * ``gather`` gathers the kept activation entries per m-group and
+      contracts only the (bm, bn, bg*n_keep) kept products — n_keep/m
+      of the work, bit-identical by the zero-product prefix property
+      (see ``kernels/nm_spmm.py``).
+
+    Padding happens on the GROUP axis (G) instead of K: groups pad to
+    ``bg`` blocks (tiled policies pin ``bg * m_group = k_tile`` so tile
     boundaries coincide with the dense kernels'), and zero-padded
-    groups expand to zero columns — additively inert through every
-    policy, so results are bit-identical to ``nm_decompress`` followed
-    by dense ``policy_matmul``. Blocks resolve under the ``nm:`` kernel
-    family (``REPRO_PQS_BLOCKS``, autotune, ``_BLOCK_TABLE``).
+    groups expand/gather to zero products — additively inert through
+    every policy, so results are bit-identical to ``nm_decompress``
+    followed by dense ``policy_matmul``. Blocks resolve under the
+    ``nm:`` (expand) or ``nmg:`` (gather) kernel family
+    (``REPRO_PQS_BLOCKS``, autotune, ``_BLOCK_TABLE``), keyed on the
+    compressed geometry ``(m_group, n_keep, G)`` rather than dense K.
     """
     assert policy in POLICIES, policy
     interpret = (not _on_tpu()) if interpret is None else interpret
@@ -450,7 +533,7 @@ def nm_policy_matmul(
     if values.ndim != 3:
         raise ValueError(f"expected (N, G, n_keep) slabs, got {values.shape}")
     m = x.shape[0]
-    n, g, _ = values.shape
+    n, g, n_keep = values.shape
     k_dense = g * m_group
     if x.shape[1] > k_dense:
         raise ValueError(
@@ -466,7 +549,8 @@ def nm_policy_matmul(
             f"k_tile={k_tile}, m_group={m_group}"
         )
     kp = padded_k(k_dense, policy, k_tile)
-    fam = f"nm:{policy}"
+    impl = resolve_nm_impl(policy, g, n_keep, m_group, nm_impl)
+    fam = f"nmg:{policy}" if impl == "gather" else f"nm:{policy}"
     if bm is None and bn is None:
 
         def _runner(cbm, cbn, cbg):
@@ -474,11 +558,12 @@ def nm_policy_matmul(
                 x, values, indices, m_group=m_group, policy=policy,
                 acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
                 bm=cbm, bn=cbn, bg=cbg, sort_impl=sort_impl,
-                interpret=interpret,
+                nm_impl=impl, interpret=interpret,
             )
 
         bm, bn, abg = _blocks_for(fam, m, n, kp, _runner,
-                                  tracing=isinstance(x, jax.core.Tracer))
+                                  tracing=isinstance(x, jax.core.Tracer),
+                                  nm=(m_group, n_keep, g))
         bg = abg if bg is None else bg
     elif bm is None or bn is None:
         dbm, dbn = default_blocks(fam)
@@ -488,7 +573,7 @@ def nm_policy_matmul(
     vp = _pad_to(values, bn, 0)
     ip = _pad_to(indices, bn, 0)
     if policy in _sm.SORT_POLICIES:
-        impl = resolve_sort_impl(kp, interpret, sort_impl)
+        simpl = resolve_sort_impl(kp, interpret, sort_impl)
         if policy == "sorted_tiled":
             # pad G so the compressed groups cover exactly kp columns —
             # the tiled kernels then never need an in-kernel column pad
@@ -497,14 +582,18 @@ def nm_policy_matmul(
                 vp = jnp.pad(vp, ((0, 0), (0, gp - g), (0, 0)))
                 ip = jnp.pad(ip, ((0, 0), (0, gp - g), (0, 0)))
         xp = _pad_to(xp, kp, 1)
-        if impl == "onepass":
-            out = _nm.nm_sort_matmul(
+        if simpl == "onepass":
+            fn = (_nm.nm_gather_sort_matmul if impl == "gather"
+                  else _nm.nm_sort_matmul)
+            out = fn(
                 xp, vp, ip, policy=policy, acc_bits=acc_bits,
                 k_tile=k_tile, rounds=rounds, m_group=m_group,
                 bm=bm, bn=bn, interpret=interpret,
             )
         else:
-            out = _ss.nm_stream_sort_matmul(
+            fn = (_ss.nm_gather_stream_sort_matmul if impl == "gather"
+                  else _ss.nm_stream_sort_matmul)
+            out = fn(
                 _as_int8(xp), vp, ip, policy=policy, acc_bits=acc_bits,
                 k_tile=k_tile, rounds=rounds, m_group=m_group,
                 bm=bm, bn=bn, interpret=interpret,
@@ -519,7 +608,9 @@ def nm_policy_matmul(
             vp = jnp.pad(vp, ((0, 0), (0, g_pad), (0, 0)))
             ip = jnp.pad(ip, ((0, 0), (0, g_pad), (0, 0)))
             xp = _pad_to(xp, (g + g_pad) * m_group, 1)
-        out = _nm.nm_seq_policy_matmul(
+        fn = (_nm.nm_gather_seq_policy_matmul if impl == "gather"
+              else _nm.nm_seq_policy_matmul)
+        out = fn(
             xp, vp, ip, policy=policy, acc_bits=acc_bits, rounds=rounds,
             m_group=m_group, bm=bm, bn=bn, bg=bg, interpret=interpret,
         )

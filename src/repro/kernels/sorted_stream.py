@@ -63,7 +63,12 @@ from jax.experimental import pallas as pl
 
 from repro.core.sorted_accum import pair_permutation
 from repro.kernels.bitonic import sorted_order_bitonic
-from repro.kernels.nm_spmm import expand_nm_slab
+from repro.kernels.nm_spmm import (
+    _next_pow2,
+    expand_nm_slab,
+    gather_nm_products,
+    pad_last_pow2,
+)
 from repro.kernels.sorted_matmul import SORT_POLICIES, _stepwise
 
 # Largest (bm, bc, K) int32 product chunk chunked_sort_matmul keeps live
@@ -512,6 +517,268 @@ def nm_stream_sort_matmul(
                                interpret=interpret)
     perm = jax.jit(pair_permutation)(sums)
     return nm_paired_accum_matmul(
+        x, values, indices, perm, acc_bits=acc_bits, k_tile=k_tile,
+        rounds=rounds, m_group=m_group, bm=bm, bn=bn, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused activation-gather variants: never rebuild the dense slab in VMEM
+# ---------------------------------------------------------------------------
+
+
+def _nm_gather_tile_sums_kernel(x_ref, v_ref, i_ref, o_ref, *,
+                                m_group: int):
+    """Pass 1 from kept products only: sum of the gathered (bm, bn,
+    bg*n_keep) products per tile == the dense tile sum exactly (pruned
+    positions contribute zero to any sum), so the downstream pairing
+    permutation is identical to both the dense and expand pipelines'."""
+    xb = x_ref[...].astype(jnp.int32)  # (bm, k_tile)
+    prods = gather_nm_products(xb, v_ref[...], i_ref[...], m_group)
+    o_ref[:, :, 0] = jnp.sum(prods, axis=-1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m_group", "k_tile", "bm", "bn", "interpret")
+)
+def nm_gather_tile_sums(
+    x: jax.Array,  # (M, K) int, K = G * m_group
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    *,
+    m_group: int = 16,
+    k_tile: int = 256,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather twin of ``nm_tile_sums_matmul``: per-k_tile sums from
+    n_keep/m of the products (a VPU gather-multiply-reduce instead of
+    the expand path's dense MXU dot)."""
+    m, k = x.shape
+    n, g, n_keep = values.shape
+    assert k == g * m_group and k % k_tile == 0, (x.shape, values.shape,
+                                                 m_group, k_tile)
+    assert k_tile % m_group == 0, (k_tile, m_group)
+    bg = k_tile // m_group
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    n_tiles = k // k_tile
+    kern = functools.partial(_nm_gather_tile_sums_kernel, m_group=m_group)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, k_tile), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bn, bg, n_keep), lambda i, j, t: (j, t, 0)),
+            pl.BlockSpec((bn, bg, n_keep), lambda i, j, t: (j, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn, 1), lambda i, j, t: (i, j, t)),
+        out_shape=jax.ShapeDtypeStruct((m, n, n_tiles), jnp.int32),
+        interpret=interpret,
+    )(x, values, indices)
+
+
+def _nm_gather_paired_kernel(x_ref, v_ref, i_ref, p_ref, o_ref, *,
+                             acc_bits: int, k_tile: int, rounds: int,
+                             m_group: int):
+    """Pass 2 on kept products: each pair slot gathers its two
+    *compressed* tiles (lc = (k_tile/m)*n_keep kept entries each, the
+    per-element tile indices addressing the flattened (bn, G*n_keep)
+    slab), pow2-pads, sorts, interleaves and stepwise-accumulates.
+
+    Bit-exact vs the expand path because each sorted padded kept tile is
+    the sorted dense tile's nonzero-covering prefix (positives descend /
+    negatives ascend identically; the dense tail past the kept count is
+    all zeros) and interleaved zero pairs are stepwise-inert.
+    """
+    xb = x_ref[...].astype(jnp.int32)  # (bm, kp) slab
+    vals = v_ref[...]  # (bn, G, n_keep)
+    idx = i_ref[...]
+    pm = p_ref[...]  # (bm, bn, n_tiles)
+    bn, g, n_keep = vals.shape
+    bm = xb.shape[0]
+    n_tiles = pm.shape[-1]
+    lc = (k_tile // m_group) * n_keep  # kept entries per compressed tile
+    base = jax.lax.broadcasted_iota(
+        jnp.int32, (bn, g, n_keep), 1) * m_group
+    posd = (idx.astype(jnp.int32) + base).reshape(bn, g * n_keep)
+    vflat = vals.reshape(bn, g * n_keep).astype(jnp.int32)
+
+    def ctile(t_idx):
+        """(bm, bn) tile indices -> pow2-padded (bm, bn, lp) kept
+        products of that k_tile."""
+        cs = t_idx[:, :, None] * lc + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, lc), 2
+        )  # (bm, bn, lc) offsets into the flat compressed axis
+        cs = jnp.broadcast_to(cs, (bm, bn, lc))
+        wg = jnp.take_along_axis(
+            jnp.broadcast_to(vflat[None], (bm, bn, g * n_keep)), cs, axis=-1)
+        pg = jnp.take_along_axis(
+            jnp.broadcast_to(posd[None], (bm, bn, g * n_keep)), cs, axis=-1)
+        xg = jnp.take_along_axis(
+            jnp.broadcast_to(xb[:, None, :], (bm, bn, xb.shape[1])),
+            pg, axis=-1)
+        return pad_last_pow2(xg * wg)
+
+    lp = _next_pow2(lc)
+
+    def slot(s, acc):
+        pa = sorted_order_bitonic(ctile(pm[:, :, 2 * s]), rounds)
+        pb = sorted_order_bitonic(ctile(pm[:, :, 2 * s + 1]), rounds)
+        inter = jnp.stack([pa, pb], axis=-1).reshape(bm, bn, 2 * lp)
+        return _stepwise(inter, acc, acc_bits, saturate=True)
+
+    acc = jax.lax.fori_loop(0, n_tiles // 2, slot, jnp.zeros_like(o_ref))
+    if n_tiles % 2:  # unpaired leftover tile rides last, un-interleaved
+        tail = sorted_order_bitonic(ctile(pm[:, :, n_tiles - 1]), rounds)
+        acc = _stepwise(tail, acc, acc_bits, saturate=True)
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("acc_bits", "k_tile", "rounds", "m_group", "bm", "bn",
+                     "interpret"),
+)
+def nm_gather_paired_accum_matmul(
+    x: jax.Array,  # (M, K) int, K = G * m_group
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    perm: jax.Array,  # (M, N, K/k_tile) int32 pairing permutation
+    *,
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    m_group: int = 16,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather twin of ``nm_paired_accum_matmul``: the working pair is
+    (bm, bn, 2*next_pow2((k_tile/m)*n_keep)) int32 — n_keep/m of the
+    expand path's (bm, bn, 2*k_tile) — and no dense slab is rebuilt."""
+    m, k = x.shape
+    n, g, n_keep = values.shape
+    assert k == g * m_group, (x.shape, values.shape, m_group)
+    assert perm.shape == (m, n, k // k_tile), (perm.shape, (m, n, k, k_tile))
+    assert k_tile & (k_tile - 1) == 0 and k % k_tile == 0, (k, k_tile)
+    assert k_tile % m_group == 0, (k_tile, m_group)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    n_tiles = k // k_tile
+    kern = functools.partial(_nm_gather_paired_kernel, acc_bits=acc_bits,
+                             k_tile=k_tile, rounds=rounds, m_group=m_group)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bm, bn, n_tiles), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, values, indices, perm)
+
+
+def _nm_gather_chunked_sort_kernel(x_ref, v_ref, i_ref, o_ref, *,
+                                   acc_bits: int, bc: int, rounds: int,
+                                   m_group: int):
+    """``sorted`` on kept products: per bc-chunk, gather the chunk rows'
+    kept products ((bm, bc, G*n_keep) instead of (bm, bc, kp)), pow2-pad,
+    sort, stepwise-accumulate. The sorted kept stream is the sorted
+    dense stream's nonzero-covering prefix, so saturation matches."""
+    xb = x_ref[...].astype(jnp.int32)  # (bm, kp) slab (pre-padded)
+
+    def chunk(c, _):
+        vc = v_ref[pl.ds(c * bc, bc), :, :]  # (bc, G, n_keep)
+        ic = i_ref[pl.ds(c * bc, bc), :, :]
+        prods = gather_nm_products(xb, vc, ic, m_group)
+        ordered = sorted_order_bitonic(pad_last_pow2(prods), rounds)
+        o_ref[:, pl.ds(c * bc, bc)] = _stepwise(
+            ordered, jnp.zeros((xb.shape[0], bc), jnp.int32), acc_bits,
+            saturate=True,
+        )
+        return 0
+
+    n_chunks = o_ref.shape[1] // bc
+    jax.lax.fori_loop(0, n_chunks, chunk, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("acc_bits", "rounds", "m_group", "bm", "bn", "bc",
+                     "interpret"),
+)
+def nm_gather_chunked_sort_matmul(
+    x: jax.Array,  # (M, kp) int, kp a power of two >= G * m_group
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    *,
+    acc_bits: int = 16,
+    rounds: int = 1,
+    m_group: int = 16,
+    bm: int = 8,
+    bn: int = 128,
+    bc: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    m, kp = x.shape
+    n, g, n_keep = values.shape
+    assert g * m_group <= kp, (values.shape, m_group, kp)
+    assert kp & (kp - 1) == 0, f"K must be a power of 2, got {kp}"
+    assert m % bm == 0 and n % bn == 0 and bn % bc == 0, (m, n, bm, bn, bc)
+    kern = functools.partial(_nm_gather_chunked_sort_kernel,
+                             acc_bits=acc_bits, bc=bc, rounds=rounds,
+                             m_group=m_group)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bn, g, n_keep), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, values, indices)
+
+
+def nm_gather_stream_sort_matmul(
+    x: jax.Array,  # (M, kp) int — pre-padded like stream_sort_matmul's x
+    values: jax.Array,  # (N, G, n_keep) int8
+    indices: jax.Array,  # (N, G, n_keep) int32
+    *,
+    policy: str = "sorted",
+    acc_bits: int = 16,
+    k_tile: int = 256,
+    rounds: int = 1,
+    m_group: int = 16,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather twin of ``nm_stream_sort_matmul``: same contract, but no
+    kernel ever rebuilds a dense weight slab — pass 1 sums gathered kept
+    products, pass 2 / the chunked cube sort only kept products. The
+    chunked ``sorted`` cube budget is sized by the *compressed* length,
+    so bc (channels sorted at once) grows by ~m/n_keep."""
+    assert policy in SORT_POLICIES, policy
+    if policy == "sorted":
+        _, g, n_keep = values.shape
+        return nm_gather_chunked_sort_matmul(
+            x, values, indices, acc_bits=acc_bits, rounds=rounds,
+            m_group=m_group, bm=bm, bn=bn,
+            bc=_sort_chunk(bm, bn, _next_pow2(g * n_keep)),
+            interpret=interpret,
+        )
+    sums = nm_gather_tile_sums(x, values, indices, m_group=m_group,
+                               k_tile=k_tile, bm=bm, bn=bn,
+                               interpret=interpret)
+    perm = jax.jit(pair_permutation)(sums)
+    return nm_gather_paired_accum_matmul(
         x, values, indices, perm, acc_bits=acc_bits, k_tile=k_tile,
         rounds=rounds, m_group=m_group, bm=bm, bn=bn, interpret=interpret,
     )

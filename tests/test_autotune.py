@@ -215,6 +215,70 @@ def test_concurrent_tuner_entries_merge(tuner, monkeypatch):
     assert len(entries) == 3
 
 
+def test_nm_shape_key_carries_compressed_geometry():
+    """nm families key on (m_group, n_keep, bucketed G), not dense K:
+    equal dense K at different sparsity must not share a winner."""
+    a = autotune.shape_key("nmg:clip", "cpu", 8, 8, 1024, nm=(8, 2, 64))
+    assert a == "nmg:clip|cpu|8x8xg64m8k2"
+    b = autotune.shape_key("nmg:clip", "cpu", 8, 8, 1024, nm=(8, 4, 64))
+    assert a != b  # same dense K, different n_keep
+    assert autotune.shape_key("nm:sorted", "cpu", 100, 500, 0,
+                              nm=(16, 4, 100)) == "nm:sorted|cpu|128x512xg128m16k4"
+    # dense families are untouched by the nm slot
+    assert autotune.shape_key("clip", "cpu", 8, 8, 64) == "clip|cpu|8x8x64"
+
+
+def test_nm_tune_persists_compressed_key(tuner, monkeypatch):
+    """Tuning a compressed matmul lands a (m_group, n_keep, G)-shaped
+    key — for the expand and the gather family independently."""
+    from repro.core.pruning import nm_compress, nm_prune_mask
+
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "tune")
+    monkeypatch.setattr(autotune, "CANDIDATES",
+                        {"nm:clip": ((4, 8, 32), (2, 4, 16)),
+                         "nmg:clip": ((4, 8, 32), (2, 4, 16))})
+    rng = np.random.default_rng(9)
+    k, n_keep, mg = 512, 2, 8
+    wd = rng.integers(-127, 127, (8, k)).astype(np.int8)
+    mask = np.asarray(nm_prune_mask(jnp.asarray(wd, jnp.float32), n_keep, mg))
+    vals, idx = nm_compress((wd * mask).astype(np.int8), n_keep, mg)
+    vals = jnp.asarray(vals, jnp.int8)
+    idx = jnp.asarray(idx, jnp.int32)
+    x = jnp.asarray(rng.integers(-127, 127, (8, k)), jnp.int8)
+    outs = {
+        impl: np.asarray(ops.nm_policy_matmul(
+            x, vals, idx, m_group=mg, policy="clip", acc_bits=16,
+            nm_impl=impl))
+        for impl in ("expand", "gather")
+    }
+    np.testing.assert_array_equal(outs["expand"], outs["gather"])
+    autotune.drain()
+    keys = set(json.load(open(tuner))["entries"])
+    assert any(key.startswith("nm:clip|") and "xg64m8k2" in key
+               for key in keys), keys
+    assert any(key.startswith("nmg:clip|") and "xg64m8k2" in key
+               for key in keys), keys
+
+
+def test_stale_nm_keys_dropped_with_warning(tuner, monkeypatch):
+    """Pre-gather nm entries (keyed on dense K) are dropped on read with
+    a one-time migration warning; new-format and dense entries load."""
+    entries = {
+        "nm:clip|cpu|8x8x1024": {"bm": 4, "bn": 8, "bk": 32, "us": 1.0},
+        "nmg:clip|cpu|8x8xg64m8k2": {"bm": 2, "bn": 4, "bk": 16, "us": 1.0},
+        "clip|cpu|8x8x64": {"bm": 4, "bn": 8, "bk": 32, "us": 1.0},
+    }
+    with open(tuner, "w") as f:
+        json.dump({"version": 1, "entries": entries}, f)
+    monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "readonly")
+    monkeypatch.setattr(autotune, "_WARNED_STALE", False)
+    autotune.reset()
+    with pytest.warns(UserWarning, match="stale"):
+        assert autotune.best_blocks("clip", 8, 8, 64) == (4, 8, 32)
+    assert autotune.best_blocks(
+        "nmg:clip", 8, 8, 512, nm=(8, 2, 64)) == (2, 4, 16)
+
+
 def test_corrupt_cache_is_ignored(tuner, monkeypatch):
     monkeypatch.setenv("REPRO_PQS_AUTOTUNE", "readonly")
     with open(tuner, "w") as f:

@@ -265,6 +265,217 @@ def test_nm_sharded_bit_identical(policy):
                                   err_msg=policy)
 
 
+# ---------------------------------------------------------------------------
+# fused activation-gather implementation (nm_impl="gather")
+# ---------------------------------------------------------------------------
+
+
+def _compressed_ragged(n, k, n_keep, m, seed=0):
+    """``_compressed`` for K % m != 0: pad for the prune mask, slice
+    back, let ``nm_compress`` zero-pad the tail group."""
+    rng = np.random.default_rng(seed)
+    wd = rng.integers(-127, 127, (n, k)).astype(np.int8)
+    kp = k + ((-k) % m)
+    wp = np.pad(wd, ((0, 0), (0, kp - k)))
+    mask = np.asarray(nm_prune_mask(jnp.asarray(wp, jnp.float32), n_keep, m))
+    wd = (wp * mask).astype(np.int8)[:, :k]
+    vals, idx = nm_compress(wd, n_keep, m)
+    dense = nm_decompress(vals, idx, m, k=k)
+    np.testing.assert_array_equal(dense, wd)
+    return (jnp.asarray(vals, jnp.int8), jnp.asarray(idx, jnp.int32),
+            jnp.asarray(dense))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("n_keep,m", NM_SHAPES)
+def test_nm_gather_expand_bit_identity(policy, n_keep, m):
+    """The fused gather kernels are bit-identical — census included — to
+    the expand oracle for every policy x (n_keep, m), at the same
+    dense-parity shapes the expand matrix sweeps."""
+    M, K, N = 5, 96, 9
+    vals, idx, dense = _compressed(N, K, n_keep, m, seed=n_keep * 13 + m)
+    x = _x(M, K, seed=m + 1)
+    ref, cref = pqs_dot(x, dense, acc_bits=14, policy=policy, k_tile=32,
+                        backend="jnp", with_census=True)
+    outs = {}
+    for impl in ("expand", "gather"):
+        out, c = pqs_dot(x, (vals, idx), storage="nm", m_group=m,
+                         acc_bits=14, policy=policy, k_tile=32,
+                         backend="pallas", block_m=4, block_n=8,
+                         nm_impl=impl, with_census=True)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ref),
+            err_msg=f"{policy} {n_keep}:{m} impl={impl}",
+        )
+        for field in CENSUS_FIELDS:
+            assert int(getattr(c, field)) == int(getattr(cref, field)), (
+                policy, impl, field)
+        outs[impl] = np.asarray(out)
+    np.testing.assert_array_equal(outs["expand"], outs["gather"])
+
+
+@pytest.mark.slow
+def test_nm_gather_parity_large_k():
+    """K = 8192 through the gather twins of the two-pass streaming sort
+    kernels and the chunked-cube ``sorted`` path."""
+    n_keep, m = 4, 16
+    M, K, N = 2, 8192, 4
+    vals, idx, dense = _compressed(N, K, n_keep, m, seed=23)
+    x = _x(M, K, seed=23)
+    for policy in POLICIES:
+        ref = pqs_dot(x, dense, acc_bits=16, policy=policy, k_tile=256,
+                      backend="jnp")
+        out = pqs_dot(x, (vals, idx), storage="nm", m_group=m, acc_bits=16,
+                      policy=policy, k_tile=256, backend="pallas",
+                      block_m=2, block_n=4, nm_impl="gather")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref),
+                                      err_msg=policy)
+
+
+def test_nm_gather_ragged_tail():
+    """K % m != 0: the compress-time zero-pad invariant (no per-call
+    tail mask in the gather kernel) keeps ragged K exact."""
+    n_keep, m = 4, 16
+    M, K, N = 4, 100, 6  # G = 7, tail group covers positions 96..111
+    vals, idx, dense = _compressed_ragged(N, K, n_keep, m, seed=29)
+    sq = SparseQTensor(values=vals, indices=idx, scale=jnp.ones((N,)),
+                       m_group=m, k_dim=K)
+    x = _x(M, K, seed=29)
+    for policy in ("clip", "sorted_tiled_seq", "sorted"):
+        ref = pqs_dot(x, dense, acc_bits=14, policy=policy, k_tile=32,
+                      backend="jnp")
+        out = pqs_dot(x, sq, storage="nm", acc_bits=14,
+                      policy=policy, k_tile=32, backend="pallas",
+                      block_m=4, block_n=8, nm_impl="gather")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref),
+                                      err_msg=policy)
+
+
+def test_nm_impl_env_knob(monkeypatch):
+    """REPRO_PQS_NM_IMPL routes when no explicit nm_impl is passed, and
+    malformed values raise loudly."""
+    from repro.kernels import ops
+
+    vals, idx, dense = _compressed(6, 128, 2, 8, seed=31)
+    x = _x(4, 128, seed=31)
+    ref = pqs_dot(x, dense, acc_bits=14, policy="clip", backend="jnp")
+    for env in ("expand", "gather"):
+        monkeypatch.setenv("REPRO_PQS_NM_IMPL", env)
+        out = pqs_dot(x, (vals, idx), storage="nm", m_group=8, acc_bits=14,
+                      policy="clip", backend="pallas", block_m=4, block_n=8)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref),
+                                      err_msg=env)
+    monkeypatch.setenv("REPRO_PQS_NM_IMPL", "bogus")
+    with pytest.raises(ValueError, match="REPRO_PQS_NM_IMPL"):
+        ops.resolve_nm_impl("clip", 16, 2, 8)
+    monkeypatch.delenv("REPRO_PQS_NM_IMPL")
+    with pytest.raises(ValueError, match="nm_impl"):
+        pqs_dot(x, (vals, idx), storage="nm", m_group=8, policy="clip",
+                backend="pallas", nm_impl="bogus")
+    with pytest.raises(ValueError, match="storage"):
+        pqs_dot(x, dense, policy="clip", nm_impl="gather")  # dense w
+
+
+def test_nm_impl_auto_heuristics():
+    """``auto`` picks gather only where it can save work: real sparsity
+    (n_keep < m), a policy with skippable work, enough groups."""
+    from repro.kernels import ops
+
+    assert ops.resolve_nm_impl("clip", 64, 4, 8) == "gather"
+    assert ops.resolve_nm_impl("sorted", 64, 2, 4) == "gather"
+    assert ops.resolve_nm_impl("wide", 64, 4, 8) == "expand"  # MXU dot
+    assert ops.resolve_nm_impl("clip", 64, 8, 8) == "expand"  # dense-as-nm
+    small = ops.GATHER_MIN_G - 1
+    assert ops.resolve_nm_impl("clip", small, 4, 8) == "expand"  # tiny G
+    # explicit choice always wins over the heuristics
+    assert ops.resolve_nm_impl("wide", small, 8, 8, "gather") == "gather"
+    assert ops.resolve_nm_impl("clip", 64, 4, 8, "expand") == "expand"
+
+
+def test_nm_gather_kshard_composition():
+    """k_shards > 1 on compressed storage: gather partials compose with
+    the hierarchical combine bit-identically to expand partials."""
+    n_keep, m = 4, 16
+    M, K, N = 4, 512, 6
+    vals, idx, dense = _compressed(N, K, n_keep, m, seed=37)
+    x = _x(M, K, seed=37)
+    for policy in POLICIES:
+        ref = pqs_dot(x, (vals, idx), storage="nm", m_group=m, acc_bits=14,
+                      policy=policy, k_tile=32, backend="pallas",
+                      block_m=4, block_n=8, k_shards=4, nm_impl="expand")
+        out = pqs_dot(x, (vals, idx), storage="nm", m_group=m, acc_bits=14,
+                      policy=policy, k_tile=32, backend="pallas",
+                      block_m=4, block_n=8, k_shards=4, nm_impl="gather")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref),
+                                      err_msg=policy)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs REPRO_FORCE_MULTIDEVICE (see ci.sh shard)")
+def test_nm_gather_sharded_k_axis():
+    """mesh + k_axis with gather kernels inside every K shard — the
+    REPRO_FORCE_MULTIDEVICE composition case from the issue."""
+    n_keep, m = 4, 16
+    M, K, N = 4, 512, 6
+    vals, idx, dense = _compressed(N, K, n_keep, m, seed=41)
+    x = _x(M, K, seed=41)
+    mesh = jax.make_mesh((2, 2, 2), ("data", "model", "kdim"))
+    for policy in ("clip", "sorted_tiled"):
+        ref = pqs_dot(x, (vals, idx), storage="nm", m_group=m, acc_bits=14,
+                      policy=policy, k_tile=32, backend="jnp",
+                      k_shards=2)
+        out = pqs_dot(x, (vals, idx), storage="nm", m_group=m, acc_bits=14,
+                      policy=policy, k_tile=32, backend="pallas",
+                      block_m=4, block_n=8, mesh=mesh, k_axis="kdim",
+                      nm_impl="gather")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref),
+                                      err_msg=policy)
+
+
+# ---------------------------------------------------------------------------
+# nm_compress canonical-form invariant (ragged-tail fast path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K", (96, 100))  # K % m == 0 and the ragged tail
+def test_nm_compress_canonical_both_branches(K):
+    """Both branches of the ceil-G packer satisfy the canonical-form
+    invariant the gather kernels rely on (no per-call tail mask)."""
+    from repro.core.pruning import nm_assert_canonical
+
+    n_keep, m = 4, 8
+    vals, idx, dense = _compressed_ragged(6, K, n_keep, m, seed=43)
+    vals, idx = np.asarray(vals), np.asarray(idx)
+    nm_assert_canonical(vals, idx, m, k=K)
+    np.testing.assert_array_equal(nm_decompress(vals, idx, m, k=K),
+                                  np.asarray(dense))
+
+
+def test_nm_assert_canonical_catches_violations():
+    from repro.core.pruning import nm_assert_canonical
+
+    vals, idx, _ = _compressed_ragged(4, 100, 4, 8, seed=47)
+    vals = np.asarray(vals).copy()
+    idx = np.asarray(idx).copy()
+    nm_assert_canonical(vals, idx, 8, k=100)
+    bad_v, bad_i = vals.copy(), idx.copy()
+    bad_v[0, -1, -1], bad_i[0, -1, -1] = 5, 7  # dense pos 103 >= k=100
+    with pytest.raises(AssertionError, match="tail positions"):
+        nm_assert_canonical(bad_v, bad_i, 8, k=100)
+    desc = idx.copy()
+    desc[0, 0] = desc[0, 0][::-1]
+    with pytest.raises(AssertionError, match="ascend"):
+        nm_assert_canonical(vals, desc, 8)
+    with pytest.raises(AssertionError, match="out of range"):
+        nm_assert_canonical(vals, idx + 8, 8)
+    # zero-padded groups (index 0 repeated, value 0) ARE canonical —
+    # exactly what ops' G-padding produces
+    zv = np.zeros((4, 2, 4), vals.dtype)
+    zi = np.zeros((4, 2, 4), idx.dtype)
+    nm_assert_canonical(np.concatenate([vals, zv], 1),
+                        np.concatenate([idx, zi], 1), 8)
+
+
 @pytest.mark.skipif(len(jax.devices()) < 2,
                     reason="needs REPRO_FORCE_MULTIDEVICE (see ci.sh shard)")
 def test_nm_sharded_census_counts_once():

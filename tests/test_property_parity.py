@@ -133,10 +133,12 @@ NM_MENU = ((2, 4), (4, 16))  # (n_keep, m_group)
 @given(st.integers(0, len(MS) - 1), st.integers(1, len(KS) - 1),
        st.integers(0, len(NS) - 1), st.integers(0, len(SHARDS) - 1),
        st.integers(0, len(NM_MENU) - 1), st.integers(0, 3),
-       st.integers(0, 10**6))
-def test_property_nm_storage_parity(policy, mi, ki, ni, si, nmi, bi, seed):
+       st.integers(0, 1), st.integers(0, 10**6))
+def test_property_nm_storage_parity(policy, mi, ki, ni, si, nmi, bi, impi,
+                                    seed):
     """storage="nm" under K-sharding == decompress-then-dense at the
-    same shard count, on a drawn backend, census included.
+    same shard count, on a drawn backend AND a drawn sparse kernel
+    implementation (expand oracle vs fused gather), census included.
 
     The tiled policies are the ones whose dense per-shard padded length
     is guaranteed group-aligned (k_tile % m_group == 0), so the nm
@@ -148,6 +150,7 @@ def test_property_nm_storage_parity(policy, mi, ki, ni, si, nmi, bi, seed):
     s = SHARDS[si]
     n_keep, mg = NM_MENU[nmi]
     backend = "pallas" if bi == 0 else "jnp"  # pallas ~1 in 4 draws
+    nm_impl = ("expand", "gather")[impi]  # only the pallas path branches
     g = -(-k // mg)
     kd = g * mg  # bare (values, indices) pairs cover whole groups
     rng = np.random.default_rng(seed + 2)
@@ -167,10 +170,10 @@ def test_property_nm_storage_parity(policy, mi, ki, ni, si, nmi, bi, seed):
     ref, cr = pqs_dot(x, dense, **kw)
     out, co = pqs_dot(
         x, (jnp.asarray(vals, jnp.int8), jnp.asarray(idx, jnp.int32)),
-        storage="nm", m_group=mg, **kw)
+        storage="nm", m_group=mg, nm_impl=nm_impl, **kw)
     np.testing.assert_array_equal(
         np.asarray(ref), np.asarray(out),
-        err_msg=f"{policy} s={s} nm={n_keep}:{mg} {backend}",
+        err_msg=f"{policy} s={s} nm={n_keep}:{mg} {backend} {nm_impl}",
     )
     for field in overflow.Census._fields:
         assert int(getattr(cr, field)) == int(getattr(co, field)), (
@@ -195,13 +198,15 @@ def test_kshard_nm_backend_parity():
             kw = dict(storage="nm", m_group=mg, acc_bits=14, policy=policy,
                       k_tile=K_TILE, k_shards=s, with_census=True)
             a, ca = pqs_dot(x, (vals, idx), backend="jnp", **kw)
-            b, cb = pqs_dot(x, (vals, idx), backend="pallas", block_m=2,
-                            block_n=4, **kw)
-            np.testing.assert_array_equal(
-                np.asarray(a), np.asarray(b), err_msg=f"{policy} s={s}")
-            for field in overflow.Census._fields:
-                assert int(getattr(ca, field)) == int(getattr(cb, field)), (
-                    policy, s, field)
+            for impl in ("expand", "gather"):
+                b, cb = pqs_dot(x, (vals, idx), backend="pallas", block_m=2,
+                                block_n=4, nm_impl=impl, **kw)
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{policy} s={s} {impl}")
+                for field in overflow.Census._fields:
+                    assert int(getattr(ca, field)) == int(
+                        getattr(cb, field)), (policy, s, impl, field)
 
 
 def test_kshard_edges():
