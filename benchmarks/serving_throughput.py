@@ -25,6 +25,15 @@ reporting path for all serving benches (``benchmarks.common``).
 ``check_against`` gates tokens_per_s against a committed baseline via
 ``run.py --check-serving-against`` (generous tolerance: CI guards
 structural collapses, not jitter).
+
+``--inject-failures`` (or the ``failures`` key of a full run) measures
+the fault-tolerance overhead: the same Poisson workload is driven twice
+through ``ServingFleet`` + ``ServeSupervisor`` — once failure-free, once
+with two injected mid-decode crashes recovered from periodic snapshots —
+and reports the per-recovery restore latency, the goodput ratio
+(crash-run throughput / failure-free throughput), and whether the
+recovered token streams stayed bit-identical. The committed baseline
+gates goodput_ratio and tokens_match the same way it gates tokens_per_s.
 """
 
 from __future__ import annotations
@@ -143,9 +152,83 @@ def run(arch: str = "qwen2-1.5b", quick: bool = False, seed: int = 0) -> dict:
           f"{results['f32_dense']['cache_mb']:.3f} MB)")
     results["int8_shrink"] = shrink
 
+    results["failures"] = bench_failures(arch, quick=quick, seed=seed)
+
     if not quick:
         results["int_decode"] = bench_int_decode(arch)
     return results
+
+
+def bench_failures(arch: str = "qwen2-1.5b", quick: bool = False,
+                   seed: int = 0) -> dict:
+    """Fault-tolerance overhead: injected crashes vs a failure-free run.
+
+    Drives the same request set through ``ServingFleet`` twice — clean,
+    then with two mid-decode crashes recovered from periodic in-memory
+    snapshots — and reports per-recovery restore latency, the goodput
+    ratio (crashed throughput over clean throughput: snapshotting +
+    restore + replayed steps are the overhead), and whether every
+    recovered token stream stayed bit-identical to the clean run.
+    """
+    from repro.runtime import FailureInjector, ServeSupervisor
+    from repro.serving import ServingFleet
+
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n_requests = 6 if quick else 12
+    max_new = 6 if quick else 10
+    num_slots, max_len, page_size = 2, 64, 16
+    num_pages = num_slots * (max_len // page_size)
+
+    def drive(inject: bool) -> tuple[dict, dict, float]:
+        eng = ServingEngine(model, params, num_slots=num_slots,
+                            max_len=max_len, page_size=page_size,
+                            num_pages=num_pages)
+        _warmup(eng, cfg.vocab_size)
+        if inject:
+            # schedule relative to the post-warmup step counter
+            s = eng._step_idx
+            eng.failure_injector = FailureInjector({s + 4, s + 11})
+        reqs = gen_requests(cfg.vocab_size, n_requests, seed=seed,
+                            len_lo=4, len_hi=10, max_new=max_new)
+        fleet = ServingFleet(snapshot_every=4 if inject else 0)
+        fleet.add_engine("m", eng)
+        for r in reqs:
+            fleet.submit("m", r)
+        sup = ServeSupervisor(fleet)
+        t0 = time.perf_counter()
+        sup.run()
+        wall = time.perf_counter() - t0
+        return {r.uid: list(r.output) for r in reqs}, fleet.stats, wall
+
+    base_out, _, base_wall = drive(inject=False)
+    fail_out, stats, fail_wall = drive(inject=True)
+
+    toks = sum(len(o) for o in base_out.values())
+    base_tps = toks / max(base_wall, 1e-9)
+    fail_tps = sum(len(o) for o in fail_out.values()) / max(fail_wall, 1e-9)
+    res = {
+        "recoveries": stats["recoveries"],
+        "snapshots": stats["snapshots"],
+        "recovery_ms": stats["recovery_s"] / max(stats["recoveries"], 1)
+        * 1e3,
+        "clean_tokens_per_s": base_tps,
+        "failed_tokens_per_s": fail_tps,
+        "goodput_ratio": fail_tps / max(base_tps, 1e-9),
+        "tokens_match": fail_out == base_out,
+    }
+    emit("BENCH_serving_failures",
+         [{k: round(v, 3) if isinstance(v, float) else v
+           for k, v in res.items()}],
+         ["recoveries", "snapshots", "recovery_ms", "clean_tokens_per_s",
+          "failed_tokens_per_s", "goodput_ratio", "tokens_match"])
+    print(f"[serving_throughput/failures] {stats['recoveries']} recoveries "
+          f"at {res['recovery_ms']:.1f} ms each; goodput ratio "
+          f"{res['goodput_ratio']:.2f} "
+          f"(bit-identical={res['tokens_match']})")
+    return res
 
 
 def bench_int_decode(arch: str = "qwen2-1.5b", steps: int = 20,
@@ -214,22 +297,62 @@ def check_against(results: dict, baseline_path: str, tolerance: float):
 
     Returns [(mode, field, baseline, now), ...] for every mode whose
     tokens_per_s fell below baseline / tolerance (or disappeared).
+    When both sides carry a ``failures`` entry it is gated too:
+    goodput_ratio may not collapse below baseline / tolerance, and
+    recovered token streams must stay bit-identical (tokens_match).
+    Mode gating is skipped for failures-only runs (--inject-failures).
     """
     with open(baseline_path) as f:
         base = json.load(f)
     regs = []
-    for mode, b in base.items():
-        if mode not in MODES:
-            continue
-        now = results.get(mode)
-        if now is None:
-            regs.append((mode, "tokens_per_s", b["tokens_per_s"], None))
-            continue
-        if now["tokens_per_s"] < b["tokens_per_s"] / tolerance:
-            regs.append((mode, "tokens_per_s", b["tokens_per_s"],
-                         now["tokens_per_s"]))
+    if any(m in results for m in MODES):
+        for mode, b in base.items():
+            if mode not in MODES:
+                continue
+            now = results.get(mode)
+            if now is None:
+                regs.append((mode, "tokens_per_s", b["tokens_per_s"], None))
+                continue
+            if now["tokens_per_s"] < b["tokens_per_s"] / tolerance:
+                regs.append((mode, "tokens_per_s", b["tokens_per_s"],
+                             now["tokens_per_s"]))
+    bf, nf = base.get("failures"), results.get("failures")
+    if bf is not None and nf is not None:
+        if not nf.get("tokens_match", False):
+            regs.append(("failures", "tokens_match", True,
+                         nf.get("tokens_match")))
+        if nf["goodput_ratio"] < bf["goodput_ratio"] / tolerance:
+            regs.append(("failures", "goodput_ratio", bf["goodput_ratio"],
+                         nf["goodput_ratio"]))
     return regs
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--inject-failures", action="store_true",
+                    help="run only the failure-injection bench")
+    ap.add_argument("--check-against", default=None,
+                    help="baseline JSON; nonzero exit on regression")
+    ap.add_argument("--tolerance", type=float, default=2.0)
+    args = ap.parse_args()
+
+    if args.inject_failures:
+        res = {"failures": bench_failures(args.arch, quick=args.quick,
+                                          seed=args.seed)}
+    else:
+        res = run(args.arch, quick=args.quick, seed=args.seed)
+    if args.check_against:
+        regs = check_against(res, args.check_against, args.tolerance)
+        for mode, field, b, now in regs:
+            print(f"[serving_throughput] REGRESSION {mode}.{field}: "
+                  f"baseline {b} -> now {now}")
+        if regs:
+            sys.exit(1)
+        print(f"[serving_throughput] baseline check OK "
+              f"({args.check_against}, tolerance {args.tolerance}x)")

@@ -5,7 +5,7 @@
 # Actions job invokes a single stage of this script, so what CI gates is
 # exactly what `scripts/ci.sh --stage all` checks on a laptop.
 #
-#   scripts/ci.sh [--stage lint|unit|shard|smoke|bench|all] [pytest args]
+#   scripts/ci.sh [--stage lint|unit|shard|smoke|bench|serve|fault|all] [pytest args]
 #
 #   lint   ruff check + ruff format --check (config in pyproject.toml);
 #          skipped with a notice when ruff is not installed (the offline
@@ -27,6 +27,10 @@
 #   serve  serving throughput smoke (dense / paged / int8-paged under
 #          Poisson load) -> BENCH_serving.json, tokens/s gated against
 #          the committed CPU baseline (same REPRO_BENCH_TOL)
+#   fault  fault-tolerance suite on an 8-way forced host-device mesh:
+#          supervisors, snapshot/restore bit-exactness, census-triggered
+#          degradation, and the mesh-member-drop remesh-recovery tests
+#          that self-skip in the unit stage
 #   all    every stage above, in order (the default)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -42,9 +46,9 @@ if [[ "${1:-}" == "--stage" ]]; then
     shift 2
 fi
 case "$STAGE" in
-    lint|unit|shard|smoke|bench|serve|all) ;;
+    lint|unit|shard|smoke|bench|serve|fault|all) ;;
     *) echo "unknown stage '$STAGE'" \
-            "(lint|unit|shard|smoke|bench|serve|all)" >&2
+            "(lint|unit|shard|smoke|bench|serve|fault|all)" >&2
        exit 2 ;;
 esac
 
@@ -118,6 +122,14 @@ serve_stage() {
         --tolerance "$REPRO_BENCH_TOL"
 }
 
+fault_stage() {
+    # multi-device members (elastic remesh, mesh-member drop + remesh
+    # recovery) only run here; the rest also ran single-device in unit
+    REPRO_FORCE_MULTIDEVICE=8 python -m pytest -x -q \
+        tests/test_fault_tolerance.py \
+        tests/test_serving_fleet.py
+}
+
 case "$STAGE" in
     lint)  run_stage lint lint_stage ;;
     unit)  run_stage unit unit_stage "$@" ;;
@@ -125,6 +137,7 @@ case "$STAGE" in
     smoke) run_stage smoke smoke_stage ;;
     bench) run_stage bench bench_stage ;;
     serve) run_stage serve serve_stage ;;
+    fault) run_stage fault fault_stage ;;
     all)
         run_stage lint lint_stage
         run_stage unit unit_stage "$@"
@@ -132,5 +145,6 @@ case "$STAGE" in
         run_stage smoke smoke_stage
         run_stage bench bench_stage
         run_stage serve serve_stage
+        run_stage fault fault_stage
         ;;
 esac

@@ -2,6 +2,8 @@ from repro.checkpoint.ckpt import (  # noqa: F401
     AsyncCheckpointer,
     cleanup,
     latest_step,
+    load_checkpoint,
     restore_checkpoint,
     save_checkpoint,
+    unflatten_like,
 )

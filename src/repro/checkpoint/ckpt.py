@@ -161,6 +161,55 @@ def restore_checkpoint(
     return jax.tree_util.tree_unflatten(treedef, out), step
 
 
+def load_checkpoint(
+    ckpt_dir: str, step: Optional[int] = None
+) -> tuple[dict[str, np.ndarray], int]:
+    """Target-free restore: flat ``{key: array}`` straight off the manifest.
+
+    ``restore_checkpoint`` needs a shape-matching target tree, which
+    rules out payloads with variable-length leaves (e.g. the serving
+    engine's pickled request-state blob — its length changes between
+    snapshots). This loader reconstructs every leaf exactly as stored;
+    pair with ``unflatten_like`` to rebuild a pytree around the
+    shape-stable subset.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    opened: dict[int, Any] = {}
+
+    def shard(i: int):
+        if i not in opened:
+            opened[i] = np.load(os.path.join(path, f"shard_{i}.npz"))
+        return opened[i]
+
+    flat: dict[str, np.ndarray] = {}
+    for e in manifest["leaves"]:
+        arr = shard(e["shard"])[e["key"].replace("/", "__")]
+        if e.get("raw"):
+            arr = arr.view(_np_dtype(e["dtype"])).reshape(e["shape"])
+        flat[e["key"]] = arr
+    return flat, step
+
+
+def unflatten_like(target: Any, flat: dict[str, np.ndarray]) -> Any:
+    """Rebuild ``target``'s tree structure from a ``load_checkpoint`` dict.
+
+    Leaf values come from ``flat`` by the same path keys ``_flatten``
+    produces; ``target`` supplies only the structure (leaf shapes are
+    free to differ — that is the point for variable-length blobs).
+    """
+    keys, _, treedef = _flatten(target)
+    missing = [k for k in keys if k not in flat]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves {missing!r}")
+    return jax.tree_util.tree_unflatten(treedef, [flat[k] for k in keys])
+
+
 def cleanup(ckpt_dir: str, keep: int = 3) -> None:
     """Retain the newest ``keep`` checkpoints."""
     if not os.path.isdir(ckpt_dir):

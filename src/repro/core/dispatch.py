@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 from typing import Any, Optional
 
 import jax
@@ -675,6 +676,30 @@ class IntegerLinConfig:
     k_axis: Optional[str] = None  # mesh axis carrying the K shards
     k_shard_min_k: int = 0  # only layers with K >= this take the hierarchy
     nm_impl: Optional[str] = None  # sparse kernel impl: expand|gather|auto
+    # per-site overrides, ((site, value), ...) — the census-degradation
+    # hot-swap path: one saturating layer widens without touching the rest
+    site_policies: tuple = ()
+    site_acc_bits: tuple = ()
+
+    def policy_for(self, site: Optional[str]) -> str:
+        return dict(self.site_policies).get(site, self.policy)
+
+    def acc_bits_for(self, site: Optional[str]) -> int:
+        return dict(self.site_acc_bits).get(site, self.acc_bits)
+
+    def with_site_policy(self, site: str, policy: str) -> "IntegerLinConfig":
+        over = dict(self.site_policies)
+        over[site] = policy
+        return dataclasses.replace(
+            self, site_policies=tuple(sorted(over.items()))
+        )
+
+    def with_site_acc_bits(self, site: str, bits: int) -> "IntegerLinConfig":
+        over = dict(self.site_acc_bits)
+        over[site] = int(bits)
+        return dataclasses.replace(
+            self, site_acc_bits=tuple(sorted(over.items()))
+        )
 
 
 _INT_LIN: list[IntegerLinConfig] = []
@@ -726,7 +751,73 @@ def calibration(store):
         _CALIBRATION.pop()
 
 
-def qtensor_dot(x: jax.Array, qt, cfg: IntegerLinConfig) -> jax.Array:
+class CensusMonitor:
+    """Per-site overflow-census accumulator (the runtime guardrail input).
+
+    ``qtensor_dot`` reports, for every named projection site executed
+    under a ``census_monitor`` context, the number of dot products and
+    the number of overflow events (persistent-or-transient + combine)
+    via ``jax.debug.callback`` — counts land here at runtime, including
+    from inside jitted/scanned decode steps. ``wide``-policy sites
+    report zero events by construction, so a degraded layer's rate
+    measurably drops to 0.0. The serving engine drains this window by
+    window (``ServingEngine._check_census``).
+    """
+
+    def __init__(self):
+        self._dots: dict[str, int] = {}
+        self._events: dict[str, int] = {}
+
+    def observe(self, site, n_dots, n_events) -> None:
+        site = str(site)
+        self._dots[site] = self._dots.get(site, 0) + int(n_dots)
+        self._events[site] = self._events.get(site, 0) + int(n_events)
+
+    def totals(self) -> dict[str, tuple[int, int]]:
+        return {s: (self._dots[s], self._events[s]) for s in self._dots}
+
+    def rates(self) -> dict[str, float]:
+        return {
+            s: (self._events[s] / self._dots[s] if self._dots[s] else 0.0)
+            for s in self._dots
+        }
+
+    def drain(self) -> dict[str, tuple[int, int]]:
+        out = self.totals()
+        self._dots.clear()
+        self._events.clear()
+        return out
+
+
+_CENSUS_MON: list[CensusMonitor] = []
+
+
+def census_monitor_store() -> Optional[CensusMonitor]:
+    """Active ``CensusMonitor``, or None when monitoring is off."""
+    return _CENSUS_MON[-1] if _CENSUS_MON else None
+
+
+@contextlib.contextmanager
+def census_monitor(mon: Optional[CensusMonitor] = None):
+    """Count overflow events per projection site inside the context.
+
+    Like ``calibration``, the context must wrap *tracing*: sites traced
+    inside it carry the census callback permanently (for that jitted
+    function), sites traced outside never report. Costs one extra
+    census reduction per projection — serving enables it only when a
+    ``CensusWatch`` is configured.
+    """
+    mon = mon or CensusMonitor()
+    _CENSUS_MON.append(mon)
+    try:
+        yield mon
+    finally:
+        _CENSUS_MON.pop()
+
+
+def qtensor_dot(
+    x: jax.Array, qt, cfg: IntegerLinConfig, site: Optional[str] = None
+) -> jax.Array:
     """x (..., in) float @ QTensor (in, out) as an integer PQS dot.
 
     Activation quantization is dynamic symmetric per-tensor (absmax at
@@ -766,14 +857,33 @@ def qtensor_dot(x: jax.Array, qt, cfg: IntegerLinConfig) -> jax.Array:
         # short-K layers keep the full-K path — also when the shard
         # count is implied by the mesh axis (k_axis= with k_shards=None)
         ks, ka = None, None
-    z = pqs_dot(
-        xq, wq, acc_bits=cfg.acc_bits,
-        policy=cfg.policy, k_tile=cfg.k_tile, rounds=cfg.rounds,
+    policy = cfg.policy_for(site)
+    acc_bits = cfg.acc_bits_for(site)
+    mon = census_monitor_store()
+    want_census = mon is not None and site is not None and policy != "wide"
+    res = pqs_dot(
+        xq, wq, acc_bits=acc_bits,
+        policy=policy, k_tile=cfg.k_tile, rounds=cfg.rounds,
         backend=cfg.backend, mesh=cfg.mesh, m_axes=cfg.m_axes,
         n_axis=cfg.n_axis, k_shards=ks,
         k_axis=ka if cfg.mesh is not None else None, storage=storage,
         nm_impl=cfg.nm_impl if sparse else None,
+        with_census=want_census,
     )
+    if want_census:
+        z, cns = res
+        jax.debug.callback(
+            functools.partial(mon.observe, site),
+            cns.n_dots, cns.n_any + cns.n_combine,
+        )
+    else:
+        z = res
+        if mon is not None and site is not None:
+            # wide accumulates in int32 — overflow-free by construction;
+            # report the dots so a degraded site's rate reads 0.0
+            jax.debug.callback(
+                functools.partial(mon.observe, site), z.size, 0
+            )
     if cfg.use_static_acts and aq is not None and not aq.symmetric:
         # Eq. (3) offset correction — precomputed at freeze time
         # (qtensor.attach_act_qparams), a per-weight constant

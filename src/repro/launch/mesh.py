@@ -68,6 +68,37 @@ def make_host_serve_mesh(model_parallel: Optional[int] = None
     return jax.make_mesh((n // tp, tp), ("data", "model"))
 
 
+def shrink_serve_mesh(
+    mesh: jax.sharding.Mesh,
+    lost: int,
+    model_parallel: Optional[int] = None,
+) -> jax.sharding.Mesh:
+    """("data", "model") mesh over the survivors after losing ``lost`` devices.
+
+    Drops the last ``lost`` devices of ``mesh`` (the simulated failed
+    members) and rebuilds the serve-mesh layout over what remains —
+    same TP heuristic as ``make_host_serve_mesh`` unless
+    ``model_parallel`` pins it. Pass the result to
+    ``ServingFleet.remesh_engine`` / ``ServingEngine.remesh``; the
+    sharded integer projections are bit-exact at any mesh shape, so
+    decode resumes with identical tokens on the smaller fleet.
+    """
+    devices = list(mesh.devices.flatten())
+    if not 0 < lost < len(devices):
+        raise ValueError(
+            f"lost={lost} must leave at least 1 of {len(devices)} devices"
+        )
+    import numpy as np
+
+    survivors = devices[: len(devices) - lost]
+    n = len(survivors)
+    tp = model_parallel or (n if n % 2 or n < 4 else n // 2)
+    if n % tp:
+        raise ValueError(f"model_parallel={tp} does not divide {n} survivors")
+    grid = np.asarray(survivors).reshape(n // tp, tp)
+    return jax.sharding.Mesh(grid, ("data", "model"))
+
+
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

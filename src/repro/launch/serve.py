@@ -6,6 +6,13 @@ decode dry-run cells lower on the 256/512-chip meshes.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --requests 6 --max-new 16
+
+Fault-tolerance drills run the same engine under the fleet supervisor:
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --inject-fail 5,11 \
+      --snapshot-every 3
+  PYTHONPATH=src python -m repro.launch.serve --smoke --int-policy \
+      sorted_tiled_seq --acc-bits 17 --census-threshold 0.01
 """
 
 from __future__ import annotations
@@ -14,11 +21,12 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models.model import build_model, param_count
-from repro.serving import Request, ServingEngine
+from repro.serving import CensusWatch, Request, ServingEngine, ServingFleet
 
 
 def main() -> None:
@@ -46,6 +54,35 @@ def main() -> None:
     ap.add_argument("--prefill-decode-ratio", type=int, default=0,
                     help="interleave: decode steps between prefill "
                          "micro-steps (0 = prefill immediately on admit)")
+    # fault-tolerance drills: fleet supervision, failures, degradation
+    ap.add_argument("--fleet", action="store_true",
+                    help="drive the engine through ServingFleet + "
+                         "ServeSupervisor instead of engine.drain")
+    ap.add_argument("--inject-fail", default=None, metavar="STEPS",
+                    help="comma-separated engine steps to crash at "
+                         "(implies --fleet; recovery from snapshots)")
+    ap.add_argument("--snapshot-every", type=int, default=4,
+                    help="fleet steps between serving-state snapshots")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="persist snapshots here via AsyncCheckpointer "
+                         "(default: in-memory only)")
+    ap.add_argument("--quota", type=int, default=None,
+                    help="fleet admission quota (max in-flight requests)")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="per-request deadline in fleet steps; expired "
+                         "requests are cancelled and retried with backoff")
+    ap.add_argument("--int-policy", default=None,
+                    choices=["wide", "clip", "wrap", "sorted",
+                             "sorted_tiled", "sorted_tiled_seq"],
+                    help="quantize weights and decode through integer "
+                         "pqs_dot under this accumulator policy")
+    ap.add_argument("--acc-bits", type=int, default=24,
+                    help="accumulator width for --int-policy")
+    ap.add_argument("--census-threshold", type=float, default=None,
+                    help="enable census-triggered degradation at this "
+                         "overflow rate (requires --int-policy)")
+    ap.add_argument("--census-window", type=int, default=8,
+                    help="decode steps per census window")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -54,13 +91,52 @@ def main() -> None:
     print(f"[serve] arch={cfg.name} params={param_count(params):,} "
           f"slots={args.slots}")
 
+    int_lin = None
+    census_watch = None
+    if args.int_policy:
+        from repro.core import dispatch
+        from repro.core.qtensor import quantize_tree
+
+        params = quantize_tree(params, bits=8, min_size=1 << 10, min_dim=16)
+        int_lin = dispatch.IntegerLinConfig(
+            policy=args.int_policy, acc_bits=args.acc_bits,
+            k_tile=64, backend="jnp",
+        )
+        if args.census_threshold is not None:
+            census_watch = CensusWatch(
+                threshold=args.census_threshold, window=args.census_window
+            )
+    elif args.census_threshold is not None:
+        ap.error("--census-threshold requires --int-policy")
+
+    failure_injector = None
+    if args.inject_fail:
+        from repro.runtime import FailureInjector
+
+        failure_injector = FailureInjector(
+            {int(s) for s in args.inject_fail.split(",")}
+        )
+        args.fleet = True
+
     engine = ServingEngine(
         model, params, num_slots=args.slots, max_len=args.max_len,
         prefill_mode=args.prefill_mode,
         page_size=args.page_size, num_pages=args.num_pages,
         cache_dtype=args.cache_dtype or "float32",
         prefill_decode_ratio=args.prefill_decode_ratio,
+        int_lin=int_lin, census_watch=census_watch,
+        failure_injector=failure_injector,
     )
+    if int_lin is not None:
+        cal = {"tokens": jnp.asarray(
+            (np.arange(32).reshape(2, 16) % cfg.vocab_size + 1) % cfg.vocab_size,
+            jnp.int32,
+        )}
+        frozen = engine.calibrate([cal])
+        print(f"[serve] integer decode: policy={args.int_policy} "
+              f"acc_bits={args.acc_bits} calibrated {len(frozen)} sites"
+              + (f", census threshold={args.census_threshold} "
+                 f"window={args.census_window}" if census_watch else ""))
     if args.page_size:
         print(f"[serve] paged cache: page_size={args.page_size} "
               f"pages={engine.paging.num_pages} "
@@ -79,7 +155,21 @@ def main() -> None:
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()
-    engine.drain(reqs)
+    if args.fleet:
+        from repro.runtime import ServeSupervisor
+
+        fleet = ServingFleet(
+            snapshot_dir=args.snapshot_dir,
+            snapshot_every=args.snapshot_every,
+            default_deadline=args.deadline,
+        )
+        fleet.add_engine("m", engine, quota=args.quota)
+        for r in reqs:
+            fleet.submit("m", r)
+        ServeSupervisor(fleet).run()
+        fleet.wait()
+    else:
+        engine.drain(reqs)
     dt = time.perf_counter() - t0
     total_new = sum(len(r.output) for r in reqs)
     for r in reqs:
@@ -95,6 +185,20 @@ def main() -> None:
         print(f"[serve] pages: peak {st['pages_peak']} in use, "
               f"queue_wait_steps={st['queue_wait_steps']}, "
               f"hol_skips={st['hol_skips']}")
+    if args.fleet:
+        fs = fleet.stats
+        print(f"[serve] fleet: snapshots={fs['snapshots']} "
+              f"recoveries={fs['recoveries']} "
+              f"recovery_s={fs['recovery_s']:.3f} "
+              f"deadline_cancels={fs['deadline_cancels']} "
+              f"failed={fs['failed_requests']}")
+        for ev in fleet.events:
+            print(f"[serve] event: {ev}")
+    if census_watch is not None:
+        print(f"[serve] census: degrades={st['census_degrades']} "
+              f"rates={ {k: round(v, 4) for k, v in engine.last_census_rates.items()} }")
+        for ev in engine.events:
+            print(f"[serve] event: {ev}")
 
 
 if __name__ == "__main__":

@@ -338,3 +338,20 @@ def logits_sharding(mesh: Mesh, shape: tuple[int, ...]) -> NamedSharding:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+def place_tree(state: Any, shardings: Any) -> Any:
+    """device_put every leaf of ``state`` to its matching sharding.
+
+    Leaves round-trip through host (np.asarray) first, so arrays whose
+    previous placement no longer exists — a shrunken mesh after device
+    loss — re-place cleanly. ``shardings`` may be a prefix tree (the
+    treedef is taken from it, ``state`` flattened up to it), matching how
+    sharding rules describe nested cache pytrees.
+    """
+    import numpy as np
+
+    flat_s, tdef = jax.tree_util.tree_flatten(shardings)
+    flat_x = tdef.flatten_up_to(state)
+    out = [jax.device_put(np.asarray(x), s) for x, s in zip(flat_x, flat_s)]
+    return jax.tree_util.tree_unflatten(tdef, out)

@@ -59,7 +59,7 @@ def lin(x: jax.Array, w: Any, site: Optional[str] = None) -> jax.Array:
                 )
             cfg = dispatch.integer_lin_config()
             if cfg is not None:
-                return dispatch.qtensor_dot(x, w, cfg)
+                return dispatch.qtensor_dot(x, w, cfg, site=site)
     return x @ asarray(w, x.dtype)
 
 

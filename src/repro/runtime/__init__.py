@@ -1,6 +1,8 @@
 from repro.runtime.fault_tolerance import (  # noqa: F401
     FailureInjector,
+    ServeSupervisor,
     StragglerMonitor,
     TrainSupervisor,
+    default_retryable,
     elastic_remesh,
 )

@@ -15,6 +15,10 @@ Production framing (DESIGN.md §6), CPU-simulatable components:
   gaining hosts and re-shard a checkpointed state onto it. The batch axis
   shrinks; training resumes at the same step with the same params (tested
   at toy scale on CPU devices).
+- ``ServeSupervisor`` — the serving analogue: drives a ``ServingFleet``
+  step loop, restoring crashed engines from their latest serving-state
+  snapshot (optionally remeshing onto survivors first via the
+  ``on_failure`` hook) with the same bounded-restart budget.
 """
 
 from __future__ import annotations
@@ -28,6 +32,31 @@ import jax
 import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def default_retryable() -> tuple[type[BaseException], ...]:
+    """Exception types a supervisor treats as recoverable node failures.
+
+    Device loss / runtime aborts surface from jax as
+    ``jaxlib.xla_extension.XlaRuntimeError``. On current jaxlib that class
+    subclasses RuntimeError so the plain default already covers it, but
+    the subclassing is not contractual — list it explicitly so the
+    default survives a jaxlib that moves it off RuntimeError.
+    """
+    types: list[type[BaseException]] = [RuntimeError]
+    try:
+        from jaxlib.xla_extension import XlaRuntimeError
+
+        types.append(XlaRuntimeError)
+    except ImportError:
+        pass
+    try:
+        from jax.errors import JaxRuntimeError
+
+        types.append(JaxRuntimeError)
+    except ImportError:
+        pass
+    return tuple(dict.fromkeys(types))
 
 
 class FailureInjector:
@@ -84,12 +113,10 @@ def elastic_remesh(
     ``state`` (same rule used at startup, evaluated on the new mesh) —
     shrink/grow happens purely through the mesh shape.
     """
+    from repro.launch.sharding import place_tree
+
     mesh = make_mesh(new_num_devices)
-    shardings = sharding_rule(mesh)
-    flat_s, tdef = jax.tree_util.tree_flatten(shardings)
-    flat_x = tdef.flatten_up_to(state)
-    out = [jax.device_put(np.asarray(x), s) for x, s in zip(flat_x, flat_s)]
-    return jax.tree_util.tree_unflatten(tdef, out), mesh
+    return place_tree(state, sharding_rule(mesh)), mesh
 
 
 class TrainSupervisor:
@@ -106,12 +133,18 @@ class TrainSupervisor:
         ckpt_every: int = 50,
         max_restarts: int = 5,
         failure_injector: Optional[FailureInjector] = None,
+        retryable: Optional[tuple[type[BaseException], ...]] = None,
+        reset_after: int = 0,
     ):
         self.ckpt_dir = ckpt_dir
         self.step_fn = step_fn
         self.ckpt_every = ckpt_every
         self.max_restarts = max_restarts
         self.injector = failure_injector
+        self.retryable = retryable if retryable is not None else default_retryable()
+        # after this many consecutive clean steps the restart budget
+        # refills — long runs aren't killed by unrelated sporadic faults
+        self.reset_after = reset_after
         self.restarts = 0
         self.step_times: list[float] = []
 
@@ -124,6 +157,12 @@ class TrainSupervisor:
         start_step: int = 0,
     ) -> tuple[Any, int]:
         step = start_step
+        # entry-state snapshot: the restart-from-scratch path must rewind
+        # to *this* state and data position, not whatever the failed step
+        # left behind (host copies — state may alias donated buffers)
+        init_state = jax.tree_util.tree_map(np.asarray, state)
+        init_data = dict(data.state()) if data is not None else None
+        clean_steps = 0
         # resume if a checkpoint exists
         if latest_step(self.ckpt_dir) is not None:
             payload, ck_step = restore_checkpoint(
@@ -145,17 +184,26 @@ class TrainSupervisor:
                 state, _metrics = self.step_fn(state, batch)
                 self.step_times.append(time.perf_counter() - t0)
                 step += 1
+                clean_steps += 1
+                if self.reset_after and clean_steps >= self.reset_after:
+                    self.restarts = 0
                 if step % self.ckpt_every == 0 or step == num_steps:
                     save_checkpoint(
                         self.ckpt_dir, step, self._payload(state, data)
                     )
-            except RuntimeError:
+            except self.retryable:
                 self.restarts += 1
+                clean_steps = 0
                 if self.restarts > self.max_restarts:
                     raise
                 ck = latest_step(self.ckpt_dir)
                 if ck is None:
-                    step = start_step  # restart from scratch
+                    # restart from scratch: rewind to the entry snapshot,
+                    # not the mid-failure state/data position
+                    step = start_step
+                    state = init_state
+                    if data is not None:
+                        data.restore(dict(init_data))
                     continue
                 payload, step = restore_checkpoint(
                     self.ckpt_dir, self._payload(state, data)
@@ -173,3 +221,60 @@ class TrainSupervisor:
             "state": state,
             "data_step": np.asarray(data.step if data is not None else 0),
         }
+
+
+class ServeSupervisor:
+    """Supervised serving loop: step the fleet, recover on failure.
+
+    The serving analogue of ``TrainSupervisor``: each ``step()`` drives
+    one ``ServingFleet.step()`` under the retryable-exception umbrella.
+    On a retryable failure the supervisor asks the fleet to restore the
+    crashed engine from its latest snapshot (``fleet.recover``) and
+    retries the step; non-retryable exceptions and exhausted budgets
+    propagate. ``on_failure(fleet, error)`` runs before recovery — the
+    hook point for elastic remesh onto surviving devices
+    (``fleet.remesh_engine``) when the failure was a mesh-member loss.
+    """
+
+    def __init__(
+        self,
+        fleet: Any,
+        max_restarts: int = 5,
+        retryable: Optional[tuple[type[BaseException], ...]] = None,
+        reset_after: int = 0,
+        on_failure: Optional[Callable[[Any, BaseException], None]] = None,
+    ):
+        self.fleet = fleet
+        self.max_restarts = max_restarts
+        self.retryable = retryable if retryable is not None else default_retryable()
+        self.reset_after = reset_after
+        self.on_failure = on_failure
+        self.restarts = 0
+        self.recoveries: list[dict] = []
+        self._clean_steps = 0
+
+    def step(self) -> int:
+        """One protected fleet step. Returns the fleet's pending count."""
+        while True:
+            try:
+                n = self.fleet.step()
+            except self.retryable as e:
+                self.restarts += 1
+                self._clean_steps = 0
+                if self.restarts > self.max_restarts:
+                    raise
+                if self.on_failure is not None:
+                    self.on_failure(self.fleet, e)
+                self.recoveries.append(self.fleet.recover(e))
+                continue
+            self._clean_steps += 1
+            if self.reset_after and self._clean_steps >= self.reset_after:
+                self.restarts = 0
+            return n
+
+    def run(self, max_steps: int = 100_000) -> None:
+        """Step until the fleet drains (no active, queued, or backlogged work)."""
+        for _ in range(max_steps):
+            if self.step() == 0:
+                return
+        raise RuntimeError(f"fleet failed to drain within {max_steps} steps")

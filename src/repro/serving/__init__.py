@@ -1,4 +1,9 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    CensusWatch,
+    Request,
+    ServingEngine,
+)
+from repro.serving.fleet import ServingFleet  # noqa: F401
 from repro.serving.paged_cache import (  # noqa: F401
     PageAllocator,
     PagedSpec,

@@ -65,6 +65,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import logging
+import pickle
 import time
 from typing import Any, Optional
 
@@ -75,6 +77,8 @@ import numpy as np
 from repro.core import dispatch
 from repro.models.model import Model
 from repro.serving import paged_cache
+
+logger = logging.getLogger("repro.serving")
 
 
 @dataclasses.dataclass
@@ -87,8 +91,33 @@ class Request:
     # filled by the engine
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    failed: bool = False  # fleet gave up (deadline retries exhausted)
     t_submit: float = 0.0  # wall clock at submit()
     t_done: float = 0.0  # wall clock when the request finished
+
+
+@dataclasses.dataclass(frozen=True)
+class CensusWatch:
+    """Census-triggered graceful degradation knobs.
+
+    Every ``window`` decode steps the engine reads the per-site overflow
+    census rates accumulated since the last check. A site whose
+    event/dot ratio exceeds ``threshold`` (with at least ``min_dots``
+    dots observed — tiny windows don't trigger) is hot-swapped:
+    ``mode="wide"`` flips that site's policy to the overflow-free wide
+    accumulator, ``mode="widen"`` raises its ``acc_bits`` to
+    ``widen_to``. Either way the rest of the model keeps its narrow
+    policies, a structured event is appended to ``engine.events``, and
+    ``stats["census_degrades"]`` counts. Degradation is monotone — a
+    site never narrows back within an engine's lifetime (re-calibration
+    is the undo, not a rate dip).
+    """
+
+    threshold: float = 0.01
+    window: int = 8
+    mode: str = "wide"  # "wide" (policy swap) | "widen" (acc_bits raise)
+    widen_to: int = 30
+    min_dots: int = 1
 
 
 class ServingEngine:
@@ -107,9 +136,16 @@ class ServingEngine:
         num_pages: Optional[int] = None,
         prefill_decode_ratio: int = 0,
         admit_lookahead: int = 8,
+        failure_injector: Optional[Any] = None,
+        census_watch: Optional[CensusWatch] = None,
     ):
         if prefill_mode not in ("batched", "steps"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if census_watch is not None and int_lin is None:
+            raise ValueError(
+                "census_watch monitors integer projections — it needs "
+                "int_lin= (float engines have no overflow census)"
+            )
         if int_lin is not None:
             # K-sharded integer projections need a coherent (k_shards,
             # k_axis, mesh) triple before any step traces — fail at
@@ -192,6 +228,23 @@ class ServingEngine:
         self._budget = np.zeros(num_slots, np.int64)
         self._since_prefill = 0
         self._step_idx = 0
+        # fault tolerance: every live request is registered by uid so a
+        # snapshot restore can rebind engine state to the caller's
+        # Request objects; done uids never get resurrected
+        self.failure_injector = failure_injector
+        self._requests: dict[int, Request] = {}
+        self._done_uids: set[int] = set()
+        self._submit_seq = 0
+        self.events: list[dict] = []  # structured log (census degrades, ...)
+        # census-triggered degradation: one monitor for the engine's
+        # lifetime (jitted traces bind it permanently), drained per window
+        self.census_watch = census_watch
+        self._census = (
+            dispatch.CensusMonitor() if census_watch is not None else None
+        )
+        self._census_steps = 0
+        self._degraded: set[str] = set()
+        self.last_census_rates: dict[str, float] = {}
         # device-step accounting: admission latency is prefill_steps per
         # cohort (1 on the batched path, max prompt length - 1 on the
         # token-by-token path); queue_wait_steps sums engine steps each
@@ -205,15 +258,33 @@ class ServingEngine:
             "queue_wait_steps": 0,
             "pages_in_use": 0,
             "pages_peak": 0,
+            "census_degrades": 0,
         }
+
+        self._build_step_fns()
+
+    def _build_step_fns(self) -> None:
+        """(Re)build and re-jit the decode/prefill/reset step functions.
+
+        jax.jit caches by function object, so anything the closures bake
+        in at trace time — the ``int_lin`` config (census degradation
+        hot-swaps it), the mesh (elastic remesh replaces it) — requires
+        fresh function objects to force a retrace. Called from __init__
+        and again after every hot-swap/remesh.
+        """
+        model = self.model
 
         def _int_ctx():
             # trace-time context: QTensor projections lower to true
             # integer dot products through pqs_dot under this policy
-            # (sharded over the mesh when one is configured)
+            # (sharded over the mesh when one is configured); the census
+            # monitor context makes every site report overflow counts
+            stack = contextlib.ExitStack()
             if self.int_lin is not None:
-                return dispatch.integer_lin(self.int_lin)
-            return contextlib.nullcontext()
+                stack.enter_context(dispatch.integer_lin(self.int_lin))
+            if self._census is not None:
+                stack.enter_context(dispatch.census_monitor(self._census))
+            return stack
 
         def step(params, tok, caches, active):
             with _int_ctx():
@@ -266,8 +337,12 @@ class ServingEngine:
         cal = ActCalibrator(decay=decay)
         with dispatch.calibration(cal):
             # jit keeps the pass fast; the range observations ride
-            # jax.debug.callback, which fires at runtime under jit/scan
-            fwd = jax.jit(self.model.forward)
+            # jax.debug.callback, which fires at runtime under jit/scan.
+            # The lambda (not the bound method) matters: bound methods of
+            # a shared model compare equal across engines, so a second
+            # engine's jit would hit the first's trace cache and leave
+            # its observation callbacks bound to the first (dead) store
+            fwd = jax.jit(lambda p, b: self.model.forward(p, b))
             for batch in batches:
                 jax.block_until_ready(fwd(self.params, batch))
         frozen = cal.freeze(bits=act_bits, symmetric=symmetric)
@@ -305,6 +380,13 @@ class ServingEngine:
         # per-request sampling stream: reproducible under any batch
         # composition / admission order
         req._rng = np.random.default_rng((self._seed, req.uid))
+        # registry + submission order: a snapshot restore rebinds slots
+        # to these objects and re-queues post-snapshot submissions in
+        # their original order
+        req._submit_seq = self._submit_seq
+        self._submit_seq += 1
+        self._requests[req.uid] = req
+        self._done_uids.discard(req.uid)
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -503,6 +585,8 @@ class ServingEngine:
         admitted-but-pending prefills — 0 means the engine is idle.
         """
         self._step_idx += 1
+        if self.failure_injector is not None:
+            self.failure_injector.maybe_fail(self._step_idx)
         self._admit()
         self._maybe_prefill()
         active = [
@@ -534,10 +618,13 @@ class ServingEngine:
             ):
                 req.done = True
                 req.t_done = time.perf_counter()
+                self._done_uids.add(req.uid)
                 self._free_slot(slot)
         if self.paging is not None:
             self.stats["pages_in_use"] = self._alloc.in_use
             self.stats["pages_peak"] = self._alloc.peak_in_use
+        if self.census_watch is not None:
+            self._check_census()
         return len(active) + len(self._pending)
 
     def drain(self, requests: list[Request], max_steps: int = 100_000) -> None:
@@ -550,3 +637,287 @@ class ServingEngine:
     def cache_nbytes(self) -> int:
         """Current cache footprint in bytes (pools + tables + state)."""
         return paged_cache.cache_nbytes(self.caches)
+
+    # -- census-triggered graceful degradation --------------------------------
+
+    def _check_census(self) -> None:
+        """Window check: hot-swap any site saturating its accumulator.
+
+        Drains the per-site overflow census every ``window`` decode
+        steps. A site over threshold degrades exactly once (monotone):
+        its policy flips to ``wide`` (or its ``acc_bits`` widens), the
+        step functions re-jit against the new config, and a structured
+        event is logged. Degraded-to-wide sites keep reporting dots with
+        zero events, so the next window observably reads rate 0.0.
+        """
+        self._census_steps += 1
+        if self._census_steps < self.census_watch.window:
+            return
+        self._census_steps = 0
+        totals = self._census.drain()
+        self.last_census_rates = {
+            s: (e / d if d else 0.0) for s, (d, e) in totals.items()
+        }
+        changed = False
+        for site, (dots, events) in sorted(totals.items()):
+            if dots < self.census_watch.min_dots or site in self._degraded:
+                continue
+            rate = events / dots
+            if rate <= self.census_watch.threshold:
+                continue
+            if self.census_watch.mode == "widen":
+                self.int_lin = self.int_lin.with_site_acc_bits(
+                    site, self.census_watch.widen_to
+                )
+                action = {"acc_bits": self.census_watch.widen_to}
+            else:
+                self.int_lin = self.int_lin.with_site_policy(site, "wide")
+                action = {"policy": "wide"}
+            self._degraded.add(site)
+            self.stats["census_degrades"] += 1
+            changed = True
+            event = {
+                "event": "census_degrade",
+                "site": site,
+                "rate": rate,
+                "dots": dots,
+                "overflows": events,
+                "step": self._step_idx,
+                **action,
+            }
+            self.events.append(event)
+            logger.warning(
+                "census_degrade site=%s rate=%.4f (%d/%d dots) -> %s "
+                "at step %d",
+                site, rate, events, dots, action, self._step_idx,
+            )
+        if changed:
+            self._build_step_fns()
+
+    # -- fault tolerance: cancel / snapshot / restore / remesh ----------------
+
+    def cancel(self, uid: int) -> bool:
+        """Remove a live request wherever it is (queue, pending, slot).
+
+        Frees the slot/pages and unregisters the uid, so a later
+        snapshot restore will not resurrect it — the fleet's deadline
+        path re-queues the prompt itself. Returns False for unknown or
+        already-finished uids.
+        """
+        for qi, req in enumerate(self.queue):
+            if req.uid == uid:
+                self.queue.pop(qi)
+                self._requests.pop(uid, None)
+                return True
+        for pi, (slot, req) in enumerate(self._pending):
+            if req.uid == uid:
+                self._pending.pop(pi)
+                self._free_slot(slot)
+                self._requests.pop(uid, None)
+                return True
+        for slot, req in enumerate(self.slots):
+            if req is not None and req.uid == uid:
+                self._free_slot(slot)
+                self._requests.pop(uid, None)
+                return True
+        return False
+
+    def snapshot(self) -> dict:
+        """Serving-state snapshot: everything a mid-decode resume needs.
+
+        Two leaves, sized for ``checkpoint.save_checkpoint``:
+          "caches"  the cache pytree on host (page pools + tables +
+                    positions + scales)
+          "meta"    a pickled uint8 blob: per-slot request bindings
+                    (uid, emitted output, sampling RNG state), queue and
+                    pending order, decode cursors (pos/budget/
+                    next_token/ready), page-allocator state, stats,
+                    census-degradation overrides.
+        Restoring on a fresh or crashed engine resumes decode such that
+        in-flight requests continue bit-identically to a failure-free
+        run (same caches, same next token, same RNG stream position).
+        """
+
+        def req_state(req: Request) -> dict:
+            return {
+                "uid": req.uid,
+                "output": list(req.output),
+                "rng": req._rng.bit_generator.state
+                if getattr(req, "_rng", None) is not None
+                else None,
+            }
+
+        meta: dict[str, Any] = {
+            "step_idx": self._step_idx,
+            "submit_seq": self._submit_seq,
+            "slots": [
+                None if r is None else req_state(r) for r in self.slots
+            ],
+            "queue": [req_state(r) for r in self.queue],
+            "pending": [(slot, r.uid) for slot, r in self._pending],
+            "ready": self._ready.copy(),
+            "pos": self._pos.copy(),
+            "next_token": self._next_token.copy(),
+            "budget": self._budget.copy(),
+            "since_prefill": self._since_prefill,
+            "stats": dict(self.stats),
+            "done_uids": set(self._done_uids),
+            "degraded": set(self._degraded),
+            "site_policies": self.int_lin.site_policies
+            if self.int_lin is not None
+            else (),
+            "site_acc_bits": self.int_lin.site_acc_bits
+            if self.int_lin is not None
+            else (),
+        }
+        if self.paging is not None:
+            meta["paging"] = {
+                "table": self._table.copy(),
+                "sidx": self._sidx.copy(),
+                "free_sidx": list(self._free_sidx),
+                "alloc_free": list(self._alloc._free),
+                "alloc_owned": {
+                    k: list(v) for k, v in self._alloc._owned.items()
+                },
+                "alloc_pending": dict(self._alloc._pending),
+                "alloc_peak": self._alloc.peak_in_use,
+            }
+        return {
+            "caches": paged_cache.snapshot(self.caches),
+            "meta": np.frombuffer(pickle.dumps(meta), np.uint8),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Resume from a ``snapshot()`` after a crash (or on a twin engine).
+
+        Request objects are rebound from the live registry by uid:
+        covered in-flight requests get their emitted output truncated to
+        the snapshot point and their RNG stream rewound, so replayed
+        decode re-emits the identical continuation — no duplicate and no
+        lost tokens. Requests that finished since the snapshot stay
+        finished (their slots are freed; delivered output is never
+        regenerated). Requests submitted after the snapshot restart from
+        their prompt, re-queued in original submission order.
+        """
+        meta = pickle.loads(np.asarray(snap["meta"]).tobytes())
+        self.caches = paged_cache.restore(self.caches, snap["caches"])
+        self._step_idx = int(meta["step_idx"])
+        self._submit_seq = max(self._submit_seq, int(meta["submit_seq"]))
+        self._ready = np.asarray(meta["ready"]).copy()
+        self._pos = np.asarray(meta["pos"]).copy()
+        self._next_token = np.asarray(meta["next_token"]).copy()
+        self._budget = np.asarray(meta["budget"]).copy()
+        self._since_prefill = int(meta["since_prefill"])
+        self.stats = dict(meta["stats"])
+        self._done_uids |= set(meta["done_uids"])
+        if self.paging is not None:
+            pg = meta["paging"]
+            self._table = np.asarray(pg["table"]).copy()
+            self._sidx = np.asarray(pg["sidx"]).copy()
+            self._free_sidx = list(pg["free_sidx"])
+            alloc = paged_cache.PageAllocator(self.paging.num_pages)
+            alloc._free = list(pg["alloc_free"])
+            alloc._owned = {k: list(v) for k, v in pg["alloc_owned"].items()}
+            alloc._pending = dict(pg["alloc_pending"])
+            alloc.peak_in_use = int(pg["alloc_peak"])
+            self._alloc = alloc
+            self.caches = paged_cache.set_tables(
+                self.caches, self._table, self._sidx
+            )
+
+        def rebind(st: Optional[dict]) -> Optional[Request]:
+            if st is None:
+                return None
+            req = self._requests.get(st["uid"])
+            if req is None or req.done:
+                # finished (and delivered) since the snapshot, or
+                # cancelled by the fleet — never resurrect
+                return None
+            req.output[:] = st["output"]
+            req.done = False
+            if st["rng"] is not None:
+                req._rng = np.random.default_rng((self._seed, req.uid))
+                req._rng.bit_generator.state = st["rng"]
+            return req
+
+        covered: set[int] = set()
+        self.slots = [rebind(st) for st in meta["slots"]]
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                if meta["slots"][slot] is not None:
+                    # occupied at snapshot, finished since: release the
+                    # restored pages/state index for this slot
+                    self.slots[slot] = object.__new__(Request)  # placeholder
+                    self.slots[slot].uid = meta["slots"][slot]["uid"]
+                    self._free_slot(slot)
+                self.slots[slot] = None
+                self._ready[slot] = False
+            else:
+                covered.add(req.uid)
+        self.queue = []
+        for st in meta["queue"]:
+            req = rebind(st)
+            if req is not None:
+                self.queue.append(req)
+                covered.add(req.uid)
+        self._pending = []
+        for slot, uid in meta["pending"]:
+            req = self.slots[slot]
+            if req is not None and req.uid == uid:
+                self._pending.append((slot, req))
+        # post-snapshot submissions (and anything else live but not in
+        # the snapshot): restart from the prompt, original order
+        missing = sorted(
+            (
+                r
+                for uid, r in self._requests.items()
+                if uid not in covered and uid not in self._done_uids
+                and not r.done
+            ),
+            key=lambda r: getattr(r, "_submit_seq", 0),
+        )
+        for req in missing:
+            req.output.clear()
+            req._rng = np.random.default_rng((self._seed, req.uid))
+            self.queue.append(req)
+        # census degradation state: adopt the snapshot's overrides on
+        # top of any the engine already applied (monotone union — never
+        # narrow a site back during recovery)
+        if self.int_lin is not None:
+            cfg = self.int_lin
+            for site, pol in meta["site_policies"]:
+                if cfg.policy_for(site) != pol:
+                    cfg = cfg.with_site_policy(site, pol)
+            for site, bits in meta["site_acc_bits"]:
+                if cfg.acc_bits_for(site) < bits:
+                    cfg = cfg.with_site_acc_bits(site, bits)
+            if cfg is not self.int_lin:
+                self.int_lin = cfg
+                self._build_step_fns()
+            self._degraded |= set(meta["degraded"])
+        self._census_steps = 0
+        if self._census is not None:
+            self._census.drain()
+
+    def remesh(self, new_mesh) -> None:
+        """Re-place the engine on a different mesh (elastic shrink/grow).
+
+        Params and caches round-trip through host (surviving devices
+        hold complete copies under the serving placement) and the step
+        functions re-jit against the new mesh so the sharded integer
+        projections re-partition. In-flight decode state (positions,
+        tables, RNG streams) is untouched — decode resumes bit-identically
+        because ``pqs_dot`` is bit-exact at any mesh shape.
+        """
+        self.mesh = new_mesh
+        if self.int_lin is not None:
+            self.int_lin = dataclasses.replace(self.int_lin, mesh=new_mesh)
+
+        def rehost(a):
+            if isinstance(a, jax.Array):
+                return jnp.asarray(np.asarray(a))
+            return a
+
+        self.params = jax.tree_util.tree_map(rehost, self.params)
+        self.caches = jax.tree_util.tree_map(rehost, self.caches)
+        self._build_step_fns()

@@ -1,0 +1,305 @@
+"""Fault-tolerant serving fleet: many engines, one process, failures included.
+
+``ServingFleet`` runs several ``ServingEngine``s (different model configs,
+one shared process — and therefore one shared autotune cache, since the
+kernel autotuner is process-global) behind a single step loop:
+
+- **Admission quotas.** Each engine gets a ``quota`` — the max requests
+  the fleet keeps in flight (engine queue + slots) for that model at
+  once. Excess submissions wait in the fleet backlog; no engine's queue
+  can be starved or flooded by another model's traffic.
+- **Deadlines + bounded retry.** A request can carry a deadline (fleet
+  steps after forwarding). Past it, the fleet cancels it out of the
+  engine and re-queues the *prompt* with exponential backoff; after
+  ``max_retries`` the request is marked ``failed`` (never silently
+  dropped — the caller always observes done or failed).
+- **Snapshots.** Every ``snapshot_every`` fleet steps each engine's
+  serving state (page pools, page tables, slot bindings, RNG streams,
+  pending queue — see ``ServingEngine.snapshot``) is persisted through
+  ``checkpoint.AsyncCheckpointer`` (or kept in memory when no
+  ``snapshot_dir``). The write happens off-thread; the step loop never
+  waits on disk.
+- **Recovery.** ``recover()`` restores every engine that just failed
+  from its latest snapshot. In-flight requests that were live at the
+  snapshot resume bit-identically (same caches, same RNG stream
+  position, output truncated to the snapshot point so replay re-emits
+  the identical tokens — no duplicates, no losses); requests submitted
+  after the snapshot restart from their prompt. Pair with
+  ``runtime.ServeSupervisor`` for the catch-restore-retry loop, and its
+  ``on_failure`` hook + ``remesh_engine`` for mesh-member loss.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+from repro.serving.engine import Request, ServingEngine
+
+
+class ServingFleet:
+    def __init__(
+        self,
+        snapshot_dir: Optional[str] = None,
+        snapshot_every: int = 0,
+        keep: int = 3,
+        default_deadline: Optional[int] = None,
+        max_retries: int = 2,
+        backoff_steps: int = 4,
+    ):
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self.keep = keep
+        self.default_deadline = default_deadline
+        self.max_retries = max_retries
+        self.backoff_steps = backoff_steps
+        self.engines: dict[str, ServingEngine] = {}
+        self.quotas: dict[str, Optional[int]] = {}
+        self._ckpt: dict[str, Any] = {}  # name -> AsyncCheckpointer
+        self._last_snap: dict[str, dict] = {}  # name -> in-memory snapshot
+        # backlog entry: {"req", "retries", "not_before", "deadline",
+        # "forwarded_at"}; forwarded entries stay tracked until done
+        self._backlog: dict[str, list[dict]] = {}
+        self._inflight: dict[str, list[dict]] = {}
+        self._step_idx = 0
+        self._failed_engine: Optional[str] = None
+        self.events: list[dict] = []
+        self.stats = {
+            "snapshots": 0,
+            "recoveries": 0,
+            "retries": 0,
+            "deadline_cancels": 0,
+            "failed_requests": 0,
+            "recovery_s": 0.0,
+        }
+
+    # -- configuration --------------------------------------------------------
+
+    def add_engine(
+        self,
+        name: str,
+        engine: ServingEngine,
+        quota: Optional[int] = None,
+    ) -> ServingEngine:
+        if name in self.engines:
+            raise ValueError(f"engine {name!r} already registered")
+        self.engines[name] = engine
+        self.quotas[name] = quota
+        self._backlog[name] = []
+        self._inflight[name] = []
+        if self.snapshot_dir is not None:
+            from repro.checkpoint import AsyncCheckpointer
+            import os
+
+            self._ckpt[name] = AsyncCheckpointer(
+                os.path.join(self.snapshot_dir, name), keep=self.keep
+            )
+        # a step-0 snapshot always exists, so recovery has a target even
+        # before the first periodic snapshot fires
+        self._snapshot_engine(name)
+        return engine
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def submit(
+        self, name: str, req: Request, deadline: Optional[int] = None
+    ) -> None:
+        """Queue ``req`` for engine ``name``; forwarded under its quota."""
+        if name not in self.engines:
+            raise KeyError(f"unknown engine {name!r}")
+        self._backlog[name].append(
+            {
+                "req": req,
+                "retries": 0,
+                "not_before": 0,
+                "deadline": deadline
+                if deadline is not None
+                else self.default_deadline,
+                "forwarded_at": None,
+            }
+        )
+
+    def _forward(self, name: str) -> None:
+        eng = self.engines[name]
+        quota = self.quotas[name]
+        backlog = self._backlog[name]
+        inflight = self._inflight[name]
+        i = 0
+        while i < len(backlog):
+            if quota is not None and len(inflight) >= quota:
+                break
+            entry = backlog[i]
+            if entry["not_before"] > self._step_idx:
+                i += 1
+                continue
+            req: Request = entry["req"]
+            req.output.clear()
+            req.done = False
+            eng.submit(req)
+            entry["forwarded_at"] = self._step_idx
+            inflight.append(entry)
+            backlog.pop(i)
+        # backlog order is preserved: entries only leave when forwarded
+
+    def _reap(self, name: str) -> None:
+        inflight = self._inflight[name]
+        self._inflight[name] = [e for e in inflight if not e["req"].done]
+
+    def _deadlines(self, name: str) -> None:
+        eng = self.engines[name]
+        keep = []
+        for entry in self._inflight[name]:
+            req: Request = entry["req"]
+            dl = entry["deadline"]
+            if (
+                dl is None
+                or req.done
+                or self._step_idx - entry["forwarded_at"] <= dl
+            ):
+                keep.append(entry)
+                continue
+            eng.cancel(req.uid)
+            self.stats["deadline_cancels"] += 1
+            entry["retries"] += 1
+            entry["forwarded_at"] = None
+            if entry["retries"] > self.max_retries:
+                req.failed = True
+                self.stats["failed_requests"] += 1
+                self.events.append(
+                    {
+                        "event": "request_failed",
+                        "engine": name,
+                        "uid": req.uid,
+                        "retries": entry["retries"] - 1,
+                        "step": self._step_idx,
+                    }
+                )
+                continue
+            entry["not_before"] = self._step_idx + self.backoff_steps * (
+                2 ** (entry["retries"] - 1)
+            )
+            self._backlog[name].append(entry)
+            self.events.append(
+                {
+                    "event": "deadline_retry",
+                    "engine": name,
+                    "uid": req.uid,
+                    "retry": entry["retries"],
+                    "not_before": entry["not_before"],
+                    "step": self._step_idx,
+                }
+            )
+        self._inflight[name] = keep
+
+    # -- snapshots / recovery -------------------------------------------------
+
+    def _snapshot_engine(self, name: str) -> None:
+        snap = self.engines[name].snapshot()
+        self._last_snap[name] = snap
+        ck = self._ckpt.get(name)
+        if ck is not None:
+            ck.save(self._step_idx, snap)
+        self.stats["snapshots"] += 1
+
+    def recover(self, error: Optional[BaseException] = None) -> dict:
+        """Restore the engine(s) that just failed from latest snapshots.
+
+        Called by ``ServeSupervisor`` after a retryable step failure;
+        restores the engine the failed step was driving (or every engine
+        when attribution is unknown). Returns a recovery record with the
+        wall-clock restore latency — the bench's recovery-latency metric.
+        """
+        t0 = time.perf_counter()
+        names = (
+            [self._failed_engine]
+            if self._failed_engine is not None
+            else list(self.engines)
+        )
+        for name in names:
+            eng = self.engines[name]
+            ck = self._ckpt.get(name)
+            snap, step = self._last_snap.get(name), None
+            if ck is not None:
+                try:
+                    ck.wait()  # surface in-flight write errors first
+                finally:
+                    pass
+                from repro.checkpoint import load_checkpoint, unflatten_like
+                import numpy as np
+
+                flat, step = load_checkpoint(ck.ckpt_dir)
+                # template supplies tree structure only (meta is a
+                # variable-length blob, so its shape can't matter)
+                snap = unflatten_like(
+                    {"caches": eng.caches, "meta": np.zeros(0, np.uint8)},
+                    flat,
+                )
+            if snap is None:
+                raise RuntimeError(f"no snapshot to recover engine {name!r}")
+            eng.restore(snap)
+            # forwarded-but-rolled-back entries go back under deadline
+            # accounting from the restore point
+            for entry in self._inflight[name]:
+                if not entry["req"].done:
+                    entry["forwarded_at"] = self._step_idx
+        dt = time.perf_counter() - t0
+        self.stats["recoveries"] += 1
+        self.stats["recovery_s"] += dt
+        rec = {
+            "event": "recovered",
+            "engines": names,
+            "error": repr(error) if error is not None else None,
+            "step": self._step_idx,
+            "seconds": dt,
+            "snapshot_step": step,
+        }
+        self.events.append(rec)
+        self._failed_engine = None
+        return rec
+
+    def remesh_engine(self, name: str, new_mesh) -> None:
+        """Shrink/grow one engine's mesh (mesh-member loss recovery)."""
+        self.engines[name].remesh(new_mesh)
+        self.events.append(
+            {
+                "event": "remeshed",
+                "engine": name,
+                "devices": len(new_mesh.devices.flatten()),
+                "step": self._step_idx,
+            }
+        )
+
+    # -- step loop ------------------------------------------------------------
+
+    def step(self) -> int:
+        """One fleet step: forward, step every engine, reap, deadlines.
+
+        Returns total outstanding work (engine-active + backlogged);
+        0 means the fleet is drained. A crash inside an engine's step
+        leaves ``self._failed_engine`` naming it for ``recover``.
+        """
+        self._step_idx += 1
+        total = 0
+        for name, eng in self.engines.items():
+            self._forward(name)
+            self._failed_engine = name
+            n = eng.step()
+            self._failed_engine = None
+            self._reap(name)
+            self._deadlines(name)
+            total += n + len(eng.queue) + len(self._backlog[name])
+            total += sum(
+                1 for e in self._inflight[name] if not e["req"].done
+            )
+        if (
+            self.snapshot_every
+            and self._step_idx % self.snapshot_every == 0
+        ):
+            for name in self.engines:
+                self._snapshot_engine(name)
+        return total
+
+    def wait(self) -> None:
+        """Block on outstanding snapshot writes (surfaces write errors)."""
+        for ck in self._ckpt.values():
+            ck.wait()

@@ -50,6 +50,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -410,3 +411,43 @@ def cache_nbytes(caches: Any) -> int:
         for leaf in jax.tree_util.tree_leaves(caches)
         if hasattr(leaf, "size")
     )
+
+
+def snapshot(caches: Any) -> Any:
+    """Host copy of a cache pytree (pool contents + tables + positions).
+
+    Every leaf is pulled to host as np.ndarray — the serving-state
+    snapshot the fleet persists via AsyncCheckpointer. Works on dense
+    caches too; paged pools are the interesting case (page contents,
+    per-slot page tables, scales) because restoring them resumes
+    mid-decode attention bit-identically.
+    """
+    return jax.tree_util.tree_map(np.asarray, caches)
+
+
+def restore(template: Any, snap: Any) -> Any:
+    """Rebuild a device cache pytree from a ``snapshot()``.
+
+    ``template`` supplies structure, dtypes and device placement (a
+    freshly built cache, or the pre-failure one); ``snap`` supplies the
+    values. Leaves are shape-checked, cast to the template dtype (int8
+    pools survive a float round-trip through npz untouched since values
+    are exact), and device_put to the template leaf's sharding when it
+    is a committed jax array — so a restore after ``elastic_remesh``
+    lands pools on the new mesh.
+    """
+    t_leaves, tdef = jax.tree_util.tree_flatten(template)
+    s_leaves = tdef.flatten_up_to(snap)
+    out = []
+    for t, s in zip(t_leaves, s_leaves):
+        arr = np.asarray(s)
+        if tuple(arr.shape) != tuple(np.shape(t)):
+            raise ValueError(
+                f"cache snapshot shape mismatch: {arr.shape} vs {np.shape(t)}"
+            )
+        arr = arr.astype(jnp.dtype(t.dtype)) if hasattr(t, "dtype") else arr
+        if isinstance(t, jax.Array) and t.committed:
+            out.append(jax.device_put(arr, t.sharding))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(tdef, out)

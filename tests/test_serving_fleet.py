@@ -1,0 +1,333 @@
+"""Fault-tolerant serving fleet: crash recovery, degradation, quotas.
+
+Acceptance suite for the fleet layer (serving/fleet.py + the engine's
+snapshot/restore/census paths):
+
+- an injected engine crash mid-decode recovers from the latest snapshot
+  with token streams BIT-IDENTICAL to a failure-free run — untouched
+  requests unaffected, interrupted ones with no lost or duplicated
+  emissions;
+- a workload driven past its calibrated activation range trips the
+  census guardrail: the saturating site hot-swaps to the wide policy
+  (event logged, rate observably 0.0 afterward) while in-range sites
+  keep their narrow accumulators;
+- quotas bound per-model admission; deadlines cancel + retry with
+  backoff and never silently drop a request;
+- a mesh-member drop remeshes onto the survivors and resumes
+  bit-identically (>= 4 devices; scripts/ci.sh's ``fault`` stage).
+"""
+
+import os
+
+# same opt-in idiom as test_sharded_dispatch.py: only effective before
+# the first jax backend init, never leaks into the single-device suite
+if os.environ.get("REPRO_FORCE_MULTIDEVICE") and (
+    "--xla_force_host_platform_device_count"
+    not in os.environ.get("XLA_FLAGS", "")
+):
+    _v = os.environ["REPRO_FORCE_MULTIDEVICE"]
+    _n = int(_v) if _v.isdigit() and int(_v) > 1 else 8
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+import dataclasses  # noqa: E402
+import tempfile  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import dispatch  # noqa: E402
+from repro.core.qtensor import is_qtensor, quantize_tree  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.runtime import FailureInjector, ServeSupervisor  # noqa: E402
+from repro.serving import (  # noqa: E402
+    CensusWatch,
+    Request,
+    ServingEngine,
+    ServingFleet,
+)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def smoke_qparams(smoke_model):
+    _, _, params = smoke_model
+    return quantize_tree(params, bits=8, min_size=1 << 10, min_dim=16)
+
+
+def _requests():
+    # mixed greedy/temperature, mixed lengths: exercises RNG-state
+    # restore and unequal completion times around the failure point
+    return [
+        Request(
+            uid=i,
+            prompt=np.asarray([1 + i, 2, 3 + i], np.int32),
+            max_new_tokens=4 + (i % 3),
+            temperature=0.0 if i % 2 == 0 else 0.8,
+        )
+        for i in range(6)
+    ]
+
+
+def _drive(fleet, reqs, schedule, max_steps=500, **sup_kw):
+    """Supervised fleet loop with submissions staged by loop index."""
+    sup = ServeSupervisor(fleet, **sup_kw)
+    last_submit = max(schedule)
+    for step in range(max_steps):
+        for i in schedule.get(step, ()):
+            fleet.submit("m", reqs[i])
+        if sup.step() == 0 and step >= last_submit:
+            return sup
+    raise AssertionError("fleet failed to drain")
+
+
+def test_fleet_crash_recovery_bit_identical(smoke_model, tmp_path):
+    """FailureInjector kills the engine mid-decode (twice); recovery from
+    the snapshot reproduces the failure-free token streams exactly."""
+    _, model, params = smoke_model
+    schedule = {0: (0, 1, 2, 3), 5: (4, 5)}  # some submitted post-snapshot
+
+    def run(inject):
+        reqs = _requests()
+        eng = ServingEngine(
+            model, params, num_slots=2, max_len=32, page_size=8,
+            num_pages=8,
+            failure_injector=FailureInjector({5, 11}) if inject else None,
+        )
+        fleet = ServingFleet(
+            snapshot_dir=str(tmp_path / "snaps") if inject else None,
+            snapshot_every=3 if inject else 0,
+        )
+        fleet.add_engine("m", eng)
+        sup = _drive(fleet, reqs, schedule)
+        fleet.wait()
+        assert all(r.done and not r.failed for r in reqs)
+        return {r.uid: list(r.output) for r in reqs}, fleet, sup
+
+    base, _, _ = run(inject=False)
+    out, fleet, sup = run(inject=True)
+    assert fleet.stats["recoveries"] == 2 and len(sup.recoveries) == 2
+    assert [e["event"] for e in fleet.events].count("recovered") == 2
+    # bit-identical streams: no lost, duplicated, or diverged emissions
+    assert out == base
+
+
+def test_engine_snapshot_restore_replays_identical_tokens(smoke_model):
+    """Restore rewinds emitted output to the snapshot point; replay
+    re-emits the identical continuation (no dupes, no gaps)."""
+    _, model, params = smoke_model
+    reqs = _requests()
+    eng = ServingEngine(
+        model, params, num_slots=2, max_len=32, page_size=8, num_pages=8
+    )
+    for r in reqs[:4]:
+        eng.submit(r)
+    for _ in range(6):
+        eng.step()
+    snap = eng.snapshot()
+    mid = {r.uid: len(r.output) for r in reqs[:4]}
+    while eng.step() or eng.queue:
+        pass
+    first = {r.uid: list(r.output) for r in reqs[:4]}
+    assert all(r.done for r in reqs[:4])
+
+    eng.restore(snap)
+    # output really was truncated back to the snapshot point
+    for r in reqs[:4]:
+        if not r.done:  # in-flight at snapshot
+            assert len(r.output) == mid[r.uid]
+    while eng.step() or eng.queue:
+        pass
+    second = {r.uid: list(r.output) for r in reqs[:4]}
+    assert second == first
+
+
+def test_census_degradation_fires_on_drifted_workload(smoke_qparams, smoke_model):
+    """Workload past the calibrated activation range: the saturating
+    site (w_out — its input is the unnormalized silu(gate)*up) degrades
+    to wide, in-range sites keep their narrow policy, and the overflow
+    rate observably drops to zero."""
+    _, model, _ = smoke_model
+    il = dispatch.IntegerLinConfig(
+        policy="sorted_tiled_seq", acc_bits=17, k_tile=64, backend="jnp"
+    )
+    watch = CensusWatch(threshold=0.01, window=4)
+    cal_batch = {
+        "tokens": jnp.asarray(
+            (np.arange(32).reshape(2, 16) % 97 + 1), jnp.int32
+        )
+    }
+
+    def drift(params, factor):
+        # inflate w_up's dequant scale post-calibration: w_out's input
+        # (silu(gate) * up) leaves the frozen static range while every
+        # rmsnorm-shielded site stays in calibration
+        def fix(path, leaf):
+            if is_qtensor(leaf) and any("w_up" in str(p) for p in path):
+                return dataclasses.replace(leaf, scale=leaf.scale * factor)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(
+            fix, params, is_leaf=is_qtensor
+        )
+
+    def run(drifted):
+        eng = ServingEngine(
+            model, smoke_qparams, num_slots=4, max_len=48,
+            int_lin=il, census_watch=watch,
+        )
+        eng.calibrate([cal_batch])
+        if drifted:
+            eng.params = drift(eng.params, 8)
+        reqs = [
+            Request(
+                uid=i, prompt=np.asarray([1 + i, 2, 3 + i, 5], np.int32),
+                max_new_tokens=20,
+            )
+            for i in range(4)
+        ]
+        eng.drain(reqs)
+        assert all(r.done for r in reqs)
+        return eng
+
+    # in-range traffic: nothing degrades
+    eng = run(drifted=False)
+    assert eng.stats["census_degrades"] == 0 and eng.events == []
+
+    # drifted traffic: exactly w_out degrades, with a structured event
+    eng = run(drifted=True)
+    assert eng._degraded == {"w_out"}
+    assert eng.stats["census_degrades"] == 1
+    (event,) = [e for e in eng.events if e["event"] == "census_degrade"]
+    assert event["site"] == "w_out" and event["rate"] > 0.01
+    assert eng.int_lin.policy_for("w_out") == "wide"
+    # in-range layers keep the narrow accumulator policy
+    for site in ("wq", "wk", "wv", "wo", "w_gate", "w_up"):
+        assert eng.int_lin.policy_for(site) == "sorted_tiled_seq"
+    # post-swap the degraded site's overflow rate reads zero
+    assert eng.last_census_rates["w_out"] == 0.0
+
+
+def test_fleet_quota_bounds_inflight(smoke_model):
+    _, model, params = smoke_model
+    reqs = _requests()
+    eng = ServingEngine(model, params, num_slots=4, max_len=32)
+    fleet = ServingFleet()
+    fleet.add_engine("m", eng, quota=2)
+    for r in reqs:
+        fleet.submit("m", r)
+    peak = 0
+    for _ in range(300):
+        n = fleet.step()
+        peak = max(peak, len(fleet._inflight["m"]))
+        if n == 0:
+            break
+    assert n == 0 and all(r.done for r in reqs)
+    assert peak <= 2  # quota held at every step
+
+
+def test_fleet_deadline_retry_and_failure(smoke_model):
+    _, model, params = smoke_model
+
+    # one slot: the long request occupies it and the short one's
+    # deadline expires while it queues; the retry (after backoff) lands
+    # once the slot frees, and the request completes — never dropped
+    long_req = Request(uid=1, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=12)
+    short = Request(uid=2, prompt=np.asarray([4, 5], np.int32),
+                    max_new_tokens=2)
+    eng = ServingEngine(model, params, num_slots=1, max_len=32)
+    fleet = ServingFleet(max_retries=3, backoff_steps=2)
+    fleet.add_engine("m", eng)
+    fleet.submit("m", long_req)
+    fleet.submit("m", short, deadline=4)
+    for _ in range(300):
+        if fleet.step() == 0:
+            break
+    assert long_req.done and short.done and not short.failed
+    assert fleet.stats["deadline_cancels"] >= 1
+    assert any(e["event"] == "deadline_retry" for e in fleet.events)
+
+    # impossible deadline: retries exhaust, the request is marked
+    # failed (observable), and the fleet still drains
+    doomed = Request(uid=3, prompt=np.asarray([1, 2, 3], np.int32),
+                     max_new_tokens=12)
+    eng2 = ServingEngine(model, params, num_slots=1, max_len=32)
+    fleet2 = ServingFleet(max_retries=2, backoff_steps=1)
+    fleet2.add_engine("m", eng2)
+    fleet2.submit("m", doomed, deadline=2)
+    for _ in range(300):
+        if fleet2.step() == 0:
+            break
+    assert doomed.failed and not doomed.done
+    assert fleet2.stats["failed_requests"] == 1
+    assert any(e["event"] == "request_failed" for e in fleet2.events)
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs >= 4 devices (fault CI stage)"
+)
+def test_mesh_member_drop_remesh_recovery(smoke_model, smoke_qparams):
+    """Kill a mesh-sharded engine mid-decode, drop half its devices,
+    remesh onto the survivors, recover from the snapshot: every token
+    stream matches the failure-free run on the original full mesh.
+    (The baseline keeps the same mesh: the dynamic-quant absmax
+    reduction is mesh-shape-sensitive at the last ulp, so bit-exactness
+    is guaranteed against the same starting topology, which is exactly
+    the recovery contract.)"""
+    from repro.launch.mesh import make_host_serve_mesh, shrink_serve_mesh
+
+    cfg, model, _ = smoke_model
+    il = dispatch.IntegerLinConfig(
+        policy="sorted_tiled_seq", acc_bits=24, k_tile=64, backend="jnp"
+    )
+
+    def mk_reqs():
+        rng = np.random.default_rng(1)
+        return [
+            Request(
+                uid=i,
+                prompt=rng.integers(1, cfg.vocab_size, 4).astype(np.int32),
+                max_new_tokens=3,
+            )
+            for i in range(3)
+        ]
+
+    def run(mesh, crash):
+        reqs = mk_reqs()
+        eng = ServingEngine(
+            model, smoke_qparams, num_slots=2, max_len=16,
+            int_lin=il, mesh=mesh,
+            failure_injector=FailureInjector({4}) if crash else None,
+        )
+        fleet = ServingFleet(snapshot_every=2 if crash else 0)
+        fleet.add_engine("m", eng)
+        for r in reqs:
+            fleet.submit("m", r)
+
+        def lose_half(fl, err):
+            survivors = shrink_serve_mesh(mesh, lost=len(jax.devices()) // 2)
+            fl.remesh_engine("m", survivors)
+
+        sup = ServeSupervisor(fleet, on_failure=lose_half if crash else None)
+        sup.run()
+        assert all(r.done for r in reqs)
+        return {r.uid: list(r.output) for r in reqs}, fleet
+
+    base, _ = run(make_host_serve_mesh(), crash=False)
+    out, fleet = run(make_host_serve_mesh(), crash=True)
+    assert fleet.stats["recoveries"] == 1
+    assert any(e["event"] == "remeshed" for e in fleet.events)
+    assert out == base
