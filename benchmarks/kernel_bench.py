@@ -189,25 +189,39 @@ def bench_kernels(quick: bool = False) -> list[dict]:
     # correctness is asserted against the hierarchical jnp oracle —
     # pqs_dot(k_shards=) on the jnp backend — not against the full-K
     # result; both variants are timed so the --check-against guard
-    # covers the K-sharded entry points too.
+    # covers the K-sharded entry points too. Weights are pre-enforced
+    # against the acc_bits=16 accumulator bound (certify.truncate_rows)
+    # so a certificate holds for them: certified_us times the
+    # census-free fast path next to the censused full_us, asserted
+    # bit-identical in-run and guarded by CERTIFIED_SLACK below.
+    from repro.core import certify
+
     for policy, k_shards in (("clip", 4), ("sorted_tiled_seq", 4)):
         m, n, k = (16, 16, 2048)
         x = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
-        w = jnp.asarray(rng.integers(-127, 127, (n, k)), jnp.int8)
+        w = jnp.asarray(certify.truncate_rows(
+            rng.integers(-127, 127, (n, k)).astype(np.int32), 16, 8
+        ).astype(np.int8))
         base = dict(acc_bits=16, policy=policy, k_tile=k_tile,
                     block_m=bm, block_n=bn, backend="pallas")
         full_us = _time_us(lambda: pqs_dot(x, w, **base), reps)
+        certified_us = _time_us(
+            lambda: pqs_dot(x, w, certified=True, **base), reps)
         kshard_us = _time_us(
             lambda: pqs_dot(x, w, k_shards=k_shards, **base), reps)
         oracle = pqs_dot(x, w, acc_bits=16, policy=policy, k_tile=k_tile,
                          k_shards=k_shards, backend="jnp")
         out = pqs_dot(x, w, k_shards=k_shards, **base)
         assert (np.asarray(out) == np.asarray(oracle)).all(), policy
+        cert_out = pqs_dot(x, w, certified=True, **base)
+        full_out = pqs_dot(x, w, **base)
+        assert (np.asarray(cert_out) == np.asarray(full_out)).all(), policy
         rows.append({
             "policy": f"kshard:{policy}", "m": m, "n": n, "k": k,
             "blocks": f"{bm}x{bn}x{k_tile}", "k_shards": k_shards,
             "kshard_us": round(kshard_us),
             "full_us": round(full_us),
+            "certified_us": round(certified_us),
         })
 
     # tuned vs static blocks: run the measured autotuner on one shape per
@@ -255,7 +269,7 @@ def bench_kernels(quick: bool = False) -> list[dict]:
             "twopass_us", "onepass_vmem_kib", "twopass_vmem_kib",
             "nm_expand_us", "nm_gather_us", "dense_us",
             "weight_bytes_vs_dense", "kshard_us", "full_us",
-            "static_us", "tuned_us", "tuned_blocks"]
+            "certified_us", "static_us", "tuned_us", "tuned_blocks"]
     emit("BENCH_kernels", rows, keys)
     return rows
 
@@ -265,6 +279,11 @@ def bench_kernels(quick: bool = False) -> list[dict]:
 # from the SAME run on the same machine, so the slack only has to absorb
 # timer jitter, not machine drift — much tighter than ``tolerance``.
 GATHER_SLACK = 1.25
+
+# Same-run guard for the certified fast path: dropping the census and
+# the stepwise-saturation bookkeeping must never cost wall time over the
+# censused narrow-policy dot it replaces.
+CERTIFIED_SLACK = 1.25
 
 
 def check_against(
@@ -281,7 +300,11 @@ def check_against(
     Additionally every fresh nm row timing both implementations must
     show ``nm_gather_us <= GATHER_SLACK * nm_expand_us`` (reported as
     field ``nm_gather_vs_expand``) — sparsity has to pay in wall time,
-    not only in bytes. Returns the list of regressions: (key, field,
+    not only in bytes — and every fresh row timing both the certified
+    and censused paths must show ``certified_us <= CERTIFIED_SLACK *
+    full_us`` (field ``certified_vs_censused``): the certificate has to
+    pay, a certified path slower than the census it removed is a
+    regression. Returns the list of regressions: (key, field,
     baseline_us, now_us) where now_us may be a non-numeric marker.
     """
     import json
@@ -318,6 +341,10 @@ def check_against(
         if (isinstance(ge, (int, float)) and isinstance(ex, (int, float))
                 and ex > 0 and ge > GATHER_SLACK * ex):
             regressions.append((key(r), "nm_gather_vs_expand", ex, ge))
+        ce, fu = r.get("certified_us"), r.get("full_us")
+        if (isinstance(ce, (int, float)) and isinstance(fu, (int, float))
+                and fu > 0 and ce > CERTIFIED_SLACK * fu):
+            regressions.append((key(r), "certified_vs_censused", fu, ce))
     return regressions
 
 

@@ -5,11 +5,13 @@
 # Actions job invokes a single stage of this script, so what CI gates is
 # exactly what `scripts/ci.sh --stage all` checks on a laptop.
 #
-#   scripts/ci.sh [--stage lint|unit|shard|smoke|bench|serve|fault|all] [pytest args]
+#   scripts/ci.sh [--stage lint|unit|shard|smoke|bench|serve|fault|certify|all] [pytest args]
 #
 #   lint   ruff check + ruff format --check (config in pyproject.toml);
-#          skipped with a notice when ruff is not installed (the offline
-#          container does not ship it — CI installs it)
+#          skipped with a notice when ruff is not installed locally (the
+#          offline container does not ship it) — but a hard FAILURE when
+#          it is missing under CI ($CI/$GITHUB_ACTIONS set), so a broken
+#          setup step can never silently skip the lint gate
 #   unit   full single-device test suite (exactly as the roadmap
 #          specifies), incl. the property-based K-shard parity suite
 #          (tests/test_property_parity.py, >= 200 drawn cases per run
@@ -31,6 +33,11 @@
 #          supervisors, snapshot/restore bit-exactness, census-triggered
 #          degradation, and the mesh-member-drop remesh-recovery tests
 #          that self-skip in the unit stage
+#   certify  accumulator-safety certification gate on the same 8-way
+#          forced mesh: tiny-model QAT -> certify -> serve smoke proving
+#          the certified engine decodes a drifted workload with ZERO
+#          census events, bit-identical to the censused path, while an
+#          uncertified engine on the same fleet still degrades
 #   all    every stage above, in order (the default)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -46,9 +53,9 @@ if [[ "${1:-}" == "--stage" ]]; then
     shift 2
 fi
 case "$STAGE" in
-    lint|unit|shard|smoke|bench|serve|fault|all) ;;
+    lint|unit|shard|smoke|bench|serve|fault|certify|all) ;;
     *) echo "unknown stage '$STAGE'" \
-            "(lint|unit|shard|smoke|bench|serve|fault|all)" >&2
+            "(lint|unit|shard|smoke|bench|serve|fault|certify|all)" >&2
        exit 2 ;;
 esac
 
@@ -87,6 +94,12 @@ lint_stage() {
     if command -v ruff >/dev/null 2>&1; then
         ruff check src tests benchmarks examples scripts
         ruff format --check src tests benchmarks examples scripts
+    elif [[ -n "${CI:-}${GITHUB_ACTIONS:-}" ]]; then
+        # under CI the setup step installs ruff; its absence means the
+        # environment is broken, and a skip here would silently drop
+        # the lint gate from every run
+        echo "ruff not installed under CI — lint stage FAILED" >&2
+        return 1
     else
         echo "ruff not installed — lint stage skipped (CI installs it)"
     fi
@@ -130,6 +143,14 @@ fault_stage() {
         tests/test_serving_fleet.py
 }
 
+certify_stage() {
+    # the certification acceptance gate (see tests/test_certify.py):
+    # QAT -> certify -> serve on the same forced mesh the fault stage
+    # uses, proving the census-free path and its bit-identity
+    REPRO_FORCE_MULTIDEVICE=8 python -m pytest -x -q \
+        tests/test_certify.py
+}
+
 case "$STAGE" in
     lint)  run_stage lint lint_stage ;;
     unit)  run_stage unit unit_stage "$@" ;;
@@ -138,6 +159,7 @@ case "$STAGE" in
     bench) run_stage bench bench_stage ;;
     serve) run_stage serve serve_stage ;;
     fault) run_stage fault fault_stage ;;
+    certify) run_stage certify certify_stage ;;
     all)
         run_stage lint lint_stage
         run_stage unit unit_stage "$@"
@@ -146,5 +168,6 @@ case "$STAGE" in
         run_stage bench bench_stage
         run_stage serve serve_stage
         run_stage fault fault_stage
+        run_stage certify certify_stage
         ;;
 esac

@@ -17,6 +17,28 @@ integer row — truncation guarantees the post-projection L1 never exceeds the
 bound. During QAT the projection runs inside a straight-through estimator,
 reproducing both A2Q's guarantee and its accuracy cost / induced
 unstructured sparsity (small integers truncate to zero) that PQS avoids.
+
+Asymmetric tightening (certification): the symmetric L1 bound above assumes
+|x^q| <= 2^(b-1) on *both* sides, but the serving path clips integer
+activation codes to qrange(b) = [-2^(b-1), 2^(b-1)-1] — the positive side is
+one code short. The true worst case is therefore one-sided and
+sign-dependent: splitting each weight row into positive and negative parts
+(wp = sum of positive entries, wn = sum of |negative| entries) the extreme
+partial-sum excursions under ANY accumulation order are
+
+    pos(w) = qhi * wp + |qlo| * wn     (all products driven positive)
+    neg(w) = |qlo| * wp + qhi * wn     (all products driven negative)
+
+and a p-bit register is safe iff pos <= 2^(p-1)-1 and neg <= 2^(p-1).
+Every partial sum is a subset sum of the K products, so these two numbers
+bound every intermediate value reachable under any ordering/tiling — the
+foundation of `core.certify`. Functions below accept an optional frozen
+activation range (``act_qparams`` from calibrate→freeze, or plain
+``act_bits``) and fall back to the legacy symmetric assumption when absent.
+
+Float32 caveat: the jnp projections compute row sums in f32, exact for
+excursions up to 2^24. The certification pass (`core.certify`) redoes the
+arithmetic host-side in int64 and is the authority on the guarantee.
 """
 
 from __future__ import annotations
@@ -29,43 +51,154 @@ import jax.numpy as jnp
 from repro.core.quant import qrange
 
 
+def act_code_range(
+    act_qparams=None, act_bits: int | None = None
+) -> tuple[int, int] | None:
+    """Admissible integer activation codes at serving time, or None.
+
+    The serving path (`dispatch.qtensor_dot`) clips quantized activations to
+    qrange(bits) on both the static (asymmetric or symmetric) and dynamic
+    routes, so the admissible set is the full signed code range of the
+    frozen bitwidth — for *any* input, drifted workloads included. That clip
+    is what makes certificates sound without assumptions on the data.
+    """
+    if act_qparams is not None:
+        return qrange(int(act_qparams.bits))
+    if act_bits is not None:
+        return qrange(int(act_bits))
+    return None
+
+
+def a2q_acc_caps(acc_bits: int) -> tuple[int, int]:
+    """(max positive, max |negative|) value a p-bit register can hold."""
+    return 2 ** (acc_bits - 1) - 1, 2 ** (acc_bits - 1)
+
+
 def a2q_l1_bound(weight_bits: int, acc_bits: int) -> float:
-    """Maximum allowed ||w^q||_1 for overflow-free p-bit accumulation."""
+    """Maximum allowed ||w^q||_1 for overflow-free p-bit accumulation.
+
+    Sign-agnostic sufficient condition (legacy A2Q form): a row of unknown
+    sign pattern can drive the register to |qlo| * ||w^q||_1 on either
+    side, so no asymmetric tightening is possible at the L1 level — use
+    `a2q_row_bounds` for the per-row sign-split bound that certification
+    relies on.
+    """
     return (2 ** (acc_bits - 1) - 1) / (2 ** (weight_bits - 1))
 
 
-@partial(jax.jit, static_argnames=("weight_bits", "acc_bits"))
-def a2q_quantize_project(
-    w: jax.Array, weight_bits: int, acc_bits: int
+def a2q_row_bounds(
+    wq: jax.Array,
+    weight_bits: int | None = None,
+    *,
+    act_qparams=None,
+    act_bits: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Per-channel quantize + L1 projection. w: (out, K).
+    """Exact worst-case accumulator excursions per row. wq: (..., K) ints.
 
-    Returns (wq, scale) with wq int32-carrier, scale (out,) f32, and every
-    row satisfying sum|wq| <= B exactly.
+    Returns (pos, neg): the largest positive value and largest negative
+    magnitude any partial sum of x^q · w^q can reach over admissible integer
+    activations. Uses the frozen activation range when given, else the
+    legacy symmetric |x^q| <= 2^(b-1) with b = weight_bits.
     """
+    rng = act_code_range(act_qparams, act_bits)
+    if rng is None:
+        if weight_bits is None:
+            raise ValueError("need weight_bits or an activation range")
+        mag = 2 ** (weight_bits - 1)
+        qlo, qhi = -mag, mag
+    else:
+        qlo, qhi = rng
+    w = wq.astype(jnp.float32)
+    wp = jnp.sum(jnp.maximum(w, 0.0), axis=-1)
+    wn = jnp.sum(jnp.maximum(-w, 0.0), axis=-1)
+    pos = qhi * wp + (-qlo) * wn
+    neg = (-qlo) * wp + qhi * wn
+    return pos, neg
+
+
+def _resolve_act_bits(act_qparams, act_bits) -> int | None:
+    if act_qparams is not None:
+        return int(act_qparams.bits)
+    return None if act_bits is None else int(act_bits)
+
+
+@partial(jax.jit, static_argnames=("weight_bits", "acc_bits", "act_bits"))
+def _quantize_project(
+    w: jax.Array, weight_bits: int, acc_bits: int, act_bits: int | None
+) -> tuple[jax.Array, jax.Array]:
     _, qmax = qrange(weight_bits)
-    bound = a2q_l1_bound(weight_bits, acc_bits)
     amax = jnp.maximum(jnp.max(jnp.abs(w), axis=-1, keepdims=True), 1e-8)
     scale = amax / qmax  # per-channel symmetric scale
     wq = jnp.clip(jnp.round(w / scale), -qmax, qmax)
-    l1 = jnp.sum(jnp.abs(wq), axis=-1, keepdims=True)
-    factor = jnp.minimum(1.0, bound / jnp.maximum(l1, 1.0))
-    # trunc toward zero => sum |trunc(wq * f)| <= f * sum |wq| <= bound
+    if act_bits is None:
+        bound = a2q_l1_bound(weight_bits, acc_bits)
+        l1 = jnp.sum(jnp.abs(wq), axis=-1, keepdims=True)
+        factor = jnp.minimum(1.0, bound / jnp.maximum(l1, 1.0))
+    else:
+        cap_pos, cap_neg = a2q_acc_caps(acc_bits)
+        pos, neg = a2q_row_bounds(wq, act_bits=act_bits)
+        factor = jnp.minimum(
+            jnp.minimum(1.0, cap_pos / jnp.maximum(pos, 1.0)),
+            cap_neg / jnp.maximum(neg, 1.0),
+        )[..., None]
+    # trunc toward zero => sum |trunc(wq * f)| <= f * sum |wq| <= bound,
+    # and the same contraction holds for the sign-split pos/neg sums
     wq = jnp.trunc(wq * factor).astype(jnp.int32)
     return wq, scale[..., 0]
 
 
-def a2q_fake_quant(w: jax.Array, weight_bits: int, acc_bits: int) -> jax.Array:
+def a2q_quantize_project(
+    w: jax.Array,
+    weight_bits: int,
+    acc_bits: int,
+    act_qparams=None,
+    act_bits: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-channel quantize + accumulator projection. w: (out, K).
+
+    Returns (wq, scale) with wq int32-carrier, scale (out,) f32, and every
+    row satisfying the accumulator bound: the legacy symmetric L1 form by
+    default, or the tighter sign-split form against the frozen activation
+    range when ``act_qparams``/``act_bits`` is given.
+    """
+    return _quantize_project(
+        w, weight_bits, acc_bits, _resolve_act_bits(act_qparams, act_bits)
+    )
+
+
+def a2q_fake_quant(
+    w: jax.Array,
+    weight_bits: int,
+    acc_bits: int,
+    act_qparams=None,
+    act_bits: int | None = None,
+) -> jax.Array:
     """QAT forward for A2Q weights: quantize+project+dequantize with STE."""
-    wq, scale = a2q_quantize_project(w, weight_bits, acc_bits)
+    wq, scale = a2q_quantize_project(w, weight_bits, acc_bits, act_qparams, act_bits)
     w_star = wq.astype(jnp.float32) * scale[:, None]
     return w + jax.lax.stop_gradient(w_star - w)
 
 
-def a2q_violations(wq: jax.Array, weight_bits: int, acc_bits: int) -> jax.Array:
-    """Number of rows violating the bound (0 after projection, by design)."""
-    l1 = jnp.sum(jnp.abs(wq.astype(jnp.int32)), axis=-1)
-    return jnp.sum(l1 > a2q_l1_bound(weight_bits, acc_bits))
+def a2q_violations(
+    wq: jax.Array,
+    weight_bits: int,
+    acc_bits: int,
+    act_qparams=None,
+    act_bits: int | None = None,
+) -> jax.Array:
+    """Number of rows violating the bound (0 after projection, by design).
+
+    With a frozen activation range this checks the sign-split condition —
+    the same one serving-time certification enforces — so the QAT signal
+    matches what `core.certify` will later verify.
+    """
+    bits = _resolve_act_bits(act_qparams, act_bits)
+    if bits is None:
+        l1 = jnp.sum(jnp.abs(wq.astype(jnp.int32)), axis=-1)
+        return jnp.sum(l1 > a2q_l1_bound(weight_bits, acc_bits))
+    cap_pos, cap_neg = a2q_acc_caps(acc_bits)
+    pos, neg = a2q_row_bounds(wq, act_bits=bits)
+    return jnp.sum((pos > cap_pos) | (neg > cap_neg))
 
 
 def a2q_sparsity(wq: jax.Array) -> jax.Array:

@@ -1,0 +1,339 @@
+"""Accumulator-safety certification: frozen weights -> proof of no overflow.
+
+The census machinery (overflow counters, CensusWatch degradation) *observes*
+accumulator safety at serving time; this module *proves* it ahead of time,
+so certified sites can drop the census and stepwise-saturation bookkeeping
+from the hot path entirely (`pqs_dot(..., certified=True)`).
+
+The bound. Serving quantizes activations and clips their integer codes to
+qrange(b) = [qlo, qhi] = [-2^(b-1), 2^(b-1)-1] on every path (static
+asymmetric, static symmetric, dynamic) — see `dispatch.qtensor_dot`. So for
+ANY input, drifted workloads included, the admissible activation codes are
+exactly that range. For one output row with integer weights w, split
+wp = sum of positive entries, wn = sum of |negative| entries; the extreme
+excursions of the dot product are
+
+    pos(w) = qhi * wp + |qlo| * wn      (every product driven positive)
+    neg(w) = |qlo| * wp + qhi * wn      (every product driven negative)
+
+Every intermediate value of ANY accumulation order — sequential, k-tiled,
+magnitude-sorted, K-sharded partials and their tree combine — is a subset
+sum of the K products, and any subset sum lies in [-neg(w), pos(w)]. Hence
+if pos(w) <= 2^(p-1)-1 and neg(w) <= 2^(p-1), a p-bit register can never
+saturate at any step, under any policy, and the narrow result equals the
+exact wide sum bit-for-bit. `acc_bits_safe` is the smallest such p.
+
+Tightenings over the classic A2Q worst-case L1 bound:
+  * one-sided: the positive activation code caps at 2^(b-1)-1, not 2^(b-1),
+    and the sign-split uses each row's actual sign pattern instead of
+    assuming every product can reach |qlo| * |w_i|;
+  * N:M-aware: compressed `SparseQTensor` rows sum only the n_keep-of-m
+    kept weights — pruned products can never fire, so the bound tightens
+    by exactly the pruned mass.
+
+Certificates hash the *integer* weight values (not scales): the guarantee
+depends only on the integer codes and the activation bitwidth, so
+re-calibration or activation-range drift cannot invalidate a certificate —
+which is precisely why certified sites stay safe on drifted workloads.
+
+All arithmetic here is host-side numpy int64 (exact); the jnp mirrors in
+`core.a2q` are f32 training signals, this module is the authority.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import pickle
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.qtensor import QTensor, SparseQTensor
+from repro.core.quant import qrange
+
+
+class CertificateError(ValueError):
+    """Certificate does not match the parameters it is asked to cover."""
+
+
+def acc_caps(acc_bits: int) -> tuple[int, int]:
+    """(max positive value, max negative magnitude) of a p-bit register."""
+    return 2 ** (acc_bits - 1) - 1, 2 ** (acc_bits - 1)
+
+
+def row_excursions(
+    wq: np.ndarray, act_bits: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact worst-case (pos, neg) excursions per row. wq: (..., K) ints."""
+    qlo, qhi = qrange(act_bits)
+    w = np.asarray(wq, dtype=np.int64)
+    wp = np.maximum(w, 0).sum(axis=-1)
+    wn = np.maximum(-w, 0).sum(axis=-1)
+    return qhi * wp + (-qlo) * wn, (-qlo) * wp + qhi * wn
+
+
+def min_acc_bits(pos: np.ndarray, neg: np.ndarray) -> int:
+    """Smallest p with pos <= 2^(p-1)-1 and neg <= 2^(p-1), elementwise."""
+    pmax = int(np.max(pos, initial=0))
+    nmax = int(np.max(neg, initial=0))
+    p = 2
+    while True:
+        cap_pos, cap_neg = acc_caps(p)
+        if pmax <= cap_pos and nmax <= cap_neg:
+            return p
+        p += 1
+
+
+def _leaf_rows(leaf) -> np.ndarray:
+    """Integer weight rows (R, K): one row per output channel.
+
+    Dense (..., in, out) transposes to channel-major; compressed
+    (..., out, G, n_keep) flattens the kept products — the only ones that
+    can ever fire, which is the N:M tightening.
+    """
+    v = np.asarray(jax.device_get(leaf.values))
+    if isinstance(leaf, SparseQTensor):
+        return v.reshape(-1, v.shape[-2] * v.shape[-1])
+    return np.swapaxes(v, -1, -2).reshape(-1, v.shape[-2])
+
+
+def _leaf_hash(leaf) -> str:
+    """sha256 over the integer content (values; + indices/geometry for nm).
+
+    Scales and activation qparams are deliberately excluded: the bound
+    depends only on integer codes, so calibration must not invalidate it.
+    """
+    h = hashlib.sha256()
+    v = np.asarray(jax.device_get(leaf.values))
+    h.update(str(v.shape).encode())
+    h.update(np.ascontiguousarray(v).tobytes())
+    if isinstance(leaf, SparseQTensor):
+        idx = np.asarray(jax.device_get(leaf.indices))
+        h.update(np.ascontiguousarray(idx).tobytes())
+        h.update(f"{leaf.m_group},{leaf.k_dim}".encode())
+    return h.hexdigest()
+
+
+def _site_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _site_leaves(params) -> dict[str, list[Any]]:
+    """All QTensor/SparseQTensor leaves grouped by call-site name."""
+    sites: dict[str, list[Any]] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda l: isinstance(l, (QTensor, SparseQTensor))
+    )[0]:
+        if isinstance(leaf, (QTensor, SparseQTensor)):
+            sites.setdefault(_site_name(path), []).append(leaf)
+    return sites
+
+
+def _combined_hash(hashes: list[str]) -> str:
+    if len(hashes) == 1:
+        return hashes[0]
+    h = hashlib.sha256()
+    for part in sorted(hashes):
+        h.update(part.encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteCertificate:
+    """Proof record for one linear call site (hashable python scalars)."""
+
+    site: str
+    acc_bits_safe: int  # smallest register width that can never saturate
+    bound_pos: int      # worst-case positive excursion over all rows
+    bound_neg: int      # worst-case negative magnitude over all rows
+    slack: float        # headroom at the certified target width (< 0: none)
+    act_bits: int       # activation code range the bound was taken over
+    weight_hash: str    # sha256 of the integer weights it certifies
+
+
+@dataclasses.dataclass(frozen=True)
+class Certificate:
+    """Per-site accumulator-safety proofs riding on a checkpoint.
+
+    Policy-independent: the subset-sum bound covers every accumulation
+    order, so one certificate serves wide/clip/wrap/sorted/* alike, K
+    sharding and N:M storage included.
+    """
+
+    sites: tuple[SiteCertificate, ...]
+    acc_bits: int  # target register width the slack was measured against
+
+    def site(self, name: str) -> Optional[SiteCertificate]:
+        for sc in self.sites:
+            if sc.site == name:
+                return sc
+        return None
+
+    def covers(self, name: str, acc_bits: int, act_bits: int) -> bool:
+        """Is (site, register width, activation bits) provably safe?
+
+        Serving with *fewer* activation bits than certified only shrinks
+        the admissible code range, so narrower act_bits stay covered.
+        """
+        sc = self.site(name)
+        return (
+            sc is not None
+            and sc.acc_bits_safe <= acc_bits
+            and act_bits <= sc.act_bits
+        )
+
+    def verify(self, params: Any) -> None:
+        """Raise CertificateError unless params carry the certified weights.
+
+        Sites present in params but absent from the certificate are simply
+        uncertified (they keep the censused path); a certified site whose
+        integer weights changed is a hard error.
+        """
+        sites = _site_leaves(params)
+        bad = []
+        for sc in self.sites:
+            leaves = sites.get(sc.site)
+            if leaves is None:
+                bad.append(f"{sc.site}: missing from params")
+                continue
+            now = _combined_hash([_leaf_hash(leaf) for leaf in leaves])
+            if now != sc.weight_hash:
+                bad.append(f"{sc.site}: weight hash mismatch")
+        if bad:
+            raise CertificateError(
+                "certificate does not match parameters — " + "; ".join(bad)
+            )
+
+    def summary(self) -> str:
+        lines = [f"certificate: target acc_bits={self.acc_bits}"]
+        for sc in self.sites:
+            ok = "ok" if sc.acc_bits_safe <= self.acc_bits else "UNCOVERED"
+            lines.append(
+                f"  {sc.site}: acc_bits_safe={sc.acc_bits_safe} "
+                f"slack={sc.slack:+.3f} act_bits={sc.act_bits} [{ok}]"
+            )
+        return "\n".join(lines)
+
+    # -- checkpoint riding: one uint8 blob leaf, like the fleet's meta --
+    def to_leaf(self) -> np.ndarray:
+        return np.frombuffer(pickle.dumps(self), dtype=np.uint8)
+
+    @staticmethod
+    def from_leaf(leaf) -> "Certificate":
+        cert = pickle.loads(np.asarray(leaf, dtype=np.uint8).tobytes())
+        if not isinstance(cert, Certificate):
+            raise CertificateError("blob does not decode to a Certificate")
+        return cert
+
+
+def certify_params(
+    params: Any, acc_bits: int, act_bits: int = 8
+) -> Certificate:
+    """Compute exact per-site accumulation bounds for a quantized tree.
+
+    ``act_bits`` is the serving activation bitwidth for leaves without
+    frozen act_qparams; leaves that carry frozen params certify against
+    their own (frozen) bitwidth. Every QTensor/SparseQTensor leaf is
+    certified — `Certificate.covers` then decides per site whether the
+    proof reaches the width a config actually serves at.
+    """
+    cap_pos, cap_neg = acc_caps(acc_bits)
+    site_certs = []
+    for name, leaves in sorted(_site_leaves(params).items()):
+        pos_max = neg_max = 0
+        safe = 2
+        bits = act_bits
+        hashes = []
+        for leaf in leaves:
+            aq = leaf.act_qparams
+            leaf_bits = int(aq.bits) if aq is not None else act_bits
+            bits = max(bits, leaf_bits)
+            pos, neg = row_excursions(_leaf_rows(leaf), leaf_bits)
+            pos_max = max(pos_max, int(np.max(pos, initial=0)))
+            neg_max = max(neg_max, int(np.max(neg, initial=0)))
+            safe = max(safe, min_acc_bits(pos, neg))
+            hashes.append(_leaf_hash(leaf))
+        slack = 1.0 - max(pos_max / cap_pos, neg_max / cap_neg)
+        site_certs.append(SiteCertificate(
+            site=name, acc_bits_safe=safe, bound_pos=pos_max,
+            bound_neg=neg_max, slack=slack, act_bits=bits,
+            weight_hash=_combined_hash(hashes),
+        ))
+    return Certificate(sites=tuple(site_certs), acc_bits=acc_bits)
+
+
+def truncate_rows(
+    wq: np.ndarray, acc_bits: int, act_bits: int = 8
+) -> np.ndarray:
+    """Truncate integer rows toward zero until the bound holds. (R, K)->.
+
+    The integer-domain counterpart of `a2q_quantize_project`'s shrink:
+    |trunc(w * f)| <= f * |w| elementwise with signs preserved, so both
+    sign-split sums contract by at least f and the result is provably
+    inside the caps. Exact int64/f64 host arithmetic.
+    """
+    cap_pos, cap_neg = acc_caps(acc_bits)
+    w = np.asarray(wq, dtype=np.int64)
+    pos, neg = row_excursions(w, act_bits)
+    factor = np.minimum(
+        1.0,
+        np.minimum(cap_pos / np.maximum(pos, 1), cap_neg / np.maximum(neg, 1)),
+    )
+    out = np.trunc(w.astype(np.float64) * factor[..., None]).astype(np.int64)
+    return out.astype(np.asarray(wq).dtype)
+
+
+def enforce_acc_bounds(params: Any, acc_bits: int, act_bits: int = 8) -> Any:
+    """Project every quantized leaf inside the certifiable region.
+
+    Post-QAT belt-and-suspenders: re-quantization rounding can leave a row
+    marginally over the bound even after STE-projected training, so this
+    pass truncates offending rows in the integer domain (most rows are
+    untouched when QAT did its job). act_corr is recomputed for leaves
+    that already carry frozen asymmetric qparams.
+    """
+
+    def conv(leaf):
+        if not isinstance(leaf, (QTensor, SparseQTensor)):
+            return leaf
+        bits = int(leaf.act_qparams.bits) if leaf.act_qparams is not None \
+            else act_bits
+        v = np.asarray(jax.device_get(leaf.values))
+        if isinstance(leaf, SparseQTensor):
+            rows = v.reshape(-1, v.shape[-2] * v.shape[-1])
+            new_v = truncate_rows(rows, acc_bits, bits).reshape(v.shape)
+            corr = leaf.act_corr
+            if corr is not None:
+                wsum = new_v.astype(np.int64).sum(axis=(-2, -1))
+                corr = np.asarray(jax.device_get(leaf.act_qparams.offset))[
+                    ..., None] * wsum.astype(np.int32)
+            return SparseQTensor(
+                jax.numpy.asarray(new_v), leaf.indices, leaf.scale,
+                leaf.m_group, leaf.k_dim, leaf.act_qparams,
+                None if corr is None else jax.numpy.asarray(corr),
+            )
+        rows = np.swapaxes(v, -1, -2).reshape(-1, v.shape[-2])
+        new_v = truncate_rows(rows, acc_bits, bits)
+        new_v = np.swapaxes(
+            new_v.reshape(v.shape[:-2] + (v.shape[-1], v.shape[-2])), -1, -2
+        )
+        corr = leaf.act_corr
+        if corr is not None:
+            wsum = new_v.astype(np.int64).sum(axis=-2)
+            corr = np.asarray(jax.device_get(leaf.act_qparams.offset))[
+                ..., None] * wsum.astype(np.int32)
+        return QTensor(
+            jax.numpy.asarray(new_v), leaf.scale, leaf.act_qparams,
+            None if corr is None else jax.numpy.asarray(corr),
+        )
+
+    return jax.tree_util.tree_map(
+        conv, params,
+        is_leaf=lambda l: isinstance(l, (QTensor, SparseQTensor)),
+    )

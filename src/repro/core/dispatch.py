@@ -171,6 +171,7 @@ def _local_dot(
     storage: str = "dense",
     m_group: Optional[int] = None,
     nm_impl: Optional[str] = None,
+    certified: bool = False,
 ) -> tuple[jax.Array, Optional[Census]]:
     """Single-device policy matmul on pre-padded operands (+census).
 
@@ -183,7 +184,16 @@ def _local_dot(
     KEPT-ONLY partial products (``overflow.nm_partial_products``) for
     both backends and both impls — bit-identical counts at n_keep/m of
     the unrolled memory.
+
+    certified=True: a `core.certify` proof says no partial sum can reach
+    the acc_bits caps, so the stepwise saturate bookkeeping is dead code
+    — the jnp backend accumulates wide (bit-identical to the narrow
+    result by the proof), the pallas backend takes the kernels'
+    census-free route (``ops.policy_matmul(census=False)``).
     """
+    if certified:
+        with_census = False
+    jnp_policy = "wide" if certified else policy
     m = x2.shape[0]
     chunk = m if (batch_chunk is None or batch_chunk >= m) else batch_chunk
     outs = []
@@ -203,7 +213,8 @@ def _local_dot(
                 xc, ((0, 0), (0, wd.shape[-1] - xc.shape[-1]))
             ) if wd.shape[-1] != xc.shape[-1] else xc
             prods = partial_products(wd, xcp)  # (c, N, Kp)
-            outs.append(accumulate(prods, acc_bits, policy, k_tile, rounds))
+            outs.append(
+                accumulate(prods, acc_bits, jnp_policy, k_tile, rounds))
         elif storage == "nm":
             outs.append(
                 ops.nm_policy_matmul(
@@ -211,17 +222,20 @@ def _local_dot(
                     acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
                     bm=block_m, bn=block_n, sort_impl=sort_impl,
                     nm_impl=nm_impl, interpret=interpret,
+                    census=not certified,
                 )
             )
         elif backend == "jnp":
             prods = partial_products(w, xc)  # (c, N, Kp)
-            outs.append(accumulate(prods, acc_bits, policy, k_tile, rounds))
+            outs.append(
+                accumulate(prods, acc_bits, jnp_policy, k_tile, rounds))
         else:
             outs.append(
                 ops.policy_matmul(
                     xc, w, policy=policy, acc_bits=acc_bits, k_tile=k_tile,
                     rounds=rounds, bm=block_m, bn=block_n,
                     sort_impl=sort_impl, interpret=interpret,
+                    census=not certified,
                 )
             )
         if with_census:
@@ -262,6 +276,7 @@ def _kshard_dot(
     storage: str = "dense",
     m_group: Optional[int] = None,
     nm_impl: Optional[str] = None,
+    certified: bool = False,
 ) -> tuple[jax.Array, Optional[Census]]:
     """Single-device hierarchical K-sharded dot (and the mesh oracle).
 
@@ -277,7 +292,14 @@ def _kshard_dot(
     k_shards * M * N; per-shard natural-order classification), and
     combine-step overflows are reported separately in ``n_combine`` —
     the total census is exactly sum(per-shard) + combine steps.
+
+    certified=True: per-shard partials AND every combine step are subset
+    sums of the row's products, so the certificate covers the whole
+    hierarchy — shards and the combine run census-free/saturation-free.
     """
+    if certified:
+        with_census = False
+    jnp_policy = "wide" if certified else policy
     m = x2.shape[0]
     kp = x2.shape[1]
     k_local = kp // k_shards
@@ -297,7 +319,7 @@ def _kshard_dot(
         if backend == "jnp":
             prods = partial_products(wd if storage == "nm" else w, xc)
             out_c, novf = kshard_accumulate(
-                prods, acc_bits, policy, k_shards, k_tile, rounds
+                prods, acc_bits, jnp_policy, k_shards, k_tile, rounds
             )
         else:
             if storage == "nm":
@@ -306,16 +328,16 @@ def _kshard_dot(
                     policy=policy, acc_bits=acc_bits, k_tile=k_tile,
                     rounds=rounds, bm=block_m, bn=block_n,
                     sort_impl=sort_impl, nm_impl=nm_impl,
-                    interpret=interpret,
+                    interpret=interpret, census=not certified,
                 )
             else:
                 parts = ops.partial_policy_matmul(
                     xc, w, k_shards=k_shards, policy=policy,
                     acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
                     bm=block_m, bn=block_n, sort_impl=sort_impl,
-                    interpret=interpret,
+                    interpret=interpret, census=not certified,
                 )
-            out_c, novf = tree_combine(parts, acc_bits, policy)
+            out_c, novf = tree_combine(parts, acc_bits, jnp_policy)
         outs.append(out_c)
         if with_census:
             if prods is None:
@@ -408,7 +430,10 @@ def _sharded_dot(
         novf = None
         if k_axis is not None:
             parts = jnp.moveaxis(jax.lax.all_gather(out, k_axis), 0, -1)
-            out, novf = tree_combine(parts, kw["acc_bits"], kw["policy"])
+            combine_policy = (
+                "wide" if kw.get("certified") else kw["policy"]
+            )
+            out, novf = tree_combine(parts, kw["acc_bits"], combine_policy)
         if with_census:
             axes = tuple(used) + ((k_axis,) if k_axis is not None else ())
             if axes:
@@ -456,6 +481,7 @@ def pqs_dot(
     storage: str = "dense",
     m_group: Optional[int] = None,
     nm_impl: Optional[str] = None,
+    certified: bool = False,
 ):
     """Quantized dot products with simulated narrow accumulation.
 
@@ -508,8 +534,24 @@ def pqs_dot(
     changes the accumulation ORDER vs the full-K dot for the saturating
     policies (docs/accumulation.md, "K-sharded accumulation");
     ``wide``/``wrap`` are exactly order-invariant.
+
+    ``certified=True`` declares that a `core.certify.Certificate` proves
+    no partial sum of these operands can reach the acc_bits caps — the
+    stepwise saturate/census bookkeeping is then provably dead code and
+    is skipped (kernels take the census-free wide-safe route; the jnp
+    backend accumulates wide). By the subset-sum bound the result is
+    bit-identical to the censused narrow path under every policy,
+    k-sharding and storage included. The caller is responsible for the
+    proof actually covering (weights, act range, acc_bits); serving
+    checks it per site via ``IntegerLinConfig.certificate``. Mutually
+    exclusive with ``with_census`` — a certified dot has no census.
     """
     _validate(policy, backend, acc_bits, k_tile, storage)
+    if certified and with_census:
+        raise ValueError(
+            "certified=True removes the census from the path entirely; "
+            "with_census=True contradicts it"
+        )
     if nm_impl is not None:
         if storage != "nm":
             raise ValueError("nm_impl= is only meaningful with storage='nm'")
@@ -619,7 +661,7 @@ def pqs_dot(
         backend=backend, interpret=interpret, block_m=block_m,
         block_n=block_n, sort_impl=sort_impl, batch_chunk=batch_chunk,
         storage=storage, m_group=m_group if storage == "nm" else None,
-        nm_impl=nm_impl if storage == "nm" else None,
+        nm_impl=nm_impl if storage == "nm" else None, certified=certified,
     )
     if mesh is not None:
         res = _sharded_dot(
@@ -660,6 +702,16 @@ class IntegerLinConfig:
     With a mesh, ``k_axis`` names the mesh axis the K shards live on
     (K-sharded weight placement: ``launch.sharding.params_shardings``
     with the same ``k_axis``/``k_shard_min_k``).
+
+    ``certificate`` (a ``core.certify.Certificate``) turns on the
+    certified serving fast path: sites whose proof reaches this config's
+    effective (acc_bits, act_bits) dispatch census-free and
+    saturation-free (``pqs_dot(certified=True)``) and are invisible to
+    any ``census_monitor`` — bit-identical to the censused path by the
+    certificate's subset-sum bound. Sites without a covering proof keep
+    the full census + degradation behavior. The engine verifies the
+    certificate's weight hashes against the served params at
+    construction (``ServingEngine``).
     """
 
     policy: str = "sorted_tiled_seq"
@@ -680,12 +732,23 @@ class IntegerLinConfig:
     # hot-swap path: one saturating layer widens without touching the rest
     site_policies: tuple = ()
     site_acc_bits: tuple = ()
+    certificate: Any = None  # core.certify.Certificate -> certified path
 
     def policy_for(self, site: Optional[str]) -> str:
         return dict(self.site_policies).get(site, self.policy)
 
     def acc_bits_for(self, site: Optional[str]) -> int:
         return dict(self.site_acc_bits).get(site, self.acc_bits)
+
+    def certified_for(self, site: Optional[str], act_bits: int) -> bool:
+        """Does the attached certificate prove this site safe as served?"""
+        return (
+            self.certificate is not None
+            and site is not None
+            and self.certificate.covers(
+                site, self.acc_bits_for(site), act_bits
+            )
+        )
 
     def with_site_policy(self, site: str, policy: str) -> "IntegerLinConfig":
         over = dict(self.site_policies)
@@ -815,6 +878,88 @@ def census_monitor(mon: Optional[CensusMonitor] = None):
         _CENSUS_MON.pop()
 
 
+@dataclasses.dataclass(frozen=True)
+class QATQuantConfig:
+    """Accumulator-aware QAT at float linear sites (``a2q_qat`` context).
+
+    Inside the context every named ``models.layers.lin`` whose weight is
+    still a float 2-D matrix (with min(shape) >= ``min_dim``) runs
+    `core.a2q.a2q_fake_quant`: per-channel quantize + accumulator
+    projection + dequantize under a straight-through estimator, against
+    the sign-split bound for (``acc_bits``, ``act_bits``). Gradients see
+    the projected weights, so training co-adapts to the certifiable
+    region — the "train" of train→certify→serve.
+
+    ``census_rows`` > 0 adds the overflow census as a *training signal*:
+    a stop-gradient sample of that many activation rows is quantized and
+    pushed through `core.overflow.census` against the projected integer
+    weights, reported per site to any active ``census_monitor`` — the
+    same plumbing serving uses, so the QAT signal and the serving watch
+    read identically.
+    """
+
+    weight_bits: int = 8
+    acc_bits: int = 16
+    act_bits: int = 8
+    min_dim: int = 16
+    census_rows: int = 4
+
+
+_A2Q_QAT: list[QATQuantConfig] = []
+
+
+def a2q_qat_config() -> Optional[QATQuantConfig]:
+    """Active QAT config, or None outside ``a2q_qat``."""
+    return _A2Q_QAT[-1] if _A2Q_QAT else None
+
+
+@contextlib.contextmanager
+def a2q_qat(cfg: Optional[QATQuantConfig] = None, **kw):
+    """Enable accumulator-aware fake quantization for float lin weights.
+
+    Like ``integer_lin``/``census_monitor``, the context must wrap
+    *tracing*: jitted train steps traced inside it carry the STE
+    projection (and census callbacks) permanently.
+    """
+    _A2Q_QAT.append(cfg or QATQuantConfig(**kw))
+    try:
+        yield _A2Q_QAT[-1]
+    finally:
+        _A2Q_QAT.pop()
+
+
+def a2q_qat_lin(
+    x: jax.Array, w: jax.Array, qcfg: QATQuantConfig,
+    site: Optional[str] = None,
+) -> jax.Array:
+    """x (..., in) @ w (in, out) with A2Q-projected fake-quant weights."""
+    from repro.core.a2q import a2q_fake_quant, a2q_quantize_project
+
+    w_fq = a2q_fake_quant(
+        w.T.astype(jnp.float32), qcfg.weight_bits, qcfg.acc_bits,
+        act_bits=qcfg.act_bits,
+    ).T
+    mon = census_monitor_store()
+    if mon is not None and site is not None and qcfg.census_rows > 0:
+        wq, _ = a2q_quantize_project(
+            w.T.astype(jnp.float32), qcfg.weight_bits, qcfg.acc_bits,
+            act_bits=qcfg.act_bits,
+        )
+        xs = jax.lax.stop_gradient(
+            x.reshape(-1, x.shape[-1])[: qcfg.census_rows]
+        ).astype(jnp.float32)
+        qmax = 2 ** (qcfg.act_bits - 1) - 1
+        s_x = jnp.maximum(jnp.max(jnp.abs(xs)), 1e-8) / qmax
+        xq = jnp.clip(
+            jnp.round(xs / s_x), -qmax - 1, qmax
+        ).astype(jnp.int32)
+        cns = census(partial_products(wq, xq), qcfg.acc_bits)
+        jax.debug.callback(
+            functools.partial(mon.observe, site), cns.n_dots, cns.n_any
+        )
+    return (x.astype(jnp.float32) @ w_fq).astype(x.dtype)
+
+
 def qtensor_dot(
     x: jax.Array, qt, cfg: IntegerLinConfig, site: Optional[str] = None
 ) -> jax.Array:
@@ -859,8 +1004,16 @@ def qtensor_dot(
         ks, ka = None, None
     policy = cfg.policy_for(site)
     acc_bits = cfg.acc_bits_for(site)
+    # the activation code range actually admissible on this path — the
+    # quantity the certificate's bound was taken over
+    act_bits_used = int(aq.bits) if (cfg.use_static_acts and aq is not None) \
+        else cfg.act_bits
+    certified = cfg.certified_for(site, act_bits_used)
     mon = census_monitor_store()
-    want_census = mon is not None and site is not None and policy != "wide"
+    want_census = (
+        mon is not None and site is not None and policy != "wide"
+        and not certified
+    )
     res = pqs_dot(
         xq, wq, acc_bits=acc_bits,
         policy=policy, k_tile=cfg.k_tile, rounds=cfg.rounds,
@@ -868,7 +1021,7 @@ def qtensor_dot(
         n_axis=cfg.n_axis, k_shards=ks,
         k_axis=ka if cfg.mesh is not None else None, storage=storage,
         nm_impl=cfg.nm_impl if sparse else None,
-        with_census=want_census,
+        with_census=want_census, certified=certified,
     )
     if want_census:
         z, cns = res
@@ -878,9 +1031,11 @@ def qtensor_dot(
         )
     else:
         z = res
-        if mon is not None and site is not None:
+        if mon is not None and site is not None and not certified:
             # wide accumulates in int32 — overflow-free by construction;
             # report the dots so a degraded site's rate reads 0.0
+            # (certified sites report nothing at all: CensusWatch must
+            # never see them, they are provably overflow-free)
             jax.debug.callback(
                 functools.partial(mon.observe, site), z.size, 0
             )

@@ -320,6 +320,7 @@ def policy_matmul(
     bk: int | None = None,
     sort_impl: str = "auto",
     interpret: bool | None = None,
+    census: bool = True,
 ) -> jax.Array:
     """(M, N) int32 under any accumulation policy, any shape.
 
@@ -332,8 +333,18 @@ def policy_matmul(
     enabled, else the per-platform ``_BLOCK_TABLE`` entry
     (REPRO_PQS_BLOCKS overrides both — bare "bm,bn" or per-policy
     "sorted:8,128;wide:128,128").
+
+    ``census=False`` is the certified route (`core.certify`): the caller
+    holds a proof that no partial sum can reach the acc_bits caps, so
+    the narrow policy's stepwise saturate bookkeeping — and the sort
+    pipeline itself — is provably a no-op, and the request is served by
+    the exact wide kernel body (one MXU dot, bit-identical BY THE PROOF
+    to the stepwise narrow result). Meaningless without a certificate:
+    an uncertified caller would silently lose the saturation semantics.
     """
     assert policy in POLICIES, policy
+    if not census:
+        policy = "wide"  # provably saturate-free -> exact wide body
     interpret = (not _on_tpu()) if interpret is None else interpret
     m, n = x.shape[0], w.shape[0]
     kp = padded_k(x.shape[1], policy, k_tile)
@@ -400,6 +411,7 @@ def partial_policy_matmul(
     bn: int | None = None,
     sort_impl: str = "auto",
     interpret: bool | None = None,
+    census: bool = True,
 ) -> jax.Array:
     """Per-K-shard partials of a K-sharded policy matmul: (M, N, k_shards).
 
@@ -426,6 +438,7 @@ def partial_policy_matmul(
             w[:, s * k_local : (s + 1) * k_local],
             policy=policy, acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
             bm=bm, bn=bn, sort_impl=sort_impl, interpret=interpret,
+            census=census,
         )
         for s in range(k_shards)
     ]
@@ -448,6 +461,7 @@ def nm_partial_policy_matmul(
     sort_impl: str = "auto",
     nm_impl: str | None = None,
     interpret: bool | None = None,
+    census: bool = True,
 ) -> jax.Array:
     """``partial_policy_matmul`` on N:M compressed storage.
 
@@ -475,6 +489,7 @@ def nm_partial_policy_matmul(
             m_group=m_group, policy=policy, acc_bits=acc_bits,
             k_tile=k_tile, rounds=rounds, bm=bm, bn=bn,
             sort_impl=sort_impl, nm_impl=nm_impl, interpret=interpret,
+            census=census,
         )
         for s in range(k_shards)
     ]
@@ -497,6 +512,7 @@ def nm_policy_matmul(
     sort_impl: str = "auto",
     nm_impl: str | None = None,
     interpret: bool | None = None,
+    census: bool = True,
 ) -> jax.Array:
     """Every accumulation policy directly on N:M compressed storage.
 
@@ -522,8 +538,15 @@ def nm_policy_matmul(
     ``nm:`` (expand) or ``nmg:`` (gather) kernel family
     (``REPRO_PQS_BLOCKS``, autotune, ``_BLOCK_TABLE``), keyed on the
     compressed geometry ``(m_group, n_keep, G)`` rather than dense K.
+
+    ``census=False``: the certified route, exactly as on
+    ``policy_matmul`` — a `core.certify` proof makes the stepwise
+    saturation dead code, so the request reroutes to the wide body on
+    the SAME compressed storage (N:M savings retained).
     """
     assert policy in POLICIES, policy
+    if not census:
+        policy = "wide"  # provably saturate-free -> exact wide body
     interpret = (not _on_tpu()) if interpret is None else interpret
     if values.shape != indices.shape:
         raise ValueError(

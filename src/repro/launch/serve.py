@@ -83,6 +83,14 @@ def main() -> None:
                          "overflow rate (requires --int-policy)")
     ap.add_argument("--census-window", type=int, default=8,
                     help="decode steps per census window")
+    ap.add_argument("--certify", action="store_true",
+                    help="enforce the A2Q accumulator bound on the "
+                         "quantized weights, certify every site "
+                         "(core.certify), and serve certified sites "
+                         "census-free (requires --int-policy)")
+    ap.add_argument("--qat-steps", type=int, default=0,
+                    help="accumulator-aware fine-tuning steps before "
+                         "quantization (runtime.a2q_finetune; 0 = skip)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -93,14 +101,45 @@ def main() -> None:
 
     int_lin = None
     census_watch = None
+    cert = None
     if args.int_policy:
         from repro.core import dispatch
-        from repro.core.qtensor import quantize_tree
 
-        params = quantize_tree(params, bits=8, min_size=1 << 10, min_dim=16)
+        if args.qat_steps:
+            from repro.runtime import QATConfig, a2q_finetune
+
+            rng = np.random.default_rng(1)
+
+            def next_batch(i: int) -> dict:
+                tok = rng.integers(
+                    0, cfg.vocab_size, size=(2, 16)
+                ).astype(np.int32)
+                return {"tokens": jnp.asarray(tok),
+                        "labels": jnp.asarray(tok)}
+
+            qcfg = QATConfig(acc_bits=args.acc_bits)
+            params, history = a2q_finetune(
+                model, params, next_batch, args.qat_steps, qcfg
+            )
+            print(f"[serve] qat: {args.qat_steps} steps, "
+                  f"loss {history[0]['loss']:.4f} -> "
+                  f"{history[-1]['loss']:.4f}, final census rates "
+                  f"{ {k: round(v, 4) for k, v in history[-1]['census_rates'].items()} }")
+
+        if args.certify:
+            from repro.runtime import quantize_and_certify
+
+            params, cert = quantize_and_certify(params, args.acc_bits)
+            print("[serve] " + cert.summary().replace("\n", "\n[serve] "))
+        else:
+            from repro.core.qtensor import quantize_tree
+
+            params = quantize_tree(
+                params, bits=8, min_size=1 << 10, min_dim=16
+            )
         int_lin = dispatch.IntegerLinConfig(
             policy=args.int_policy, acc_bits=args.acc_bits,
-            k_tile=64, backend="jnp",
+            k_tile=64, backend="jnp", certificate=cert,
         )
         if args.census_threshold is not None:
             census_watch = CensusWatch(
@@ -108,6 +147,8 @@ def main() -> None:
             )
     elif args.census_threshold is not None:
         ap.error("--census-threshold requires --int-policy")
+    elif args.certify or args.qat_steps:
+        ap.error("--certify/--qat-steps require --int-policy")
 
     failure_injector = None
     if args.inject_fail:

@@ -44,8 +44,21 @@ def lin(x: jax.Array, w: Any, site: Optional[str] = None) -> jax.Array:
     ``core.dispatch.calibration`` context the input's (min, max) is
     reported per site (via jax.debug.callback, so scanned layer loops
     work), to be frozen into static QParams on the QTensor.
+
+    Inside a ``core.dispatch.a2q_qat`` context, FLOAT 2-D weights at
+    named sites instead run accumulator-aware fake quantization
+    (`core.a2q.a2q_fake_quant` under an STE, overflow census as a
+    training signal) — the QAT leg of train→certify→serve. Tiny
+    projections (min dim < cfg.min_dim) and unnamed sites stay float.
     """
-    if not isinstance(w, jax.Array):
+    if isinstance(w, jax.Array):
+        if w.ndim == 2 and site is not None:
+            from repro.core import dispatch
+
+            qat = dispatch.a2q_qat_config()
+            if qat is not None and min(w.shape) >= qat.min_dim:
+                return dispatch.a2q_qat_lin(x, w, qat, site=site)
+    else:
         from repro.core import dispatch
         from repro.core.qtensor import QTensor, SparseQTensor
 

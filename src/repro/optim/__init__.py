@@ -1,5 +1,11 @@
+from repro.optim.a2q import (  # noqa: F401
+    a2q_l1_ratio,
+    a2q_project_tree,
+    with_a2q_projection,
+)
 from repro.optim.optim import (  # noqa: F401
     OptState,
+    Optimizer,
     adamw,
     clip_by_global_norm,
     cosine_schedule,

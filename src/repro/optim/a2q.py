@@ -1,0 +1,132 @@
+"""A2Q+-style per-channel weight-norm projection as an optimizer transform.
+
+`core.a2q` enforces the accumulator bound in the *integer* domain (the only
+domain where it is exact); this module supplies the training-side
+complement: after every optimizer step, each output channel of every large
+float weight is softly projected toward the scale-invariant shape condition
+
+    ||w||_1 / ||w||_inf  <=  ratio := (2^(p-1) - 1) / 2^(b-1) / qmax_w
+
+which is what per-channel max-calibrated quantization turns the integer L1
+bound into (see `core.a2q`'s module docstring). Keeping iterates near the
+certifiable region means the STE projection inside `a2q_fake_quant`
+truncates little and gradients stay informative — this is the role of
+A2Q+'s weight-normalization reparameterization, realized here as a
+soft-threshold projection (per-row bisection on the threshold) so it
+composes with any `optim.Optimizer` unchanged.
+
+The projection is a pre-conditioner, not the guarantee: the guarantee is
+the integer-domain enforcement (`core.certify.enforce_acc_bounds`) plus
+the certification pass that follows training.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optim import Optimizer
+
+Pytree = jax.Array | dict | list | tuple
+
+
+def a2q_l1_ratio(
+    weight_bits: int = 8, acc_bits: int = 16, act_bits: int = 8
+) -> float:
+    """Float-domain shape cap ||w||_1/||w||_inf for certifiable rows.
+
+    Sufficient (sign-agnostic) form: a quantized row with
+    ||w^q||_1 <= (2^(p-1)-1)/2^(b-1) keeps both sign-split excursions
+    inside the p-bit caps for any admissible b-bit activation code; with
+    max calibration ||w^q||_1 ~= ||w||_1 * qmax_w / ||w||_inf.
+    """
+    cap_pos = 2 ** (acc_bits - 1) - 1
+    qmax_w = 2 ** (weight_bits - 1) - 1
+    return cap_pos / (2 ** (act_bits - 1)) / qmax_w
+
+
+def _soft_threshold_rows(
+    v: jax.Array, ratio: float, iters: int = 25, outer: int = 2
+) -> jax.Array:
+    """Project rows (C, K) toward ||v||_1 <= ratio * ||v||_inf.
+
+    Per row: bisect the soft threshold lam so that
+    sum(relu(|v| - lam)) <= ratio * ||v||_inf, apply
+    sign(v) * relu(|v| - lam). Thresholding also shrinks the max, so a
+    couple of outer sweeps re-anchor the target; rows already inside the
+    region pass through bit-exactly (lam = 0).
+    """
+    for _ in range(outer):
+        a = jnp.abs(v)
+        amax = jnp.max(a, axis=-1, keepdims=True)
+        target = ratio * amax
+        need = jnp.sum(a, axis=-1, keepdims=True) > target
+        lo = jnp.zeros_like(amax)
+        hi = amax
+        for _ in range(iters):
+            mid = 0.5 * (lo + hi)
+            s = jnp.sum(jnp.maximum(a - mid, 0.0), axis=-1, keepdims=True)
+            over = s > target
+            lo = jnp.where(over, mid, lo)
+            hi = jnp.where(over, hi, mid)
+        lam = jnp.where(need, hi, 0.0)
+        v = jnp.sign(v) * jnp.maximum(a - lam, 0.0)
+    return v
+
+
+def a2q_project_tree(
+    params: Pytree,
+    weight_bits: int = 8,
+    acc_bits: int = 16,
+    act_bits: int = 8,
+    min_dim: int = 16,
+) -> Pytree:
+    """Shape-project every large float matrix, channelwise. Pytree in/out.
+
+    Targets the same leaves QAT fake-quantizes and quantization will
+    later convert: float leaves with >= 2 dims and min(last two dims) >=
+    ``min_dim`` (norm gains, biases, tiny heads pass through). Output
+    channels are the LAST axis ((…, in, out) convention), matching
+    `core.a2q`'s per-(out)-channel rows.
+    """
+    ratio = a2q_l1_ratio(weight_bits, acc_bits, act_bits)
+
+    def conv(leaf):
+        if not isinstance(leaf, jax.Array) and not hasattr(leaf, "dtype"):
+            return leaf
+        if leaf.ndim < 2 or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        if min(leaf.shape[-2:]) < min_dim:
+            return leaf
+        wt = jnp.swapaxes(leaf.astype(jnp.float32), -1, -2)
+        rows = wt.reshape(-1, wt.shape[-1])
+        proj = _soft_threshold_rows(rows, ratio)
+        out = jnp.swapaxes(proj.reshape(wt.shape), -1, -2)
+        return out.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(conv, params)
+
+
+def with_a2q_projection(
+    opt: Optimizer,
+    weight_bits: int = 8,
+    acc_bits: int = 16,
+    act_bits: int = 8,
+    min_dim: int = 16,
+) -> Optimizer:
+    """Wrap an optimizer so every update lands near the certifiable region.
+
+    The A2Q+ step order: inner update first (AdamW, SGD, anything with
+    the `optim.Optimizer` contract), then the per-channel weight-norm
+    projection on the new params. Optimizer state is untouched — moments
+    keep tracking the unprojected dynamics, mirroring how A2Q+ trains
+    through its normalization reparameterization.
+    """
+
+    def update(grads, state, params):
+        new_params, new_state = opt.update(grads, state, params)
+        return a2q_project_tree(
+            new_params, weight_bits, acc_bits, act_bits, min_dim
+        ), new_state
+
+    return Optimizer(opt.init, update)

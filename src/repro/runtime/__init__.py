@@ -6,3 +6,8 @@ from repro.runtime.fault_tolerance import (  # noqa: F401
     default_retryable,
     elastic_remesh,
 )
+from repro.runtime.qat import (  # noqa: F401
+    QATConfig,
+    a2q_finetune,
+    quantize_and_certify,
+)

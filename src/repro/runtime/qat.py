@@ -1,0 +1,133 @@
+"""Accumulator-aware fine-tuning: the "train" of train -> certify -> serve.
+
+`a2q_finetune` runs a model's float params through a short QAT loop in
+which every named linear site executes `core.a2q.a2q_fake_quant` (STE
+projection against the sign-split accumulator bound — see the `a2q_qat`
+dispatch context and the `models.layers.lin` hook), the optimizer applies
+A2Q+-style per-channel weight-norm projection after each step
+(`optim.with_a2q_projection`), and the per-site overflow census runs as a
+*training signal* through the exact monitor plumbing serving uses
+(`dispatch.CensusMonitor`), so the loop's history shows the same overflow
+rates a `CensusWatch` would act on.
+
+`quantize_and_certify` is the handoff to serving: quantize the fine-tuned
+params, enforce the bound exactly in the integer domain
+(`core.certify.enforce_acc_bounds` — rounding during requantization can
+leave a row marginally over even after perfect QAT), and emit the
+`Certificate` the engine attaches to `IntegerLinConfig`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core import certify, dispatch
+from repro.core.qtensor import quantize_tree
+from repro.optim import Optimizer, adamw, with_a2q_projection
+
+
+@dataclasses.dataclass(frozen=True)
+class QATConfig:
+    """Knobs for the accumulator-aware fine-tuning loop.
+
+    weight_bits/acc_bits/act_bits pin the (b, p) pair being certified
+    for; they must match the serving `IntegerLinConfig` for the
+    certificate to cover the served widths. ``census_rows`` activation
+    rows per site feed the census signal (0 disables it);
+    ``project_each_step`` applies the A2Q+ weight-norm projection after
+    every optimizer update; ``min_dim`` skips tiny projections, matching
+    what `quantize_tree` will quantize.
+    """
+
+    weight_bits: int = 8
+    acc_bits: int = 16
+    act_bits: int = 8
+    lr: float = 1e-3
+    census_rows: int = 4
+    min_dim: int = 16
+    project_each_step: bool = True
+
+
+def a2q_finetune(
+    model: Any,
+    params: Any,
+    next_batch: Callable[[int], dict],
+    steps: int,
+    cfg: QATConfig = QATConfig(),
+    optimizer: Optional[Optimizer] = None,
+) -> tuple[Any, list[dict]]:
+    """Fine-tune ``params`` under accumulator-aware fake quantization.
+
+    ``model`` follows the model-zoo contract (``model.loss(params,
+    batch)`` with batch["tokens"]/batch["labels"]); ``next_batch(i)``
+    supplies the batch for step i. Returns (new_params, history) where
+    each history entry carries the step loss and the drained per-site
+    census (dots, overflow events, rates) — the training signal.
+    """
+    opt = optimizer or adamw(lr=cfg.lr, weight_decay=0.0)
+    if cfg.project_each_step:
+        opt = with_a2q_projection(
+            opt, cfg.weight_bits, cfg.acc_bits, cfg.act_bits, cfg.min_dim
+        )
+    qat = dispatch.QATQuantConfig(
+        weight_bits=cfg.weight_bits, acc_bits=cfg.acc_bits,
+        act_bits=cfg.act_bits, min_dim=cfg.min_dim,
+        census_rows=cfg.census_rows,
+    )
+    mon = dispatch.CensusMonitor()
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(p, s, batch):
+        loss, grads = jax.value_and_grad(model.loss)(p, batch)
+        p2, s2 = opt.update(grads, s, p)
+        return p2, s2, loss
+
+    history: list[dict] = []
+    # contexts wrap TRACING: the jitted step traced inside them carries
+    # the STE projection and census callbacks permanently
+    with dispatch.a2q_qat(qat), dispatch.census_monitor(mon):
+        for i in range(steps):
+            params, opt_state, loss = step_fn(
+                params, opt_state, next_batch(i)
+            )
+            jax.block_until_ready(loss)
+            rates = mon.rates()
+            history.append({
+                "step": i,
+                "loss": float(loss),
+                "census": mon.drain(),
+                "census_rates": rates,
+            })
+    return params, history
+
+
+def quantize_and_certify(
+    params: Any,
+    acc_bits: int,
+    act_bits: int = 8,
+    weight_bits: int = 8,
+    n_keep: Optional[int] = None,
+    m: int = 16,
+    min_size: int = 1 << 10,
+    min_dim: int = 16,
+) -> tuple[Any, certify.Certificate]:
+    """Quantize -> enforce the bound exactly -> emit the certificate.
+
+    The integer-domain enforcement is belt-and-suspenders after QAT
+    (requantization rounding can nudge a row over the bound; rows
+    already inside pass through bit-exactly) and is what makes the
+    returned certificate actually cover ``acc_bits`` by construction.
+    Calibration (`ServingEngine.calibrate` + ``attach_act_qparams``)
+    can run afterwards — certificates hash only the integer weights.
+    """
+    qparams = quantize_tree(
+        params, bits=weight_bits, n_keep=n_keep, m=m,
+        min_size=min_size, min_dim=min_dim,
+    )
+    qparams = certify.enforce_acc_bounds(qparams, acc_bits, act_bits)
+    cert = certify.certify_params(qparams, acc_bits, act_bits)
+    return qparams, cert

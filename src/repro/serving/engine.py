@@ -167,6 +167,12 @@ class ServingEngine:
                     "int_lin.k_axis= naming the mesh axis the K shards "
                     "live on"
                 )
+            if int_lin.certificate is not None:
+                # a certificate only proves accumulator safety for the
+                # exact integer weights it hashed — refuse to serve a
+                # census-free path for anything else
+                # (core.certify.CertificateError on mismatch)
+                int_lin.certificate.verify(params)
         if mesh is not None and int_lin is not None:
             # distribute the integer projections over the serving mesh
             int_lin = dataclasses.replace(int_lin, mesh=mesh)
@@ -649,6 +655,12 @@ class ServingEngine:
         step functions re-jit against the new config, and a structured
         event is logged. Degraded-to-wide sites keep reporting dots with
         zero events, so the next window observably reads rate 0.0.
+
+        Certified sites (``int_lin.certificate``) never appear here at
+        all: `dispatch.qtensor_dot` dispatches them census-free, so the
+        monitor has nothing to drain for them and the watch can never
+        degrade a provably-safe site — that is the certified fast path's
+        contract, enforced by construction rather than by filtering.
         """
         self._census_steps += 1
         if self._census_steps < self.census_watch.window:

@@ -1,0 +1,398 @@
+"""Accumulator-safety certification: train -> certify -> serve census-free.
+
+Acceptance suite for `core.certify` + the certified serving fast path
+(scripts/ci.sh's ``certify`` stage runs this file under
+REPRO_FORCE_MULTIDEVICE=8):
+
+- property (hypothesis through the shim): rows projected by
+  ``a2q_quantize_project`` against a frozen activation range never exceed
+  the certified accumulator caps — not at the final sum and not at ANY
+  partial sum, including adversarial sign-aligned activations that drive
+  every product the same way;
+- certificates hash the integer weight codes only: scale drift and
+  re-calibration never invalidate, a single tampered integer does —
+  ``Certificate.verify`` raises and the engine refuses to serve;
+- certified dispatch (``pqs_dot(..., certified=True)``) is bit-identical
+  to the censused narrow-policy path on both backends wherever the
+  certificate holds;
+- end to end: a certified engine serves a drifted workload with ZERO
+  census events and zero degradations, bit-identical to the censused
+  engine on the same weights, while an uncertified engine on the same
+  fleet still trips ``census_degrade``.
+"""
+
+import os
+
+# same opt-in idiom as test_sharded_dispatch.py: only effective before
+# the first jax backend init, never leaks into the single-device suite
+if os.environ.get("REPRO_FORCE_MULTIDEVICE") and (
+    "--xla_force_host_platform_device_count"
+    not in os.environ.get("XLA_FLAGS", "")
+):
+    _v = os.environ["REPRO_FORCE_MULTIDEVICE"]
+    _n = int(_v) if _v.isdigit() and int(_v) > 1 else 8
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from _hypothesis_shim import given, settings  # noqa: E402
+from _hypothesis_shim import strategies as st  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import a2q, certify, dispatch  # noqa: E402
+from repro.core.dispatch import pqs_dot  # noqa: E402
+from repro.core.qtensor import is_qtensor, quantize_tree  # noqa: E402
+from repro.core.quant import qrange  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.runtime import (  # noqa: E402
+    QATConfig,
+    a2q_finetune,
+    quantize_and_certify,
+)
+from repro.serving import (  # noqa: E402
+    CensusWatch,
+    Request,
+    ServingEngine,
+    ServingFleet,
+)
+
+# menus, not open ranges: jit caches stay warm across drawn examples
+KS = (7, 33, 64)
+ACCS = (12, 16, 20)
+ACTS = (4, 8)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def certified24(smoke_model):
+    """Quantize + enforce + certify the smoke params at acc_bits=24."""
+    _, _, params = smoke_model
+    return quantize_and_certify(params, acc_bits=24)
+
+
+# ---------------------------------------------------------------------------
+# property: the certified bound is sound for ANY admissible activations
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(0, len(KS) - 1),
+    st.integers(0, len(ACCS) - 1),
+    st.integers(0, len(ACTS) - 1),
+    st.integers(0, 10_000),
+)
+def test_projected_rows_never_overflow(ki, ai, bi, seed):
+    """Rows projected against the frozen range stay inside the caps at
+    every partial sum, for adversarial and random activation codes."""
+    k, acc, act = KS[ki], ACCS[ai], ACTS[bi]
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1.5, (8, k)), jnp.float32)
+    wq, _ = a2q.a2q_quantize_project(w, 8, acc, act_bits=act)
+    wq = np.asarray(wq, np.int64)
+    qlo, qhi = qrange(act)
+    cap_pos, cap_neg = certify.acc_caps(acc)
+
+    # the host-side authority agrees the projection landed inside
+    pos, neg = certify.row_excursions(wq, act)
+    assert (pos <= cap_pos).all() and (neg <= cap_neg).all()
+    assert int(a2q.a2q_violations(
+        jnp.asarray(wq, jnp.int32), 8, acc, act_bits=act
+    )) == 0
+
+    # adversarial sign-aligned codes reach the excursions exactly —
+    # and still fit the register
+    x_up = np.where(wq > 0, qhi, qlo).astype(np.int64)
+    x_dn = np.where(wq > 0, qlo, qhi).astype(np.int64)
+    assert ((wq * x_up).sum(-1) == pos).all()
+    assert ((wq * x_dn).sum(-1) == -neg).all()
+    assert pos.max(initial=0) <= cap_pos
+    assert neg.max(initial=0) <= cap_neg
+
+    # every PARTIAL sum of any admissible activation, in natural and a
+    # shuffled accumulation order, stays inside [-cap_neg, cap_pos]
+    x = rng.integers(qlo, qhi + 1, size=k).astype(np.int64)
+    perm = rng.permutation(k)
+    for order in (np.arange(k), perm):
+        partials = np.cumsum(wq[:, order] * x[order], axis=-1)
+        assert partials.max(initial=0) <= cap_pos
+        assert partials.min(initial=0) >= -cap_neg
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, len(KS) - 1), st.integers(0, 10_000))
+def test_min_acc_bits_is_minimal(ki, seed):
+    """min_acc_bits returns a width that fits — and p-1 does not."""
+    rng = np.random.default_rng(seed)
+    wq = rng.integers(-127, 128, (4, KS[ki])).astype(np.int64)
+    pos, neg = certify.row_excursions(wq, 8)
+    p = certify.min_acc_bits(pos, neg)
+    cap_pos, cap_neg = certify.acc_caps(p)
+    assert pos.max() <= cap_pos and neg.max() <= cap_neg
+    if p > 2:
+        cap_pos, cap_neg = certify.acc_caps(p - 1)
+        assert pos.max() > cap_pos or neg.max() > cap_neg
+
+
+def test_truncate_rows_enforces_exactly():
+    """truncate_rows lands inside the caps and leaves safe rows alone."""
+    rng = np.random.default_rng(0)
+    wq = rng.integers(-127, 128, (16, 256)).astype(np.int32)
+    out = certify.truncate_rows(wq, 14, 8)
+    pos, neg = certify.row_excursions(out, 8)
+    cap_pos, cap_neg = certify.acc_caps(14)
+    assert (pos <= cap_pos).all() and (neg <= cap_neg).all()
+    # already-safe rows pass through bit-exactly
+    safe = certify.truncate_rows(out, 14, 8)
+    np.testing.assert_array_equal(safe, out)
+
+
+# ---------------------------------------------------------------------------
+# certificate identity: hashes cover integer codes, nothing else
+
+
+def _drift_scale(params, factor, needle="w_up"):
+    def fix(path, leaf):
+        if is_qtensor(leaf) and any(needle in str(p) for p in path):
+            return dataclasses.replace(leaf, scale=leaf.scale * factor)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params, is_leaf=is_qtensor)
+
+
+def _tamper_values(params, needle="w_up"):
+    def fix(path, leaf):
+        if is_qtensor(leaf) and any(needle in str(p) for p in path):
+            v = np.asarray(leaf.values).copy()
+            v.flat[0] = v.flat[0] + 1 if v.flat[0] < 127 else v.flat[0] - 1
+            return dataclasses.replace(leaf, values=jnp.asarray(v))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params, is_leaf=is_qtensor)
+
+
+def test_certificate_verify_and_tamper(certified24):
+    qparams, cert = certified24
+    assert cert.acc_bits == 24
+    for sc in cert.sites:
+        assert sc.acc_bits_safe <= 24 and sc.slack > 0.0
+    cert.verify(qparams)  # fresh params verify
+    cert.verify(_drift_scale(qparams, 8))  # scale drift never invalidates
+    with pytest.raises(certify.CertificateError):
+        cert.verify(_tamper_values(qparams))  # one integer code does
+
+
+def test_certificate_covers_semantics(certified24):
+    _, cert = certified24
+    sc = cert.site("w_out")
+    assert sc is not None
+    assert cert.covers("w_out", 24, 8)
+    assert cert.covers("w_out", 30, 8)  # wider register: still safe
+    assert cert.covers("w_out", 24, 4)  # narrower activations: subset
+    assert not cert.covers("w_out", sc.acc_bits_safe - 1, 8)
+    assert not cert.covers("w_out", 24, 9)  # wider codes than certified
+    assert not cert.covers("nonexistent_site", 24, 8)
+
+
+def test_certificate_leaf_roundtrip(certified24):
+    """to_leaf/from_leaf: the certificate rides on checkpoints."""
+    qparams, cert = certified24
+    leaf = cert.to_leaf()
+    assert isinstance(leaf, np.ndarray) and leaf.dtype == np.uint8
+    back = certify.Certificate.from_leaf(leaf)
+    assert back.acc_bits == cert.acc_bits
+    assert back.sites == cert.sites
+    back.verify(qparams)
+
+
+# ---------------------------------------------------------------------------
+# certified dispatch: census-free and bit-identical where the cert holds
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("policy", ["sorted_tiled_seq", "sorted", "clip"])
+def test_certified_dispatch_bit_identical(policy, backend):
+    acc = 14
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-127, 128, (5, 96)), jnp.int8)
+    w = certify.truncate_rows(
+        rng.integers(-127, 128, (7, 96)).astype(np.int32), acc, 8
+    ).astype(np.int8)
+    kw = dict(acc_bits=acc, policy=policy, k_tile=32, backend=backend)
+    ref, cns = pqs_dot(x, jnp.asarray(w), with_census=True, **kw)
+    out = pqs_dot(x, jnp.asarray(w), certified=True, **kw)
+    assert int(cns.n_any) == 0  # the certificate is telling the truth
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_certified_dispatch_bit_identical_ksharded():
+    acc = 14
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.integers(-127, 128, (3, 128)), jnp.int8)
+    w = certify.truncate_rows(
+        rng.integers(-127, 128, (4, 128)).astype(np.int32), acc, 8
+    ).astype(np.int8)
+    kw = dict(acc_bits=acc, policy="sorted_tiled_seq", k_tile=32,
+              backend="jnp", k_shards=4)
+    ref = pqs_dot(x, jnp.asarray(w), **kw)
+    out = pqs_dot(x, jnp.asarray(w), certified=True, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_certified_rejects_census():
+    x = jnp.zeros((2, 16), jnp.int8)
+    w = jnp.zeros((2, 16), jnp.int8)
+    with pytest.raises(ValueError, match="certified"):
+        pqs_dot(x, w, certified=True, with_census=True)
+
+
+# ---------------------------------------------------------------------------
+# train: the accumulator-aware fine-tuning loop
+
+
+def test_a2q_finetune_smoke(smoke_model):
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(7)
+
+    def next_batch(_i):
+        tok = rng.integers(1, cfg.vocab_size, size=(2, 16)).astype(np.int32)
+        return {"tokens": jnp.asarray(tok), "labels": jnp.asarray(tok)}
+
+    qcfg = QATConfig(acc_bits=16, census_rows=2)
+    p2, history = a2q_finetune(model, params, next_batch, steps=2, cfg=qcfg)
+    assert len(history) == 2
+    assert all(np.isfinite(h["loss"]) for h in history)
+    # the census signal is live: every QAT site reported a rate
+    rates = history[-1]["census_rates"]
+    assert set(rates) >= {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_out"}
+    assert all(0.0 <= v <= 1.0 for v in rates.values())
+    # params actually moved under the projected update
+    moved = jax.tree_util.tree_reduce(
+        lambda a, b: a + float(jnp.abs(b).sum()),
+        jax.tree_util.tree_map(
+            lambda a, b: jnp.asarray(a, jnp.float32)
+            - jnp.asarray(b, jnp.float32),
+            p2, params,
+        ),
+        0.0,
+    )
+    assert moved > 0.0
+    # and the fine-tuned weights certify at the trained width after the
+    # integer-domain enforcement
+    _, cert = quantize_and_certify(p2, acc_bits=16)
+    assert all(sc.acc_bits_safe <= 16 for sc in cert.sites)
+
+
+# ---------------------------------------------------------------------------
+# serve: certified engines are census-free on drifted workloads
+
+
+def _reqs():
+    return [
+        Request(
+            uid=i, prompt=np.asarray([1 + i, 2, 3 + i, 5], np.int32),
+            max_new_tokens=20,
+        )
+        for i in range(4)
+    ]
+
+
+CAL = {"tokens": jnp.asarray((np.arange(32).reshape(2, 16) % 97 + 1),
+                             jnp.int32)}
+
+
+def test_engine_refuses_tampered_certificate(smoke_model, certified24):
+    _, model, _ = smoke_model
+    qparams, cert = certified24
+    il = dispatch.IntegerLinConfig(
+        policy="sorted_tiled_seq", acc_bits=24, k_tile=64, backend="jnp",
+        certificate=cert,
+    )
+    with pytest.raises(certify.CertificateError):
+        ServingEngine(model, _tamper_values(qparams), num_slots=2,
+                      max_len=48, int_lin=il)
+
+
+def test_certified_fleet_census_free_and_bit_identical(
+    smoke_model, smoke_qparams17, certified24
+):
+    """The acceptance gate: on one fleet serving a drifted workload, the
+    certified engine decodes with zero census events and zero
+    degradations — bit-identical to the censused engine on the same
+    weights — while the uncertified engine still trips census_degrade."""
+    _, model, _ = smoke_model
+    qparams, cert = certified24
+    watch = CensusWatch(threshold=0.01, window=4)
+
+    def build(params, acc_bits, certificate):
+        il = dispatch.IntegerLinConfig(
+            policy="sorted_tiled_seq", acc_bits=acc_bits, k_tile=64,
+            backend="jnp", certificate=certificate,
+        )
+        eng = ServingEngine(
+            model, params, num_slots=4, max_len=48,
+            int_lin=il, census_watch=watch,
+        )
+        eng.calibrate([CAL])
+        # inflate w_up's dequant scale post-calibration: w_out's input
+        # leaves the frozen static range on every engine equally
+        eng.params = _drift_scale(eng.params, 8)
+        return eng
+
+    certified = build(qparams, 24, cert)
+    censused = build(qparams, 24, None)
+    uncert = build(smoke_qparams17, 17, None)
+
+    fleet = ServingFleet()
+    fleet.add_engine("cert", certified)
+    fleet.add_engine("plain", uncert)
+    reqs_cert, reqs_plain = _reqs(), _reqs()
+    for r in reqs_cert:
+        fleet.submit("cert", r)
+    for r in reqs_plain:
+        fleet.submit("plain", r)
+    while fleet.step():
+        pass
+    fleet.wait()
+    assert all(r.done for r in reqs_cert + reqs_plain)
+
+    # certified engine: census-free by construction — zero events, zero
+    # degradations, not even a census rate observed
+    assert certified.stats["census_degrades"] == 0
+    assert certified.events == []
+    assert certified._degraded == set()
+    assert certified.last_census_rates == {}
+
+    # uncertified engine on the same fleet, same drift: the guardrail
+    # still fires exactly as in test_serving_fleet
+    assert uncert._degraded == {"w_out"}
+    (event,) = [e for e in uncert.events if e["event"] == "census_degrade"]
+    assert event["site"] == "w_out"
+
+    # bit-identity: the censused engine decodes the same tokens
+    reqs_ref = _reqs()
+    censused.drain(reqs_ref)
+    assert censused.stats["census_degrades"] == 0
+    assert {r.uid: list(r.output) for r in reqs_ref} == \
+        {r.uid: list(r.output) for r in reqs_cert}
+
+
+@pytest.fixture(scope="module")
+def smoke_qparams17(smoke_model):
+    """Plain (unenforced, uncertified) int8 quantization — the drifted
+    acc_bits=17 configuration test_serving_fleet degrades under."""
+    _, _, params = smoke_model
+    return quantize_tree(params, bits=8, min_size=1 << 10, min_dim=16)
