@@ -13,6 +13,7 @@ Per kernel configuration:
 
 from __future__ import annotations
 
+import jax
 import numpy as np
 import jax.numpy as jnp
 
@@ -216,12 +217,25 @@ def bench_kernels(quick: bool = False) -> list[dict]:
         cert_out = pqs_dot(x, w, certified=True, **base)
         full_out = pqs_dot(x, w, **base)
         assert (np.asarray(cert_out) == np.asarray(full_out)).all(), policy
+        # combine tail in isolation: defer_combine splits the dot into
+        # per-shard partials + the pending exchange; timing .combine()
+        # on materialized partials is the latency the overlap hides.
+        # The structural interconnect story rides along: the butterfly
+        # moves log2(S) registers per member where the old gather moved
+        # all S partials (exchange_levels vs k_shards columns).
+        pend = pqs_dot(x, w, k_shards=k_shards, defer_combine=True, **base)
+        jax.block_until_ready(pend.partials)
+        combine_us = _time_us(lambda: pend.combine(), reps)
+        assert (np.asarray(pend.combine()) == np.asarray(oracle)).all(), (
+            policy)
         rows.append({
             "policy": f"kshard:{policy}", "m": m, "n": n, "k": k,
             "blocks": f"{bm}x{bn}x{k_tile}", "k_shards": k_shards,
             "kshard_us": round(kshard_us),
             "full_us": round(full_us),
             "certified_us": round(certified_us),
+            "combine_us": round(combine_us, 1),
+            "exchange_levels": int(np.log2(k_shards)),
         })
 
     # tuned vs static blocks: run the measured autotuner on one shape per
@@ -269,7 +283,8 @@ def bench_kernels(quick: bool = False) -> list[dict]:
             "twopass_us", "onepass_vmem_kib", "twopass_vmem_kib",
             "nm_expand_us", "nm_gather_us", "dense_us",
             "weight_bytes_vs_dense", "kshard_us", "full_us",
-            "certified_us", "static_us", "tuned_us", "tuned_blocks"]
+            "certified_us", "combine_us", "exchange_levels",
+            "static_us", "tuned_us", "tuned_blocks"]
     emit("BENCH_kernels", rows, keys)
     return rows
 

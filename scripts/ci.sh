@@ -17,12 +17,15 @@
 #          (tests/test_property_parity.py, >= 200 drawn cases per run
 #          through the hypothesis shim); extra args go to pytest
 #   shard  forced-multi-device shard: sharded pqs_dot + integer serving
-#          + nm-storage composition + the K-sharded (k_axis) sweep
-#          (dense + nm, all six policies, incl. total K = 2x
-#          MAX_STREAM_K) on an 8-way host-device mesh (the selected
-#          tests self-skip in the unit stage, so this is the only place
-#          they run; test_nm_policy's single-device tests already ran
-#          in unit and are not repeated here)
+#          + nm-storage composition + the K-sharded (k_axis) pairwise-
+#          exchange sweep (the log2(S) ppermute butterfly combine —
+#          dense + nm, all six policies, S=2 and S=4, incl. total K =
+#          2x MAX_STREAM_K), the deferred/overlapped combine parity,
+#          and the serve_mode pool-sharded decode, all on an 8-way
+#          host-device mesh (the selected tests self-skip in the unit
+#          stage, so this is the only place they run; test_nm_policy's
+#          single-device tests already ran in unit and are not
+#          repeated here)
 #   smoke  examples/quickstart.py (the paper's idea end-to-end)
 #   bench  kernel bench smoke -> BENCH_kernels.json, gated against the
 #          committed CPU baseline (see REPRO_BENCH_TOL below)

@@ -53,12 +53,17 @@ K-sharded accumulation: ``pqs_dot(..., k_shards=S)`` (and its mesh form
 ``mesh= + k_axis=``) partitions the REDUCTION axis instead of keeping
 it whole: each shard accumulates its contiguous, policy-padded K/S
 slice under the configured policy with the unchanged kernel bodies, and
-the per-shard partials merge small-to-large through
-``core.sorted_accum.tree_combine`` with stepwise saturation. The census
-counts every shard's local dot and reports combine-step overflows
-separately (``Census.n_combine``). This is what carries a single dot
-past the compiled sort kernels' per-device ``ops.MAX_STREAM_K`` bound:
-per-device K footprint is K/S.
+the per-shard partials merge up the shared static combine tree
+(``core.sorted_accum.combine_schedule`` / ``tree_combine``) with
+stepwise saturation. On a mesh the tree runs as log2(S) pairwise
+``ppermute`` exchanges along ``k_axis`` — one (M, N) int32 register per
+step instead of all-gathering all S partials — and
+``defer_combine=True`` exposes the exchange as an async-dispatchable
+tail (``PendingCombine``) so independent compute overlaps it. The
+census counts every shard's local dot and reports combine-step
+overflows separately (``Census.n_combine``). This is what carries a
+single dot past the compiled sort kernels' per-device
+``ops.MAX_STREAM_K`` bound: per-device K footprint is K/S.
 """
 
 from __future__ import annotations
@@ -75,13 +80,17 @@ from repro.core.overflow import (
     Census,
     accumulate,
     census,
-    kshard_accumulate,
+    kshard_partials,
     nm_partial_products,
     partial_products,
 )
 from repro.core.pruning import nm_decompress_jax
 from repro.core.quant import qrange
-from repro.core.sorted_accum import tree_combine
+from repro.core.sorted_accum import (
+    combine_schedule,
+    combine_step,
+    tree_combine,
+)
 from repro.kernels import ops
 
 POLICIES = ops.POLICIES  # derived from the kernel modules — one list
@@ -257,6 +266,36 @@ def _merge_census(tot: Optional[Census], c: Census) -> Census:
     return c if tot is None else Census(*(a + b for a, b in zip(tot, c)))
 
 
+@dataclasses.dataclass
+class PendingCombine:
+    """A K-sharded dot whose cross-shard combine is still pending.
+
+    The async-dispatchable tail of ``pqs_dot(..., defer_combine=True)``:
+    ``partials`` holds every shard's policy-accumulated int32 register —
+    (M, N, S) on a single device, or a global (S, M, N) array laid out
+    along ``k_axis`` on a mesh, where each member owns exactly its own
+    register (O(1) per-member footprint, never the gathered S). Nothing
+    has crossed the interconnect yet.
+
+    ``combine()`` merges the registers up the shared static combine tree
+    (``core.sorted_accum.combine_schedule``) and returns what the
+    non-deferred call would have — ``out`` or ``(out, Census)`` — bit
+    for bit. Because dispatching the exchange is separated from
+    consuming its result, a caller tracing both phases into one jitted
+    step lets XLA's latency-hiding scheduler run the log2(S) ppermute
+    steps concurrently with any compute that does not depend on the
+    combined value: issue pass 1 of the next dot, then combine the
+    previous one (double-buffered partials in the serving step).
+    """
+
+    partials: Any
+    _finish: Any  # partials -> out | (out, Census)
+
+    def combine(self):
+        """Run the combine tail; returns ``out`` or ``(out, Census)``."""
+        return self._finish(self.partials)
+
+
 def _kshard_dot(
     x2: jax.Array,  # (M, k_shards * k_local) — pre-padded by pqs_dot
     w: Any,  # (N, k_shards * k_local) dense, or pre-padded nm slabs
@@ -277,16 +316,18 @@ def _kshard_dot(
     m_group: Optional[int] = None,
     nm_impl: Optional[str] = None,
     certified: bool = False,
-) -> tuple[jax.Array, Optional[Census]]:
+    defer: bool = False,
+):
     """Single-device hierarchical K-sharded dot (and the mesh oracle).
 
     K (pre-padded into ``k_shards`` equal, policy-padded contiguous
     slices) is partitioned; every shard accumulates its local slice
     under the unmodified policy — the jnp backend through
-    ``overflow.kshard_accumulate``, the pallas backend through the
+    ``overflow.kshard_partials``, the pallas backend through the
     per-shard kernel entry points (``ops.partial_policy_matmul`` /
     ``ops.nm_partial_policy_matmul``) — and the per-shard partials merge
-    small-to-large through ``core.sorted_accum.tree_combine``.
+    up the shared static combine tree
+    (``core.sorted_accum.tree_combine``).
 
     Census: every shard's local dot is an examined dot (n_dots =
     k_shards * M * N; per-shard natural-order classification), and
@@ -296,13 +337,15 @@ def _kshard_dot(
     certified=True: per-shard partials AND every combine step are subset
     sums of the row's products, so the certificate covers the whole
     hierarchy — shards and the combine run census-free/saturation-free.
+
+    defer=True returns a ``PendingCombine`` over the stacked (M, N, S)
+    registers instead; its finish runs ``tree_combine`` and yields
+    ``(out, census)`` exactly as the eager path would.
     """
     if certified:
         with_census = False
     jnp_policy = "wide" if certified else policy
     m = x2.shape[0]
-    kp = x2.shape[1]
-    k_local = kp // k_shards
     n = (w[0] if storage == "nm" else w).shape[0]
     chunk = m if (batch_chunk is None or batch_chunk >= m) else batch_chunk
     wd = None
@@ -310,35 +353,32 @@ def _kshard_dot(
         # G is pre-padded to a k_shards multiple, so the decompressed
         # matrix is (N, kp) and shard slices fall on group boundaries
         wd = nm_decompress_jax(w[0], w[1], m_group)
-    outs = []
+    parts_all = []
     tot: Optional[Census] = None
-    ncomb = None
     for i in range(0, m, max(chunk, 1)):
         xc = x2[i : i + chunk]
         prods = None
         if backend == "jnp":
             prods = partial_products(wd if storage == "nm" else w, xc)
-            out_c, novf = kshard_accumulate(
+            parts = kshard_partials(
                 prods, acc_bits, jnp_policy, k_shards, k_tile, rounds
             )
+        elif storage == "nm":
+            parts = ops.nm_partial_policy_matmul(
+                xc, w[0], w[1], m_group=m_group, k_shards=k_shards,
+                policy=policy, acc_bits=acc_bits, k_tile=k_tile,
+                rounds=rounds, bm=block_m, bn=block_n,
+                sort_impl=sort_impl, nm_impl=nm_impl,
+                interpret=interpret, census=not certified,
+            )
         else:
-            if storage == "nm":
-                parts = ops.nm_partial_policy_matmul(
-                    xc, w[0], w[1], m_group=m_group, k_shards=k_shards,
-                    policy=policy, acc_bits=acc_bits, k_tile=k_tile,
-                    rounds=rounds, bm=block_m, bn=block_n,
-                    sort_impl=sort_impl, nm_impl=nm_impl,
-                    interpret=interpret, census=not certified,
-                )
-            else:
-                parts = ops.partial_policy_matmul(
-                    xc, w, k_shards=k_shards, policy=policy,
-                    acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
-                    bm=block_m, bn=block_n, sort_impl=sort_impl,
-                    interpret=interpret, census=not certified,
-                )
-            out_c, novf = tree_combine(parts, acc_bits, jnp_policy)
-        outs.append(out_c)
+            parts = ops.partial_policy_matmul(
+                xc, w, k_shards=k_shards, policy=policy,
+                acc_bits=acc_bits, k_tile=k_tile, rounds=rounds,
+                bm=block_m, bn=block_n, sort_impl=sort_impl,
+                interpret=interpret, census=not certified,
+            )
+        parts_all.append(parts)
         if with_census:
             if prods is None:
                 prods = (
@@ -350,12 +390,61 @@ def _kshard_dot(
                 xc.shape[0], n, k_shards, prods.shape[-1] // k_shards
             )
             tot = _merge_census(tot, census(sh, acc_bits))
-            nc = jnp.sum(novf).astype(jnp.int32)
-            ncomb = nc if ncomb is None else ncomb + nc
-    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
-    if with_census:
-        tot = tot._replace(n_combine=tot.n_combine + ncomb)
-    return out, tot
+    parts = (
+        parts_all[0] if len(parts_all) == 1
+        else jnp.concatenate(parts_all, axis=0)
+    )
+
+    def finish(p):
+        out, novf = tree_combine(p, acc_bits, jnp_policy)
+        t = tot
+        if with_census:
+            t = t._replace(
+                n_combine=t.n_combine + jnp.sum(novf).astype(jnp.int32)
+            )
+        return out, t
+
+    if defer:
+        return PendingCombine(parts, finish)
+    return finish(parts)
+
+
+def _exchange_combine(
+    val: jax.Array, k_axis: str, k_size: int, acc_bits: int, policy: str
+) -> tuple[jax.Array, jax.Array]:
+    """Pairwise-exchange combine along ``k_axis`` (inside shard_map).
+
+    Walks ``core.sorted_accum.combine_schedule(k_size)``: log2(S)
+    ``ppermute`` steps, each exchanging this member's (M, N) int32
+    register with the level's partner and merging through
+    ``combine_step``. Every member ends holding the root of the same
+    balanced tree ``tree_combine`` computes locally (the two realize one
+    schedule — that is the bit-identity argument), with per-member
+    interconnect volume of log2(S) registers instead of the S an
+    all-gather moves. Non-power-of-two axis sizes fall back to
+    all-gather + ``tree_combine`` — still bit-identical, the gathered
+    vector just walks the identical tree on every member.
+
+    Returns ``(combined, novf_local)``: the combined registers
+    (replicated along ``k_axis``) and this member's share of the
+    combine-overflow count. Every tree merge is computed redundantly by
+    all members of its block, so it is counted only on the block's
+    lowest-index member — ``psum`` over ``k_axis`` then reconstructs
+    exactly ``tree_combine``'s per-tree count.
+    """
+    if k_size & (k_size - 1):
+        parts = jnp.moveaxis(jax.lax.all_gather(val, k_axis), 0, -1)
+        out, novf = tree_combine(parts, acc_bits, policy)
+        keep = jax.lax.axis_index(k_axis) == 0
+        return out, jnp.where(keep, novf, 0)
+    idx = jax.lax.axis_index(k_axis)
+    novf = jnp.zeros(val.shape, jnp.int32)
+    for level, perm in enumerate(combine_schedule(k_size)):
+        other = jax.lax.ppermute(val, k_axis, perm)
+        val, hit = combine_step(val, other, acc_bits, policy)
+        own = idx % (1 << (level + 1)) == 0
+        novf = novf + jnp.where(own, hit.astype(jnp.int32), 0)
+    return val, novf
 
 
 def _sharded_dot(
@@ -366,6 +455,7 @@ def _sharded_dot(
     n_axis: str,
     with_census: bool,
     k_axis: Optional[str] = None,
+    defer: bool = False,
     **kw,
 ):
     """shard_map wrapper: M on the data axes, N on the TP axis, K whole
@@ -379,13 +469,21 @@ def _sharded_dot(
     axes, so any shape lowers (at worst fully replicated).
 
     With ``k_axis`` each device accumulates its contiguous K/S slice
-    under the policy (still the unmodified local routine), the per-shard
-    partials are all-gathered along the K axis (S int32 scalars per
-    output element) and merged small-to-large by
-    ``core.sorted_accum.tree_combine`` on every member — bit-identical
-    to the single-device ``k_shards=S`` hierarchy. The census is psummed
-    over the K axis too (every shard's dot is an examined dot) while
-    combine-step counts, identical on all K members, are not.
+    under the policy (still the unmodified local routine) and the
+    per-shard registers merge through the pairwise exchange
+    (``_exchange_combine``): log2(S) ``ppermute`` steps along the K
+    axis, one (M, N) int32 register each, realizing the same static
+    combine schedule as the single-device ``k_shards=S`` hierarchy —
+    bit-identical to it, at O(1) resident partials per member. The
+    census is psummed over the K axis too (every shard's dot is an
+    examined dot), and the per-member combine-count shares are psummed
+    over ``k_axis`` as well to reconstruct the exact per-tree total.
+
+    ``defer=True`` splits the dot into two shard_maps: phase 1 returns
+    the global (S, M, N) register array laid out on ``k_axis`` wrapped
+    in a ``PendingCombine``; its finish runs the exchange. Tracing both
+    phases into one jitted step lets XLA overlap the exchange with any
+    compute independent of the combined value.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -424,37 +522,83 @@ def _sharded_dot(
     for entry in (x_spec[0], w_row):
         if entry is not None:
             used.extend(entry if isinstance(entry, tuple) else (entry,))
+    k_size = int(mesh.shape[k_axis]) if k_axis is not None else 1
+    acc_bits = kw["acc_bits"]
+    combine_policy = "wide" if kw.get("certified") else kw["policy"]
+    cns_specs = Census(P(), P(), P(), P(), P())
 
-    def body(xl, wl):
-        out, cns = _local_dot(xl, wl, with_census=with_census, **kw)
-        novf = None
-        if k_axis is not None:
-            parts = jnp.moveaxis(jax.lax.all_gather(out, k_axis), 0, -1)
-            combine_policy = (
-                "wide" if kw.get("certified") else kw["policy"]
-            )
-            out, novf = tree_combine(parts, kw["acc_bits"], combine_policy)
-        if with_census:
-            axes = tuple(used) + ((k_axis,) if k_axis is not None else ())
-            if axes:
-                cns = jax.tree_util.tree_map(
-                    lambda a: jax.lax.psum(a, axes), cns
+    if not defer:
+
+        def body(xl, wl):
+            out, cns = _local_dot(xl, wl, with_census=with_census, **kw)
+            novf = None
+            if k_axis is not None:
+                out, novf = _exchange_combine(
+                    out, k_axis, k_size, acc_bits, combine_policy
                 )
-            if novf is not None:
-                nc = jnp.sum(novf).astype(jnp.int32)
-                if used:
-                    nc = jax.lax.psum(nc, tuple(used))
-                cns = cns._replace(n_combine=cns.n_combine + nc)
-        return (out, cns) if with_census else out
+            if with_census:
+                axes = tuple(used) + (
+                    (k_axis,) if k_axis is not None else ()
+                )
+                if axes:
+                    cns = jax.tree_util.tree_map(
+                        lambda a: jax.lax.psum(a, axes), cns
+                    )
+                if novf is not None:
+                    nc = jnp.sum(novf).astype(jnp.int32)
+                    nc = jax.lax.psum(nc, tuple(used) + (k_axis,))
+                    cns = cns._replace(n_combine=cns.n_combine + nc)
+            return (out, cns) if with_census else out
 
-    out_specs = (
-        (out_spec, Census(P(), P(), P(), P(), P()))
-        if with_census else out_spec
-    )
-    return shard_map(
-        body, mesh, in_specs=(x_spec, w_spec), out_specs=out_specs,
+        out_specs = (out_spec, cns_specs) if with_census else out_spec
+        return shard_map(
+            body, mesh, in_specs=(x_spec, w_spec), out_specs=out_specs,
+            check_rep=False,
+        )(x2, w)
+
+    # deferred: phase 1 materializes each member's register as its slot
+    # of a global (S, M, N) array laid out along k_axis; phase 2 — the
+    # exchange — dispatches when the caller consumes the PendingCombine
+    part_spec = P(k_axis, *out_spec)
+
+    def body1(xl, wl):
+        out, cns = _local_dot(xl, wl, with_census=with_census, **kw)
+        if with_census:
+            axes = tuple(used) + (k_axis,)
+            cns = jax.tree_util.tree_map(
+                lambda a: jax.lax.psum(a, axes), cns
+            )
+            return out[None], cns
+        return out[None]
+
+    out_specs1 = (part_spec, cns_specs) if with_census else part_spec
+    res1 = shard_map(
+        body1, mesh, in_specs=(x_spec, w_spec), out_specs=out_specs1,
         check_rep=False,
     )(x2, w)
+    parts, cns1 = res1 if with_census else (res1, None)
+
+    def body2(pl):
+        out, novf = _exchange_combine(
+            pl[0], k_axis, k_size, acc_bits, combine_policy
+        )
+        nc = jnp.sum(novf).astype(jnp.int32)
+        nc = jax.lax.psum(nc, tuple(used) + (k_axis,))
+        return out, nc
+
+    combine_fn = shard_map(
+        body2, mesh, in_specs=(part_spec,), out_specs=(out_spec, P()),
+        check_rep=False,
+    )
+
+    def finish(p):
+        out, nc = combine_fn(p)
+        t = cns1
+        if with_census:
+            t = t._replace(n_combine=t.n_combine + nc)
+        return out, t
+
+    return PendingCombine(parts, finish)
 
 
 def pqs_dot(
@@ -482,6 +626,7 @@ def pqs_dot(
     m_group: Optional[int] = None,
     nm_impl: Optional[str] = None,
     certified: bool = False,
+    defer_combine: bool = False,
 ):
     """Quantized dot products with simulated narrow accumulation.
 
@@ -521,19 +666,29 @@ def pqs_dot(
 
     ``k_shards=S`` (without a mesh) partitions K into S contiguous,
     equal, policy-padded slices accumulated independently under the
-    policy, then merged small-to-large by
-    ``core.sorted_accum.tree_combine`` (stepwise saturation; the census
-    reports combine-step overflows separately in ``Census.n_combine``,
-    and every shard's local dot counts as an examined dot). With
-    ``mesh`` + ``k_axis`` the same hierarchy runs distributed: K is
-    partitioned across that mesh axis, each device accumulates only its
-    K/S slice (per-device K footprint drops by S — past
-    ``ops.MAX_STREAM_K`` total K for the compiled sort kernels), and
-    partials are all-gathered and combined — bit-identical to
-    ``k_shards=S`` on one device. Note the hierarchy intentionally
-    changes the accumulation ORDER vs the full-K dot for the saturating
-    policies (docs/accumulation.md, "K-sharded accumulation");
-    ``wide``/``wrap`` are exactly order-invariant.
+    policy, then merged up the shared static combine tree
+    (``core.sorted_accum.combine_schedule`` / ``tree_combine`` —
+    stepwise saturation; the census reports combine-step overflows
+    separately in ``Census.n_combine``, and every shard's local dot
+    counts as an examined dot). With ``mesh`` + ``k_axis`` the same
+    hierarchy runs distributed: K is partitioned across that mesh axis,
+    each device accumulates only its K/S slice (per-device K footprint
+    drops by S — past ``ops.MAX_STREAM_K`` total K for the compiled
+    sort kernels), and the per-shard registers merge through log2(S)
+    pairwise ``ppermute`` exchanges realizing the identical schedule —
+    bit-identical to ``k_shards=S`` on one device, at one (M, N)
+    register per exchange instead of an S-partial all-gather. Note the
+    hierarchy intentionally changes the accumulation ORDER vs the
+    full-K dot for the saturating policies (docs/accumulation.md,
+    "K-sharded accumulation"); ``wide``/``wrap`` are exactly
+    order-invariant.
+
+    ``defer_combine=True`` (K-sharded paths only) returns a
+    ``PendingCombine`` instead of the result: the per-shard registers
+    with the cross-shard exchange still pending. ``.combine()`` yields
+    exactly what the eager call would have returned; dispatching both
+    phases inside one jitted step lets XLA overlap the exchange with
+    independent compute (see ``PendingCombine``).
 
     ``certified=True`` declares that a `core.certify.Certificate` proves
     no partial sum of these operands can reach the acc_bits caps — the
@@ -663,6 +818,30 @@ def pqs_dot(
         storage=storage, m_group=m_group if storage == "nm" else None,
         nm_impl=nm_impl if storage == "nm" else None, certified=certified,
     )
+    if defer_combine:
+        if mesh is not None and k_axis is not None:
+            pending = _sharded_dot(
+                x2, w, mesh, m_axes, n_axis, with_census, k_axis=k_axis,
+                defer=True, **kw
+            )
+        elif mesh is None and k_shards > 1:
+            pending = _kshard_dot(
+                x2, w, k_shards=k_shards, with_census=with_census,
+                defer=True, **kw
+            )
+        else:
+            raise ValueError(
+                "defer_combine=True needs a K-sharded dot "
+                "(k_shards > 1, or mesh= with k_axis=)"
+            )
+
+        def finish_full(p):
+            o, tot = pending._finish(p)
+            o = o.reshape(*lead, n)
+            return (o, tot) if with_census else o
+
+        return PendingCombine(pending.partials, finish_full)
+
     if mesh is not None:
         res = _sharded_dot(
             x2, w, mesh, m_axes, n_axis, with_census, k_axis=k_axis, **kw
@@ -696,12 +875,20 @@ class IntegerLinConfig:
     over the dynamic per-call absmax reduction whenever present.
 
     ``k_shards`` opts long-K projections into hierarchical K-sharded
-    accumulation (per-shard policy partials + ``tree_combine``): only
-    layers whose contraction dim is >= ``k_shard_min_k`` take the
-    hierarchy — shorter projections keep the bit-identical full-K path.
-    With a mesh, ``k_axis`` names the mesh axis the K shards live on
-    (K-sharded weight placement: ``launch.sharding.params_shardings``
-    with the same ``k_axis``/``k_shard_min_k``).
+    accumulation (per-shard policy partials + the shared static combine
+    tree): only layers whose contraction dim is >= ``k_shard_min_k``
+    take the hierarchy — shorter projections keep the bit-identical
+    full-K path. With a mesh, ``k_axis`` names the mesh axis the K
+    shards live on (K-sharded weight placement:
+    ``launch.sharding.params_shardings`` with the same
+    ``k_axis``/``k_shard_min_k``). ``overlap_combine`` dispatches each
+    K-sharded projection through the deferred two-phase path
+    (``pqs_dot(defer_combine=True)`` + immediate ``combine()``): bit
+    for bit the same result, but the pass-1 registers and the exchange
+    tail lower as separate collectives, so XLA's latency-hiding
+    scheduler can overlap one site's log2(S) exchange with another
+    site's pass-1 compute inside the same jitted serving step
+    (double-buffered partials; see docs/accumulation.md).
 
     ``certificate`` (a ``core.certify.Certificate``) turns on the
     certified serving fast path: sites whose proof reaches this config's
@@ -727,6 +914,7 @@ class IntegerLinConfig:
     k_shards: Optional[int] = None  # K-sharded accumulation (opt-in)
     k_axis: Optional[str] = None  # mesh axis carrying the K shards
     k_shard_min_k: int = 0  # only layers with K >= this take the hierarchy
+    overlap_combine: bool = False  # deferred two-phase K-shard combine
     nm_impl: Optional[str] = None  # sparse kernel impl: expand|gather|auto
     # per-site overrides, ((site, value), ...) — the census-degradation
     # hot-swap path: one saturating layer widens without touching the rest
@@ -762,6 +950,18 @@ class IntegerLinConfig:
         over[site] = int(bits)
         return dataclasses.replace(
             self, site_acc_bits=tuple(sorted(over.items()))
+        )
+
+    def without_site(self, site: str) -> "IntegerLinConfig":
+        """Drop every per-site override for ``site`` (un-degrade path)."""
+        return dataclasses.replace(
+            self,
+            site_policies=tuple(
+                (s, p) for s, p in self.site_policies if s != site
+            ),
+            site_acc_bits=tuple(
+                (s, b) for s, b in self.site_acc_bits if s != site
+            ),
         )
 
 
@@ -1014,6 +1214,11 @@ def qtensor_dot(
         mon is not None and site is not None and policy != "wide"
         and not certified
     )
+    kshard_active = (
+        (cfg.mesh is not None and ka is not None)
+        or (cfg.mesh is None and ks is not None and int(ks) > 1)
+    )
+    defer = bool(cfg.overlap_combine) and kshard_active
     res = pqs_dot(
         xq, wq, acc_bits=acc_bits,
         policy=policy, k_tile=cfg.k_tile, rounds=cfg.rounds,
@@ -1022,7 +1227,13 @@ def qtensor_dot(
         k_axis=ka if cfg.mesh is not None else None, storage=storage,
         nm_impl=cfg.nm_impl if sparse else None,
         with_census=want_census, certified=certified,
+        defer_combine=defer,
     )
+    if defer:
+        # two-phase dispatch: the exchange tail lowers as its own
+        # collective, overlappable with independent compute traced into
+        # the same step — the result is bit-identical either way
+        res = res.combine()
     if want_census:
         z, cns = res
         jax.debug.callback(

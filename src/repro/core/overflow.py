@@ -159,6 +159,34 @@ def accumulate(
     jax.jit,
     static_argnames=("acc_bits", "policy", "k_shards", "k_tile", "rounds"),
 )
+def kshard_partials(
+    prods: jax.Array,
+    acc_bits: int,
+    policy: Policy = "clip",
+    k_shards: int = 1,
+    k_tile: int = 256,
+    rounds: int = 1,
+) -> jax.Array:
+    """Per-shard policy partials — phase 1 of ``kshard_accumulate``.
+
+    ``prods`` is (..., K) with K divisible by ``k_shards``: each
+    contiguous K/k_shards slice accumulates independently under
+    ``policy`` (exactly ``accumulate`` on the slice — the same order a
+    shard's kernel realizes on its local K). Returns the (..., S) int32
+    per-shard registers still awaiting the cross-shard combine — what a
+    deferred-combine ``pqs_dot`` holds while the exchange is in flight.
+    """
+    k = prods.shape[-1]
+    if k % k_shards:
+        raise ValueError(f"K={k} not divisible by k_shards={k_shards}")
+    sh = prods.reshape(*prods.shape[:-1], k_shards, k // k_shards)
+    return accumulate(sh, acc_bits, policy, k_tile, rounds)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("acc_bits", "policy", "k_shards", "k_tile", "rounds"),
+)
 def kshard_accumulate(
     prods: jax.Array,
     acc_bits: int,
@@ -170,20 +198,17 @@ def kshard_accumulate(
     """Hierarchical K-sharded accumulation — the jnp oracle of the
     K-sharded ``pqs_dot`` path.
 
-    ``prods`` is (..., K) with K divisible by ``k_shards``: each
-    contiguous K/k_shards slice accumulates independently under
-    ``policy`` (exactly ``accumulate`` on the slice — the same order a
-    shard's kernel realizes on its local K), and the per-shard partials
-    merge small-to-large through ``sorted_accum.tree_combine``. Returns
+    Phase 1 (``kshard_partials``) accumulates each contiguous K/k_shards
+    slice independently under ``policy``; phase 2 merges the per-shard
+    registers up the shared static combine tree
+    (``sorted_accum.tree_combine`` — the same ``combine_schedule`` the
+    mesh realizes with ppermute exchanges). Returns
     ``(value, n_combine_overflows)`` where the second output counts, per
     dot, the combine steps whose exact pairwise sum left the acc_bits
-    range (see ``tree_combine``).
+    range (see ``tree_combine``; for ``wide`` it counts int32 carrier
+    wraps instead — zero in every valid regime).
     """
-    k = prods.shape[-1]
-    if k % k_shards:
-        raise ValueError(f"K={k} not divisible by k_shards={k_shards}")
-    sh = prods.reshape(*prods.shape[:-1], k_shards, k // k_shards)
-    parts = accumulate(sh, acc_bits, policy, k_tile, rounds)
+    parts = kshard_partials(prods, acc_bits, policy, k_shards, k_tile, rounds)
     return tree_combine(parts, acc_bits, policy)
 
 

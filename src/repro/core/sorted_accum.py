@@ -143,35 +143,109 @@ def monotone_accumulate(
     return acc, ovf
 
 
+def combine_schedule(k_shards: int) -> list[tuple[tuple[int, int], ...]]:
+    """Static butterfly exchange schedule of the K-shard combine tree.
+
+    Level ``l`` pairs member ``i`` with partner ``i XOR 2**l``; the
+    return value is a list of ``log2(k_shards)`` levels, each a tuple of
+    ``(source, destination)`` permutation pairs in the exact form
+    ``jax.lax.ppermute`` takes. Executing the schedule — every member
+    merging its register with the exchanged partner value through
+    ``combine_step`` — leaves every member holding the root of the SAME
+    balanced combine tree ``tree_combine`` computes locally: level ``l``
+    merges adjacent index blocks of size ``2**l``.
+
+    The schedule is value-independent by construction: interconnect
+    routing cannot depend on data, so the tree pairs adjacent *shard
+    indices* (a per-output-element magnitude ranking would need a
+    different route per (m, n) element, which no static collective can
+    express). This is THE pairing rule of the K-sharded combine — the
+    jnp oracle, the single-device hierarchy, and the mesh exchange all
+    realize this one schedule, which keeps the three bit-identical.
+    """
+    if k_shards < 1 or k_shards & (k_shards - 1):
+        raise ValueError(
+            f"combine_schedule needs a power-of-two shard count, got "
+            f"{k_shards}"
+        )
+    return [
+        tuple((i, i ^ (1 << level)) for i in range(k_shards))
+        for level in range((k_shards - 1).bit_length())
+    ]
+
+
+def combine_step(
+    a: jax.Array, b: jax.Array, acc_bits: int, policy: str = "clip"
+) -> tuple[jax.Array, jax.Array]:
+    """Merge two partial-sum registers under the policy's register rule.
+
+    One combine-tree step: saturating add for the saturating policies
+    (``clip`` and every sorted variant), two's-complement wraparound at
+    ``acc_bits`` for ``wrap``, exact add for ``wide``. Commutative for
+    every policy (the rules post-process the exact pairwise sum), so the
+    two partners of a pairwise exchange compute identical registers.
+
+    Returns ``(merged, hit)``. For the narrow policies ``hit`` flags the
+    *exact* pairwise sum leaving the acc_bits range (``wrap`` wraps and
+    still counts). For ``wide`` the register is the int32 carrier itself,
+    so ``hit`` instead flags a silent carrier wrap — same-sign operands
+    whose two's-complement sum flipped sign — which is zero in every
+    valid regime (int8 products, K <= 2**17; see
+    ``monotone_accumulate``) and nonzero exactly when adversarial
+    near-2**31 partials overflowed the "exact" add.
+    """
+    if acc_bits > 30:
+        raise ValueError("acc_bits > 30 would overflow the int32 carrier")
+    qmin, qmax = qrange(acc_bits)
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    exact = a + b
+    if policy == "wide":
+        same_sign = (a >= 0) == (b >= 0)
+        wrapped = jnp.logical_and(same_sign, (exact >= 0) != (a >= 0))
+        return exact, wrapped
+    hit = jnp.logical_or(exact > qmax, exact < qmin)
+    if policy == "wrap":
+        span = jnp.int32(2**acc_bits)
+        merged = jnp.mod(exact - qmin, span) + qmin
+    else:
+        merged = jnp.clip(exact, qmin, qmax)
+    return merged, hit
+
+
 def tree_combine(
     partials: jax.Array, acc_bits: int, policy: str = "clip"
 ) -> tuple[jax.Array, jax.Array]:
-    """Merge per-K-shard partial sums small-to-large up a combine tree.
+    """Merge per-K-shard partial sums up the static combine tree.
 
     ``partials`` is (..., S): element s is the policy-accumulated partial
-    of K shard s. At every tree level the live values are ranked by
-    magnitude (|value| ascending, stable ties — zeros and small residuals
-    first) and adjacent ranks merge pairwise under the policy's register
-    rule: saturating add for the saturating policies (``clip`` and every
-    sorted variant), two's-complement wraparound for ``wrap``, exact add
-    for ``wide``. Merging small-to-large keeps the running magnitudes as
-    small as the partials allow — the tree-level analogue of the paper's
-    sorted accumulation (A2Q-style per-partial-sum reasoning: each merge
-    is safe iff its own pairwise sum fits the register).
+    of K shard s. Level ``l`` merges adjacent index pairs of the
+    surviving registers through ``combine_step`` — exactly the per-member
+    result of executing ``combine_schedule(S)`` with pairwise exchanges,
+    so the local walk here and the mesh ``ppermute`` butterfly are the
+    same tree by construction (A2Q-style per-partial-sum reasoning: each
+    merge is individually safe iff its own pairwise sum fits the
+    register, so the schedule is semantics, not an implementation
+    detail).
 
     Returns ``(value, n_overflow_steps)``: the combined (...,) int32
     results and a per-dot int32 count of combine steps whose *exact*
-    pairwise sum left the acc_bits range (always 0 for ``wide`` — its
-    register is wide by definition; ``wrap`` wraps and still counts). S
-    is padded up to a power of two with zeros, which rank first and add
-    nothing, so any shard count is exact.
+    pairwise sum left the acc_bits range (``wrap`` wraps and still
+    counts). For ``wide`` the count flags int32 *carrier* wraps instead
+    (see ``combine_step``): zero in every valid regime, and the guard —
+    sibling of ``monotone_accumulate``'s static ``acc_bits`` check —
+    that a combine of S near-2**31 same-sign partials can no longer wrap
+    silently. S is padded up to a power of two with zeros, which are
+    additively inert in every rule, so any shard count is exact.
 
     This is THE cross-shard rule of the K-sharded ``pqs_dot`` path: the
-    jnp oracle (``overflow.kshard_accumulate``) and the mesh execution
-    (``pqs_dot(..., k_axis=...)``) both call it, so the combine has a
-    single definition and the two are bit-identical.
+    jnp oracle (``overflow.kshard_accumulate``), the single-device
+    ``k_shards=`` hierarchy, and the mesh execution
+    (``pqs_dot(..., k_axis=...)``) all realize it, so the combine has a
+    single definition and the three are bit-identical.
     """
-    qmin, qmax = qrange(acc_bits)
+    if acc_bits > 30:
+        raise ValueError("acc_bits > 30 would overflow the int32 carrier")
     s = partials.shape[-1]
     sp = 1 if s <= 1 else 1 << (s - 1).bit_length()
     vals = partials.astype(jnp.int32)
@@ -180,19 +254,10 @@ def tree_combine(
         vals = jnp.pad(vals, widths)
     novf = jnp.zeros(vals.shape[:-1], jnp.int32)
     while vals.shape[-1] > 1:
-        rank = jnp.argsort(jnp.abs(vals), axis=-1)  # stable: ties by shard
-        vals = jnp.take_along_axis(vals, rank, axis=-1)
-        exact = vals[..., 0::2] + vals[..., 1::2]
-        if policy == "wide":
-            vals = exact
-            continue
-        hit = jnp.logical_or(exact > qmax, exact < qmin)
+        vals, hit = combine_step(
+            vals[..., 0::2], vals[..., 1::2], acc_bits, policy
+        )
         novf = novf + jnp.sum(hit, axis=-1).astype(jnp.int32)
-        if policy == "wrap":
-            span = jnp.int32(2**acc_bits)
-            vals = jnp.mod(exact - qmin, span) + qmin
-        else:
-            vals = jnp.clip(exact, qmin, qmax)
     return vals[..., 0], novf
 
 

@@ -420,11 +420,12 @@ def partial_policy_matmul(
     accumulated by the UNCHANGED local kernel body (``policy_matmul``)
     over its k_local columns only. The partials are "unsaturated"
     *across* shards — no cross-shard combine or re-clamp happens here;
-    merging them (in magnitude order, with stepwise saturation, counting
-    combine-step overflows) is ``core.sorted_accum.tree_combine``'s job
-    in the dispatch layer. Each shard's K footprint is K/k_shards, which
-    is what carries the compiled sort kernels past ``MAX_STREAM_K``
-    total K.
+    merging them (up the static combine tree, with stepwise saturation,
+    counting combine-step overflows) is the dispatch layer's job through
+    ``core.sorted_accum.tree_combine`` / ``combine_schedule`` — the same
+    schedule whether combined locally or as pairwise mesh exchanges.
+    Each shard's K footprint is K/k_shards, which is what carries the
+    compiled sort kernels past ``MAX_STREAM_K`` total K.
     """
     if k_shards < 1 or x.shape[1] % k_shards:
         raise ValueError(

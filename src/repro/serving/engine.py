@@ -108,9 +108,19 @@ class CensusWatch:
     accumulator, ``mode="widen"`` raises its ``acc_bits`` to
     ``widen_to``. Either way the rest of the model keeps its narrow
     policies, a structured event is appended to ``engine.events``, and
-    ``stats["census_degrades"]`` counts. Degradation is monotone — a
-    site never narrows back within an engine's lifetime (re-calibration
-    is the undo, not a rate dip).
+    ``stats["census_degrades"]`` counts.
+
+    By default degradation is monotone — a site never narrows back
+    within an engine's lifetime (re-calibration is the undo, not a rate
+    dip). ``undegrade_after=N`` makes it reversible: a degraded site
+    whose census stays clean (rate <= threshold over >= min_dots dots)
+    for N *consecutive* windows drops its overrides and returns to the
+    engine-wide narrow config — logged as a ``census_undegrade`` event,
+    counted in ``stats["census_undegrades"]``, and, like the overrides
+    themselves, surviving snapshot/restore (a snapshot taken after the
+    removal never resurrects the override). A dirty window resets the
+    streak; windows with fewer than ``min_dots`` observed dots neither
+    advance nor reset it.
     """
 
     threshold: float = 0.01
@@ -118,6 +128,7 @@ class CensusWatch:
     mode: str = "wide"  # "wide" (policy swap) | "widen" (acc_bits raise)
     widen_to: int = 30
     min_dots: int = 1
+    undegrade_after: Optional[int] = None  # N clean windows to re-narrow
 
 
 class ServingEngine:
@@ -250,6 +261,8 @@ class ServingEngine:
         )
         self._census_steps = 0
         self._degraded: set[str] = set()
+        # consecutive clean windows per degraded site (un-degrade path)
+        self._clean_windows: dict[str, int] = {}
         self.last_census_rates: dict[str, float] = {}
         # device-step accounting: admission latency is prefill_steps per
         # cohort (1 on the batched path, max prompt length - 1 on the
@@ -265,6 +278,7 @@ class ServingEngine:
             "pages_in_use": 0,
             "pages_peak": 0,
             "census_degrades": 0,
+            "census_undegrades": 0,
         }
 
         self._build_step_fns()
@@ -650,11 +664,16 @@ class ServingEngine:
         """Window check: hot-swap any site saturating its accumulator.
 
         Drains the per-site overflow census every ``window`` decode
-        steps. A site over threshold degrades exactly once (monotone):
-        its policy flips to ``wide`` (or its ``acc_bits`` widens), the
-        step functions re-jit against the new config, and a structured
-        event is logged. Degraded-to-wide sites keep reporting dots with
-        zero events, so the next window observably reads rate 0.0.
+        steps. A site over threshold degrades exactly once: its policy
+        flips to ``wide`` (or its ``acc_bits`` widens), the step
+        functions re-jit against the new config, and a structured event
+        is logged. Degraded-to-wide sites keep reporting dots with zero
+        events, so the next window observably reads rate 0.0 — and,
+        when ``undegrade_after`` is set, those clean windows accumulate
+        toward the reverse transition: after N consecutive clean
+        windows the site's overrides are dropped (``census_undegrade``
+        event) and it re-narrows to the engine-wide config, back under
+        full watch (it can re-degrade if the workload is still hot).
 
         Certified sites (``int_lin.certificate``) never appear here at
         all: `dispatch.qtensor_dot` dispatches them census-free, so the
@@ -671,6 +690,41 @@ class ServingEngine:
             s: (e / d if d else 0.0) for s, (d, e) in totals.items()
         }
         changed = False
+        # reverse transition first: a site whose census stayed clean for
+        # N consecutive windows drops its overrides and re-narrows
+        after = self.census_watch.undegrade_after
+        if after is not None:
+            for site in sorted(self._degraded):
+                dots, events = totals.get(site, (0, 0))
+                if dots < self.census_watch.min_dots:
+                    continue  # no evidence either way: freeze the streak
+                rate = events / dots
+                if rate > self.census_watch.threshold:
+                    self._clean_windows[site] = 0
+                    continue
+                streak = self._clean_windows.get(site, 0) + 1
+                self._clean_windows[site] = streak
+                if streak < after:
+                    continue
+                self.int_lin = self.int_lin.without_site(site)
+                self._degraded.discard(site)
+                self._clean_windows.pop(site, None)
+                self.stats["census_undegrades"] += 1
+                changed = True
+                event = {
+                    "event": "census_undegrade",
+                    "site": site,
+                    "clean_windows": streak,
+                    "rate": rate,
+                    "dots": dots,
+                    "step": self._step_idx,
+                }
+                self.events.append(event)
+                logger.info(
+                    "census_undegrade site=%s after %d clean windows "
+                    "(rate=%.4f over %d dots) at step %d",
+                    site, streak, rate, dots, self._step_idx,
+                )
         for site, (dots, events) in sorted(totals.items()):
             if dots < self.census_watch.min_dots or site in self._degraded:
                 continue
@@ -775,6 +829,7 @@ class ServingEngine:
             "stats": dict(self.stats),
             "done_uids": set(self._done_uids),
             "degraded": set(self._degraded),
+            "clean_windows": dict(self._clean_windows),
             "site_policies": self.int_lin.site_policies
             if self.int_lin is not None
             else (),
@@ -893,8 +948,10 @@ class ServingEngine:
             req._rng = np.random.default_rng((self._seed, req.uid))
             self.queue.append(req)
         # census degradation state: adopt the snapshot's overrides on
-        # top of any the engine already applied (monotone union — never
-        # narrow a site back during recovery)
+        # top of any the engine already applied (union — recovery never
+        # narrows a site the snapshot or the engine holds degraded; a
+        # site un-degraded *before* the snapshot appears in neither, so
+        # its removal survives the restore)
         if self.int_lin is not None:
             cfg = self.int_lin
             for site, pol in meta["site_policies"]:
@@ -907,6 +964,13 @@ class ServingEngine:
                 self.int_lin = cfg
                 self._build_step_fns()
             self._degraded |= set(meta["degraded"])
+            # clean-window streaks resume from the snapshot, pruned to
+            # sites still degraded after the union
+            cw = dict(meta.get("clean_windows", ()))
+            cw.update(self._clean_windows)
+            self._clean_windows = {
+                s: n for s, n in cw.items() if s in self._degraded
+            }
         self._census_steps = 0
         if self._census is not None:
             self._census.drain()

@@ -8,11 +8,17 @@ kernel autotuner is process-global) behind a single step loop:
   the fleet keeps in flight (engine queue + slots) for that model at
   once. Excess submissions wait in the fleet backlog; no engine's queue
   can be starved or flooded by another model's traffic.
-- **Deadlines + bounded retry.** A request can carry a deadline (fleet
-  steps after forwarding). Past it, the fleet cancels it out of the
-  engine and re-queues the *prompt* with exponential backoff; after
+- **Deadlines + bounded retry.** A request can carry a deadline in
+  fleet steps after forwarding (``deadline=``), wall-clock seconds
+  after forwarding (``deadline_s=``), or both — a slow or stalled
+  engine step cannot stretch a seconds deadline the way it stretches a
+  step count. Past either limit, the fleet cancels the request out of
+  the engine and re-queues the *prompt* with exponential backoff; after
   ``max_retries`` the request is marked ``failed`` (never silently
   dropped — the caller always observes done or failed).
+  ``stats["deadline_cancels"]`` counts all cancels, with the per-unit
+  breakdown in ``stats["deadline_cancels_steps"]`` /
+  ``stats["deadline_cancels_wall"]``.
 - **Snapshots.** Every ``snapshot_every`` fleet steps each engine's
   serving state (page pools, page tables, slot bindings, RNG streams,
   pending queue — see ``ServingEngine.snapshot``) is persisted through
@@ -44,21 +50,26 @@ class ServingFleet:
         snapshot_every: int = 0,
         keep: int = 3,
         default_deadline: Optional[int] = None,
+        default_deadline_s: Optional[float] = None,
         max_retries: int = 2,
         backoff_steps: int = 4,
+        clock=time.monotonic,
     ):
         self.snapshot_dir = snapshot_dir
         self.snapshot_every = snapshot_every
         self.keep = keep
         self.default_deadline = default_deadline
+        self.default_deadline_s = default_deadline_s
         self.max_retries = max_retries
         self.backoff_steps = backoff_steps
+        self._clock = clock  # injectable for deterministic deadline tests
         self.engines: dict[str, ServingEngine] = {}
         self.quotas: dict[str, Optional[int]] = {}
         self._ckpt: dict[str, Any] = {}  # name -> AsyncCheckpointer
         self._last_snap: dict[str, dict] = {}  # name -> in-memory snapshot
         # backlog entry: {"req", "retries", "not_before", "deadline",
-        # "forwarded_at"}; forwarded entries stay tracked until done
+        # "deadline_s", "forwarded_at", "forwarded_time"}; forwarded
+        # entries stay tracked until done
         self._backlog: dict[str, list[dict]] = {}
         self._inflight: dict[str, list[dict]] = {}
         self._step_idx = 0
@@ -69,6 +80,8 @@ class ServingFleet:
             "recoveries": 0,
             "retries": 0,
             "deadline_cancels": 0,
+            "deadline_cancels_steps": 0,
+            "deadline_cancels_wall": 0,
             "failed_requests": 0,
             "recovery_s": 0.0,
         }
@@ -102,9 +115,19 @@ class ServingFleet:
     # -- request lifecycle ----------------------------------------------------
 
     def submit(
-        self, name: str, req: Request, deadline: Optional[int] = None
+        self,
+        name: str,
+        req: Request,
+        deadline: Optional[int] = None,
+        deadline_s: Optional[float] = None,
     ) -> None:
-        """Queue ``req`` for engine ``name``; forwarded under its quota."""
+        """Queue ``req`` for engine ``name``; forwarded under its quota.
+
+        ``deadline`` counts fleet steps after forwarding; ``deadline_s``
+        counts wall-clock seconds after forwarding. Either, both, or
+        neither may be set (falling back to the fleet defaults) —
+        whichever limit trips first cancels the attempt.
+        """
         if name not in self.engines:
             raise KeyError(f"unknown engine {name!r}")
         self._backlog[name].append(
@@ -115,7 +138,11 @@ class ServingFleet:
                 "deadline": deadline
                 if deadline is not None
                 else self.default_deadline,
+                "deadline_s": deadline_s
+                if deadline_s is not None
+                else self.default_deadline_s,
                 "forwarded_at": None,
+                "forwarded_time": None,
             }
         )
 
@@ -137,6 +164,7 @@ class ServingFleet:
             req.done = False
             eng.submit(req)
             entry["forwarded_at"] = self._step_idx
+            entry["forwarded_time"] = self._clock()
             inflight.append(entry)
             backlog.pop(i)
         # backlog order is preserved: entries only leave when forwarded
@@ -147,21 +175,33 @@ class ServingFleet:
 
     def _deadlines(self, name: str) -> None:
         eng = self.engines[name]
+        now = self._clock()
         keep = []
         for entry in self._inflight[name]:
             req: Request = entry["req"]
             dl = entry["deadline"]
-            if (
-                dl is None
-                or req.done
-                or self._step_idx - entry["forwarded_at"] <= dl
-            ):
+            dls = entry.get("deadline_s")
+            over_steps = (
+                dl is not None
+                and self._step_idx - entry["forwarded_at"] > dl
+            )
+            over_wall = (
+                dls is not None
+                and entry.get("forwarded_time") is not None
+                and now - entry["forwarded_time"] > dls
+            )
+            if req.done or not (over_steps or over_wall):
                 keep.append(entry)
                 continue
             eng.cancel(req.uid)
+            # step deadlines take attribution precedence when both trip
+            # in the same sweep; the total always counts each cancel once
+            unit = "steps" if over_steps else "wall"
             self.stats["deadline_cancels"] += 1
+            self.stats[f"deadline_cancels_{unit}"] += 1
             entry["retries"] += 1
             entry["forwarded_at"] = None
+            entry["forwarded_time"] = None
             if entry["retries"] > self.max_retries:
                 req.failed = True
                 self.stats["failed_requests"] += 1
@@ -185,6 +225,7 @@ class ServingFleet:
                     "engine": name,
                     "uid": req.uid,
                     "retry": entry["retries"],
+                    "unit": unit,
                     "not_before": entry["not_before"],
                     "step": self._step_idx,
                 }
@@ -242,6 +283,7 @@ class ServingFleet:
             for entry in self._inflight[name]:
                 if not entry["req"].done:
                     entry["forwarded_at"] = self._step_idx
+                    entry["forwarded_time"] = self._clock()
         dt = time.perf_counter() - t0
         self.stats["recoveries"] += 1
         self.stats["recovery_s"] += dt

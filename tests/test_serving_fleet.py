@@ -274,6 +274,125 @@ def test_fleet_deadline_retry_and_failure(smoke_model):
     assert doomed.failed and not doomed.done
     assert fleet2.stats["failed_requests"] == 1
     assert any(e["event"] == "request_failed" for e in fleet2.events)
+    # step-only deadlines never count against the wall-clock bucket
+    assert fleet2.stats["deadline_cancels_wall"] == 0
+    assert (
+        fleet2.stats["deadline_cancels_steps"]
+        == fleet2.stats["deadline_cancels"]
+    )
+
+
+def test_fleet_wall_clock_deadline_cancels_and_retries(smoke_model):
+    """A wall-clock-seconds deadline trips while the request queues
+    behind a slow engine even though no step deadline is set; the cancel
+    is attributed to the ``wall`` bucket and the retry still lands."""
+    _, model, params = smoke_model
+    t = {"now": 0.0}  # injected clock: the test owns time
+
+    long_req = Request(uid=1, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=12)
+    short = Request(uid=2, prompt=np.asarray([4, 5], np.int32),
+                    max_new_tokens=2)
+    eng = ServingEngine(model, params, num_slots=1, max_len=32)
+    fleet = ServingFleet(
+        max_retries=3, backoff_steps=2, clock=lambda: t["now"]
+    )
+    fleet.add_engine("m", eng)
+    fleet.submit("m", long_req)  # no deadline at all: immune
+    fleet.submit("m", short, deadline_s=1.5)  # seconds only, no steps
+    for _ in range(300):
+        if not long_req.done:
+            t["now"] += 1.0  # each contended step "takes" one second
+        if fleet.step() == 0:
+            break
+    assert long_req.done and short.done and not short.failed
+    assert fleet.stats["deadline_cancels"] >= 1
+    assert fleet.stats["deadline_cancels_wall"] >= 1
+    assert fleet.stats["deadline_cancels_steps"] == 0
+    retries = [e for e in fleet.events if e["event"] == "deadline_retry"]
+    assert retries and all(e["unit"] == "wall" for e in retries)
+
+    # both limits tripping in the same sweep attribute to "steps"
+    # (precedence), and the total still counts the cancel exactly once
+    blocker = Request(uid=3, prompt=np.asarray([1, 2, 3], np.int32),
+                      max_new_tokens=12)
+    both = Request(uid=4, prompt=np.asarray([4, 5], np.int32),
+                   max_new_tokens=2)
+    eng2 = ServingEngine(model, params, num_slots=1, max_len=32)
+    fleet2 = ServingFleet(
+        max_retries=0, backoff_steps=1, clock=lambda: t["now"]
+    )
+    fleet2.add_engine("m", eng2)
+    fleet2.submit("m", blocker)
+    fleet2.submit("m", both, deadline=0, deadline_s=0.5)
+    for _ in range(300):
+        t["now"] += 1.0
+        if fleet2.step() == 0:
+            break
+    assert blocker.done and both.failed
+    assert fleet2.stats["deadline_cancels"] == 1
+    assert fleet2.stats["deadline_cancels_steps"] == 1
+    assert fleet2.stats["deadline_cancels_wall"] == 0
+
+
+def test_census_undegrade_after_clean_windows(smoke_model, smoke_qparams):
+    """``undegrade_after=N``: a degraded site whose census stays clean
+    for N consecutive windows drops its overrides and re-narrows, with
+    dirty windows resetting the streak and low-traffic windows freezing
+    it; the removal survives snapshot/restore."""
+    _, model, _ = smoke_model
+    il = dispatch.IntegerLinConfig(
+        policy="sorted_tiled_seq", acc_bits=17, k_tile=64, backend="jnp"
+    )
+    watch = CensusWatch(
+        threshold=0.01, window=1, min_dots=10, undegrade_after=2
+    )
+    eng = ServingEngine(
+        model, smoke_qparams, num_slots=2, max_len=32,
+        int_lin=il, census_watch=watch,
+    )
+    # hot window: w_out saturates and degrades to wide
+    eng._census.observe("w_out", 1000, 100)
+    eng._check_census()
+    assert eng._degraded == {"w_out"}
+    assert eng.int_lin.policy_for("w_out") == "wide"
+
+    # clean window: streak advances but N=2 not reached — still degraded
+    eng._census.observe("w_out", 1000, 0)
+    eng._check_census()
+    assert eng._degraded == {"w_out"}
+    assert eng._clean_windows["w_out"] == 1
+
+    # low-traffic window (< min_dots): no evidence — streak frozen
+    eng._census.observe("w_out", watch.min_dots - 1, 0)
+    eng._check_census()
+    assert eng._clean_windows["w_out"] == 1
+
+    # dirty window: streak resets, the site stays degraded
+    eng._census.observe("w_out", 1000, 500)
+    eng._check_census()
+    assert eng._degraded == {"w_out"}
+    assert eng._clean_windows["w_out"] == 0
+
+    # N consecutive clean windows: the reverse transition fires
+    for _ in range(2):
+        eng._census.observe("w_out", 1000, 0)
+        eng._check_census()
+    assert eng._degraded == set()
+    assert eng.stats["census_undegrades"] == 1
+    assert eng.stats["census_degrades"] == 1
+    (ev,) = [e for e in eng.events if e["event"] == "census_undegrade"]
+    assert ev["site"] == "w_out" and ev["clean_windows"] == 2
+    # overrides dropped: back under the engine-wide narrow config
+    assert eng.int_lin.policy_for("w_out") == "sorted_tiled_seq"
+    assert ("w_out", "wide") not in eng.int_lin.site_policies
+
+    # a snapshot taken after the un-degrade carries no override, so
+    # restoring it never resurrects the wide swap
+    snap = eng.snapshot()
+    eng.restore(snap)
+    assert eng._degraded == set()
+    assert eng.int_lin.policy_for("w_out") == "sorted_tiled_seq"
 
 
 @pytest.mark.skipif(

@@ -230,6 +230,139 @@ def test_kshard_mesh_long_k_nm_storage():
         assert int(getattr(cr, field)) == int(getattr(co, field)), field
 
 
+@pytest.mark.parametrize("policy", POLICIES)
+def test_kshard_mesh_four_way_butterfly(policy):
+    """S=4: the exchange really is a multi-level butterfly (two ppermute
+    rounds), still bit-identical to the single-device hierarchy with the
+    exact census decomposition."""
+    mesh = _mesh3(1, 2, 4)
+    x, w = _xw(3, 448, 4, seed=51)
+    kw = dict(acc_bits=14, policy=policy, k_tile=32, backend="jnp",
+              with_census=True)
+    ref, cr = pqs_dot(x, w, k_shards=4, **kw)
+    out, co = pqs_dot(x, w, mesh=mesh, k_axis="k", **kw)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out),
+                                  err_msg=policy)
+    for field in CENSUS_FIELDS:
+        assert int(getattr(cr, field)) == int(getattr(co, field)), (
+            policy, field)
+
+
+@pytest.mark.parametrize("policy", ("wide", "clip", "sorted_tiled_seq"))
+def test_defer_combine_matches_eager(policy):
+    """defer_combine=True: the PendingCombine's .combine() reproduces
+    the eager K-sharded result exactly — census included — on both the
+    mesh-less hierarchy and the mesh exchange, in and out of jit."""
+    mesh = _mesh3(1, 2, 4)
+    x, w = _xw(3, 448, 4, seed=61)
+    kw = dict(acc_bits=14, policy=policy, k_tile=32, backend="jnp",
+              with_census=True)
+    ref, cr = pqs_dot(x, w, k_shards=4, **kw)
+
+    for extra in (dict(k_shards=4), dict(mesh=mesh, k_axis="k")):
+        out, co = pqs_dot(x, w, defer_combine=True, **extra, **kw).combine()
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out),
+                                      err_msg=f"{policy} {extra.keys()}")
+        for field in CENSUS_FIELDS:
+            assert int(getattr(cr, field)) == int(getattr(co, field)), (
+                policy, field)
+
+    # both phases trace into one jitted computation — the overlap form
+    f = jax.jit(
+        lambda a, b: pqs_dot(
+            a, b, mesh=mesh, k_axis="k", defer_combine=True,
+            acc_bits=14, policy=policy, k_tile=32, backend="jnp",
+        ).combine()
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(f(x, w)))
+
+
+def test_defer_combine_needs_k_sharding():
+    x, w = _xw(2, 64, 3, seed=1)
+    with pytest.raises(ValueError, match="K-sharded"):
+        pqs_dot(x, w, defer_combine=True, backend="jnp")
+
+
+def test_overlap_combine_engine_bit_identical():
+    """IntegerLinConfig(overlap_combine=True): the engine's K-sharded
+    decode routes through the deferred two-phase combine and stays
+    bit-identical to the eager path."""
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = quantize_tree(params, bits=8, min_size=1 << 10, min_dim=16)
+
+    def run(overlap):
+        il = IntegerLinConfig(policy="sorted_tiled_seq", acc_bits=24,
+                              k_tile=64, backend="jnp", k_shards=2,
+                              k_axis="k", k_shard_min_k=64,
+                              overlap_combine=overlap)
+        rng = np.random.default_rng(4)
+        reqs = [
+            Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 5).astype(np.int32),
+                    max_new_tokens=3)
+            for i in range(3)
+        ]
+        eng = ServingEngine(model, qparams, num_slots=2, max_len=16,
+                            int_lin=il, mesh=_mesh3(2, 2, 2))
+        eng.drain(reqs)
+        return [r.output for r in reqs]
+
+    assert run(False) == run(True)
+
+
+def test_cache_pool_sharded_decode_bit_identical():
+    """cache_shardings(serve_mode=True) on a real 8-device mesh: the
+    paged KV pool page-sharded over the data axis (each member owns a
+    page shard) decodes bit-identically to serve_mode=False's
+    replicated pool under the same mesh placement. serve_mode only
+    toggles the pool-axis spec, and that axis is pure indirection
+    (gather/scatter through the page table, no arithmetic) — so page
+    sharding must never change a bit. (The head_dim "model" entry,
+    common to both modes, is excluded from the contract: re-tiling a
+    float contraction may legally reassociate.)"""
+    from repro.configs import get_config
+    from repro.launch.sharding import cache_shardings, place_tree
+    from repro.models.model import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = _mesh(4, 2)
+
+    def run(serve_mode):
+        rng = np.random.default_rng(3)
+        reqs = [
+            Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 4).astype(np.int32),
+                    max_new_tokens=3)
+            for i in range(3)
+        ]
+        eng = ServingEngine(model, params, num_slots=2, max_len=16,
+                            page_size=8, num_pages=8)
+        sh = cache_shardings(mesh, eng.caches, serve_mode=serve_mode)
+        specs = [
+            s.spec for s in jax.tree_util.tree_leaves(
+                sh, is_leaf=lambda l: hasattr(l, "spec"))
+        ]
+        if serve_mode:  # the pool axis really is split over "data"
+            assert any("data" in str(sp) for sp in specs), (
+                "serve_mode placed no pool shard")
+        else:
+            assert not any("data" in str(sp) for sp in specs)
+        eng.caches = place_tree(eng.caches, sh)
+        eng.drain(reqs)
+        return [list(r.output) for r in reqs]
+
+    assert run(False) == run(True)
+
+
 def test_kshard_mesh_validation():
     x, w = _xw(2, 64, 3, seed=1)
     mesh = _mesh(4, 2)

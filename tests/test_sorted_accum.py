@@ -15,11 +15,14 @@ from repro.core.overflow import transient_survivors
 from repro.core.quant import qrange
 from repro.core.sorted_accum import (
     alg1_sorted_dot,
+    combine_schedule,
+    combine_step,
     monotone_accumulate,
     pairwise_round,
     sorted_order,
     tiled_seq_order,
     tiled_sorted_order,
+    tree_combine,
 )
 
 
@@ -132,6 +135,100 @@ def test_single_round_resolves_most_transients(rng):
     srt = int(transient_survivors(prods, acc_bits, policy="sorted", rounds=1))
     assert nat > 0, "test setup should produce transient overflows"
     assert srt <= nat * 0.05  # >=95% resolved by a single round
+
+
+def test_combine_schedule_is_log2_butterfly():
+    """log2(S) levels of (i, i^2^l) pairs, ppermute-shaped; non-power-
+    of-two shard counts are rejected (the mesh path falls back to
+    gather + tree_combine for those)."""
+    sched = combine_schedule(8)
+    assert len(sched) == 3  # log2(8), not S-1: the interconnect win
+    for level, perm in enumerate(sched):
+        assert sorted(perm) == sorted(
+            (i, i ^ (1 << level)) for i in range(8)
+        )
+        # a valid ppermute permutation: every member sends and receives
+        assert sorted(s for s, _ in perm) == list(range(8))
+        assert sorted(d for _, d in perm) == list(range(8))
+    assert combine_schedule(1) == []
+    for bad in (0, 3, 6, 12):
+        with pytest.raises(ValueError):
+            combine_schedule(bad)
+
+
+def test_tree_combine_matches_schedule_walk(rng):
+    """tree_combine's local halving walk IS combine_schedule executed
+    member-wise: simulating the ppermute exchanges reproduces the same
+    register on every member and the same per-level hits."""
+    p = jnp.asarray(rng.integers(-(2**14), 2**14, (5, 8)), jnp.int32)
+    out, novf = tree_combine(p, acc_bits=16, policy="clip")
+    vals = [p[..., i] for i in range(8)]
+    hits = jnp.zeros(p.shape[:-1], jnp.int32)
+    for level, perm in enumerate(combine_schedule(8)):
+        recv = {dst: vals[src] for src, dst in perm}
+        merged = []
+        for i in range(8):
+            m, h = combine_step(vals[i], recv[i], 16, "clip")
+            merged.append(m)
+            if i % (1 << (level + 1)) == 0:  # count each merge once
+                hits = hits + h.astype(jnp.int32)
+        vals = merged
+    for i in range(8):  # result replicated across all members
+        np.testing.assert_array_equal(np.asarray(vals[i]), np.asarray(out))
+    np.testing.assert_array_equal(np.asarray(hits), np.asarray(novf))
+
+
+def test_tree_combine_carrier_guard_rejects_wide_carrier():
+    """Satellite of monotone_accumulate's acc_bits>30 raise: the combine
+    carrier is int32 too, so the same static guard applies."""
+    p = jnp.ones((2, 4), jnp.int32)
+    for bad_bits in (31, 32, 40):
+        with pytest.raises(ValueError, match="int32 carrier"):
+            tree_combine(p, acc_bits=bad_bits)
+        with pytest.raises(ValueError, match="int32 carrier"):
+            combine_step(p[..., 0], p[..., 1], acc_bits=bad_bits)
+    with pytest.raises(ValueError, match="int32 carrier"):
+        monotone_accumulate(p, acc_bits=31)
+
+
+def test_tree_combine_wide_flags_carrier_wrap():
+    """The bug this PR flushed out: adversarial same-sign near-2**31
+    partials silently wrapped the int32 carrier under ``wide`` and the
+    census read zero. Now the wrap is detected and counted, while every
+    valid-regime combine still reports zero."""
+    big = np.int32(2**30 + 11)  # 2 of these overflow int32
+    p = jnp.asarray([[big, big, -big, jnp.int32(-5)]], jnp.int32)
+    out, novf = tree_combine(p, acc_bits=30, policy="wide")
+    assert int(novf[0]) > 0  # the (big, big) merge wrapped the carrier
+    # negative-side wrap detected too
+    q = jnp.asarray([[-big, -big]], jnp.int32)
+    _, novf_n = tree_combine(q, acc_bits=30, policy="wide")
+    assert int(novf_n[0]) == 1
+    # valid regime (int8 products, K <= 2**17 per shard): always zero,
+    # even with every partial at the regime's extreme
+    ext = jnp.int32(127 * 127 * (2**17) // 4)
+    r = jnp.full((3, 4), ext, jnp.int32)
+    exact, novf_ok = tree_combine(r, acc_bits=30, policy="wide")
+    np.testing.assert_array_equal(np.asarray(exact), np.asarray(4 * ext))
+    assert int(np.asarray(novf_ok).sum()) == 0
+    # mixed-sign adds can never wrap two's complement: not flagged
+    s = jnp.asarray([[jnp.int32(2**31 - 1), jnp.int32(-1)]], jnp.int32)
+    _, novf_m = tree_combine(s, acc_bits=30, policy="wide")
+    assert int(novf_m[0]) == 0
+
+
+def test_tree_combine_pads_non_power_of_two_exactly(rng):
+    """Any shard count: zero-padding to the next power of two is
+    additively inert under every register rule."""
+    for policy in ("wide", "clip", "wrap"):
+        for s in (1, 3, 5, 6, 7):
+            p = jnp.asarray(
+                rng.integers(-(2**12), 2**12, (4, s)), jnp.int32
+            )
+            out, _ = tree_combine(p, acc_bits=16, policy=policy)
+            pad = jnp.pad(p, ((0, 0), (0, 8 - s)))
+            out8, _ = tree_combine(pad, acc_bits=16, policy=policy)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(out8))
 
 
 def test_tiled_sort_beats_natural_and_interleave_beats_seq(rng):
